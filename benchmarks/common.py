@@ -1,0 +1,38 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark module exposes ``run(quick=True) -> list[dict]`` with rows
+{"name", "us_per_call", "derived"} (plus free-form detail), and writes its
+detail JSON under reports/bench/.  ``benchmarks.run`` prints the paper-table
+CSV.  Scale note: CPU container => reduced lattice sizes and sweep budgets;
+the *claims* (collapse, exponents, tradeoffs) are what is reproduced.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports", "bench")
+
+# reduced-scale experiment defaults (quick mode)
+QUICK = dict(L=8, K=4, budget=2048, instances=3, runs=3, seed0=50)
+FULL = dict(L=12, K=6, budget=20000, instances=5, runs=5, seed0=50)
+
+
+def save_detail(name: str, payload: dict):
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    with open(os.path.join(REPORT_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def row(name: str, us: float, derived: str) -> dict:
+    return {"name": name, "us_per_call": us, "derived": derived}

@@ -1,0 +1,90 @@
+"""Figs. 4/5 — time-to-target: conservative (exact) vs overclocked (stale).
+
+The stale mode produces more sweeps per second (here: the measured
+wall-clock speedup of exchanging every S sweeps instead of every phase),
+each consuming staler boundaries; easy targets favor throughput, hard
+targets favor exactness, with a crossover in between — the paper's central
+throughput/accuracy tradeoff, with flips/s measured on this machine."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.coloring import lattice3d_coloring
+from repro.core.partition import slab_partition
+from repro.core.dsim import build_partitioned, DSIMEngine
+from repro.core.annealing import ea_schedule
+from repro.core.analysis import time_to_target
+from repro.problems.ea3d import GroundStore, establish_grounds, instance_set
+
+from .common import QUICK, FULL, save_detail, row
+
+
+def measured_rate(eng, sch, sweeps, sync):
+    st = eng.init_state(seed=0)
+    # warmup/compile
+    eng.run_recorded(st, sch, [sweeps // 4], sync_every=sync)
+    st = eng.init_state(seed=1)
+    t0 = time.perf_counter()
+    eng.run_recorded(st, sch, [sweeps], sync_every=sync)
+    dt = time.perf_counter() - t0
+    return sweeps / dt
+
+
+def run(quick: bool = True):
+    cfgv = QUICK if quick else FULL
+    L, K, budget = cfgv["L"], cfgv["K"], 2 * cfgv["budget"]
+    graphs = instance_set(L, cfgv["instances"], seed0=cfgv["seed0"])
+    store = GroundStore("reports/bench/grounds.json")
+    grounds = establish_grounds(graphs, store, sweeps=4 * budget, runs=1)
+    col = lattice3d_coloring(L)
+    sch = ea_schedule(budget)
+    pts = sorted(set(np.geomspace(4, budget, 16).astype(int)))
+    labels = slab_partition(L, K)
+
+    modes = {"conservative": "phase", "overclocked": 64}
+    data, rates = {}, {}
+    for name, sync in modes.items():
+        rhos = []
+        for gi, (g, Eg) in enumerate(zip(graphs, grounds)):
+            prob = build_partitioned(g, col, labels, K)
+            eng = DSIMEngine(prob, rng="lfsr")
+            for r in range(cfgv["runs"]):
+                st = eng.init_state(seed=11 * gi + r)
+                st, (ts, Es) = eng.run_recorded(st, sch, pts, sync_every=sync)
+                rhos.append((np.asarray(Es) - Eg) / graphs[gi].n)
+        data[name] = (np.asarray(ts), np.mean(rhos, axis=0))
+        prob = build_partitioned(graphs[0], col, labels, K)
+        eng = DSIMEngine(prob, rng="lfsr")
+        rates[name] = measured_rate(eng, sch, min(1024, budget), sync)
+
+    flips_per_sweep = graphs[0].n
+    detail = {"rates_sweeps_per_s": rates,
+              "flips_per_s": {k: v * flips_per_sweep for k, v in rates.items()},
+              "traces": {k: {"t": v[0].tolist(), "rho": v[1].tolist()}
+                         for k, v in data.items()}}
+
+    # time-to-target on the wall clock implied by measured rates
+    targets = {}
+    rhos_all = np.concatenate([v[1] for v in data.values()])
+    for frac, tag in ((0.5, "easy"), (0.12, "hard")):
+        tgt = float(np.nanmin(rhos_all)) + frac * float(np.nanmax(rhos_all))
+        tt = {}
+        for name in modes:
+            t, rho = data[name]
+            tt[name] = time_to_target(t / rates[name], rho, tgt)
+        targets[tag] = {"target_rho": tgt, **tt}
+    detail["targets"] = targets
+    save_detail("fig45_time_to_target", detail)
+
+    e = targets["easy"]
+    h = targets["hard"]
+    sp_easy = e["conservative"] / e["overclocked"] if e["overclocked"] else 0
+    sp_hard = h["conservative"] / h["overclocked"] \
+        if np.isfinite(h["overclocked"]) and h["overclocked"] else float("nan")
+    return [row("fig45_time_to_target", 1e6,
+                f"flips/s cons={detail['flips_per_s']['conservative']:.2e} "
+                f"over={detail['flips_per_s']['overclocked']:.2e} "
+                f"speedup_easy={sp_easy:.2f}x speedup_hard={sp_hard:.2f}x")]

@@ -1,0 +1,50 @@
+"""Fig. S5 — cut-edge distance distribution: distance-blind vs Potts.
+
+The Potts objective concentrates cut edges at hop distance 1 (paper: 73.1%
+vs 47.4% for METIS) and Fig. S6: solution quality is unchanged."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import ea3d
+from repro.core.coloring import lattice3d_coloring
+from repro.core.partition import greedy_partition
+from repro.core.potts_partition import potts_partition
+from repro.core.commcost import cut_distance_histogram
+from repro.core.dsim import build_partitioned, DSIMEngine
+from repro.core.annealing import ea_schedule
+
+from .common import save_detail, row
+
+
+def run(quick: bool = True):
+    L, K = (10, 4) if quick else (16, 6)
+    budget = 1024 if quick else 8192
+    g = ea3d(L, seed=0)
+    idx, w = np.asarray(g.idx), np.asarray(g.w)
+    col = lattice3d_coloring(L)
+    sch = ea_schedule(budget)
+
+    out = {}
+    for name, labels in (
+            ("metis_like", greedy_partition(idx, w, K, seed=0)),
+            ("potts", potts_partition(idx, w, K, seed=0))):
+        hist = cut_distance_histogram(idx, w, labels, K=K)
+        # Fig. S6: solution quality unchanged under the Potts objective
+        energies = []
+        for s in range(3):
+            prob = build_partitioned(g, col, labels, K)
+            eng = DSIMEngine(prob, rng="lfsr")
+            st = eng.init_state(seed=s)
+            st, (_, Es) = eng.run_recorded(st, sch, [budget], sync_every=4)
+            energies.append(float(Es[-1]))
+        out[name] = {"d1_frac": float(hist[0]), "hist": hist.tolist(),
+                     "mean_E": float(np.mean(energies))}
+    save_detail("figS5_partition", out)
+    dE = abs(out["potts"]["mean_E"] - out["metis_like"]["mean_E"])
+    rel = dE / abs(out["metis_like"]["mean_E"])
+    return [row("figS5_partition_distance", 1e6,
+                f"d1: potts={out['potts']['d1_frac']:.2f} vs "
+                f"metis={out['metis_like']['d1_frac']:.2f}; "
+                f"quality_delta={100 * rel:.1f}%")]

@@ -1,0 +1,36 @@
+"""Aggregate the dry-run reports into the §Roofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import save_detail, row
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "reports", "dryrun")
+
+
+def load_cells():
+    cells = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def run(quick: bool = True):
+    cells = load_cells()
+    if not cells:
+        return [row("roofline_table", 0.0,
+                    "no dry-run reports; run python -m repro.launch.dryrun --all")]
+    single = [c for c in cells if c["mesh"] == "single_pod_16x16"]
+    bott = {}
+    for c in single:
+        bott[c["roofline"]["bottleneck"]] = \
+            bott.get(c["roofline"]["bottleneck"], 0) + 1
+    save_detail("roofline_table", {"cells": len(cells),
+                                   "single_pod": len(single),
+                                   "bottlenecks": bott})
+    return [row("roofline_table", 0.0,
+                f"cells={len(cells)} single_pod={len(single)} "
+                f"bottlenecks={bott}")]

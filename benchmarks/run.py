@@ -1,0 +1,47 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+import traceback
+
+
+MODULES = [
+    "fig2_eta_collapse",
+    "fig3_kappa_vs_eta",
+    "fig45_time_to_target",
+    "flip_rate",
+    "tableS2_maxcut",
+    "figS15_sat",
+    "figS3_commcost",
+    "figS5_partition",
+    "figS9_disconnected",
+    "figS13_planted",
+    "roofline_table",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="larger lattices / budgets (hours on CPU)")
+    args = ap.parse_args()
+
+    mods = args.only if args.only else MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for r in mod.run(quick=not args.full):
+                print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+            sys.stdout.flush()
+        except Exception as e:
+            failures += 1
+            print(f"{name},nan,\"FAILED: {type(e).__name__}: {e}\"")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmarks failed")
+
+
+if __name__ == '__main__':
+    main()

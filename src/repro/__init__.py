@@ -1,0 +1,10 @@
+"""repro — Distributed Sparse Ising Machine (DSIM) framework in JAX.
+
+Reproduction + extension of "Programmable Probabilistic Computer with
+1,000,000 p-bits": partitioned Gibbs sampling where devices exchange
+nothing but 1-bit boundary p-bit states, the eta = f_comm/f_p-bit staleness
+rule, the CMFT software twin, and the full multi-pod LM substrate required
+by the assigned architecture pool.  See DESIGN.md / EXPERIMENTS.md.
+"""
+
+__version__ = "1.0.0"

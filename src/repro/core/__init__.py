@@ -1,0 +1,18 @@
+"""The paper's primary contribution as a composable JAX library.
+
+Engines (all share the p-bit update rule and the chromatic schedule):
+  gibbs.GibbsEngine        — monolithic reference (the paper's GPU role)
+  dsim.DSIMEngine          — partitioned, shadow weights, stale 1-bit
+                             boundary exchange (sync_every = the eta dial);
+                             mode='cmft' gives the mean-field twin
+  dsim_dist.DistDSIMEngine — the same semantics on a device mesh
+                             (shard_map + bit-packed boundary all-gather)
+  lattice_dsim.LatticeDSIM — brick-per-device structured lattice with the
+                             fused Pallas update and 1-bit halo ppermute
+                             (the 1M-p-bit production path)
+  apt_icm.APTICM           — adaptive parallel tempering + isoenergetic
+                             cluster moves (the G81 algorithm)
+
+Design tools: partition / potts_partition (topology-aware), commcost
+(C_max, Eq. 2 threshold), analysis (kappa fits, bootstrap CIs, eta maps).
+"""

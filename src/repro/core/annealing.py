@@ -1,0 +1,60 @@
+"""Inverse-temperature (beta) schedules.
+
+Paper Methods: EA results use simulated annealing with beta = 0.5, 1.0, ..., 5.0;
+Pegasus/Zephyr/3SAT use beta = 0.5, 0.625, ..., 10.  Schedules are staircases in
+sweep index, applied identically across engines.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = ["Schedule", "ea_schedule", "sat_schedule", "geometric_schedule",
+           "constant_schedule"]
+
+
+class Schedule:
+    """Sweep-indexed staircase of inverse temperatures."""
+
+    def __init__(self, betas: np.ndarray, total_sweeps: int):
+        betas = np.asarray(betas, dtype=np.float32)
+        if len(betas) < 1:
+            raise ValueError("need at least one beta")
+        self.betas = betas
+        self.total_sweeps = int(total_sweeps)
+        # stage s covers sweeps [bounds[s], bounds[s+1])
+        self.bounds = np.linspace(0, total_sweeps, len(betas) + 1).astype(np.int64)
+
+    def beta_at(self, sweep) -> jnp.ndarray:
+        """beta for a (traced) sweep index."""
+        b = jnp.asarray(self.bounds[1:-1])
+        stage = jnp.searchsorted(b, sweep, side="right")
+        return jnp.asarray(self.betas)[stage]
+
+    def beta_array(self) -> np.ndarray:
+        """Dense (total_sweeps,) beta staircase — for scanned runners."""
+        out = np.empty(self.total_sweeps, dtype=np.float32)
+        for s, beta in enumerate(self.betas):
+            out[self.bounds[s]:self.bounds[s + 1]] = beta
+        return out
+
+    def rescale(self, total_sweeps: int) -> "Schedule":
+        return Schedule(self.betas, total_sweeps)
+
+
+def ea_schedule(total_sweeps: int) -> Schedule:
+    return Schedule(np.arange(0.5, 5.0 + 1e-6, 0.5), total_sweeps)
+
+
+def sat_schedule(total_sweeps: int) -> Schedule:
+    return Schedule(np.arange(0.5, 10.0 + 1e-6, 0.125), total_sweeps)
+
+
+def geometric_schedule(beta0: float, beta1: float, stages: int,
+                       total_sweeps: int) -> Schedule:
+    return Schedule(np.geomspace(beta0, beta1, stages), total_sweeps)
+
+
+def constant_schedule(beta: float, total_sweeps: int) -> Schedule:
+    return Schedule(np.array([beta]), total_sweeps)

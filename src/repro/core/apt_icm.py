@@ -1,0 +1,203 @@
+"""Adaptive parallel tempering with isoenergetic cluster moves (APT+ICM).
+
+The algorithm of the paper's G81 result (Sec. S9, after Ref. [23]):
+P independent chains each hold a full ladder of T inverse temperatures;
+every sweep, neighboring-temperature replicas attempt a Metropolis exchange
+(acceptance min(1, exp((b2-b1)(E2-E1)))); every ``icm_every`` sweeps, chain
+pairs at the same temperature perform a Houdayer isoenergetic cluster move —
+a connected cluster of disagreeing spins is flipped in both replicas,
+preserving E1+E2 while hopping valleys.
+
+The temperature ladder is placed adaptively (``adapt_ladder``): pilot runs
+estimate the energy fluctuation sigma_E(beta) and betas are spaced so that
+d_beta * sigma_E is roughly constant — the constant-acceptance rule used by
+the APT preprocessing of Ref. [72].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import IsingGraph
+from .coloring import Coloring
+from .pbit import FixedPoint, quantize
+from .energy import energy as direct_energy
+
+__all__ = ["APTICM", "APTState", "adapt_ladder"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class APTState:
+    m: jnp.ndarray       # (P, T, N) int8
+    E: jnp.ndarray       # (P, T) f32
+    key: jnp.ndarray
+    sweep: jnp.ndarray
+    swaps: jnp.ndarray   # accepted exchange count
+    icms: jnp.ndarray    # performed cluster moves
+
+
+class APTICM:
+    def __init__(self, g: IsingGraph, coloring: Coloring, betas: np.ndarray,
+                 chains: int = 2, fmt: Optional[FixedPoint] = None):
+        if chains % 2 != 0:
+            raise ValueError("chains must be even (ICM pairs)")
+        self.g = g
+        self.betas = jnp.asarray(betas, jnp.float32)   # (T,)
+        self.T = len(betas)
+        self.P = chains
+        self.fmt = fmt
+        self.n = g.n
+        self._nodes = [jnp.asarray(grp) for grp in coloring.groups]
+        self._idx = [jnp.take(g.idx, grp, axis=0) for grp in self._nodes]
+        self._w = [jnp.take(g.w, grp, axis=0) for grp in self._nodes]
+        self._h = [jnp.take(g.h, grp) for grp in self._nodes]
+        self._step = jax.jit(self._step_impl, static_argnames=("do_icm",))
+
+    # -- init ------------------------------------------------------------------
+
+    def init_state(self, seed: int = 0) -> APTState:
+        key = jax.random.PRNGKey(seed)
+        key, sub = jax.random.split(key)
+        m = jnp.where(jax.random.bernoulli(sub, 0.5, (self.P, self.T, self.n)),
+                      1, -1).astype(jnp.int8)
+        E = jax.vmap(jax.vmap(lambda mm: direct_energy(self.g, mm)))(m)
+        zero = jnp.zeros((), jnp.int32)
+        return APTState(m=m, E=E, key=key, sweep=zero, swaps=zero, icms=zero)
+
+    # -- one replica-sweep over all (P, T) -----------------------------------------
+
+    def _gibbs_sweep(self, m, E, key):
+        beta = self.betas[None, :, None]                     # (1, T, 1)
+        for c in range(len(self._nodes)):
+            nodes, idx, w, h = (self._nodes[c], self._idx[c],
+                                self._w[c], self._h[c])
+            nbr = m[:, :, idx].astype(w.dtype)               # (P, T, nc, D)
+            field = h + (w * nbr).sum(axis=-1)               # (P, T, nc)
+            key, sub = jax.random.split(key)
+            r = jax.random.uniform(sub, field.shape, minval=-1.0, maxval=1.0)
+            act = quantize(beta * field, self.fmt)
+            old = m[:, :, nodes]
+            new = jnp.where(jnp.tanh(act) + r >= 0, 1, -1).astype(jnp.int8)
+            E = E - ((new - old).astype(jnp.float32) * field).sum(axis=-1)
+            m = m.at[:, :, nodes].set(new)
+        return m, E, key
+
+    # -- replica exchange ---------------------------------------------------------
+
+    def _exchange(self, m, E, key, swaps):
+        for offset in (0, 1):
+            t0 = jnp.arange(offset, self.T - 1, 2)
+            b0, b1 = self.betas[t0], self.betas[t0 + 1]
+            E0, E1 = E[:, t0], E[:, t0 + 1]                  # (P, |pairs|)
+            key, sub = jax.random.split(key)
+            u = jax.random.uniform(sub, E0.shape)
+            acc = u < jnp.exp(jnp.clip((b1 - b0) * (E1 - E0), -50.0, 50.0))
+            swaps = swaps + acc.sum().astype(jnp.int32)
+            accm = acc[:, :, None]
+            m0, m1 = m[:, t0], m[:, t0 + 1]
+            m = m.at[:, t0].set(jnp.where(accm, m1, m0))
+            m = m.at[:, t0 + 1].set(jnp.where(accm, m0, m1))
+            e0 = jnp.where(acc, E1, E0)
+            e1 = jnp.where(acc, E0, E1)
+            E = E.at[:, t0].set(e0).at[:, t0 + 1].set(e1)
+        return m, E, key, swaps
+
+    # -- isoenergetic cluster move ---------------------------------------------------
+
+    def _icm(self, m, E, key, icms):
+        """Houdayer move between chain pairs (2p, 2p+1) at every temperature."""
+        g = self.g
+        m1, m2 = m[0::2], m[1::2]                            # (P/2, T, N)
+        q = (m1 * m2).astype(jnp.int8)
+        disagree = q < 0                                     # (P/2, T, N)
+        key, sub = jax.random.split(key)
+        # random seed site among disagreements (fallback 0 if none)
+        scores = jax.random.uniform(sub, disagree.shape) * disagree
+        seed_site = jnp.argmax(scores.reshape(*disagree.shape[:2], -1), axis=-1)
+        any_dis = disagree.any(axis=-1)
+
+        cluster0 = jax.nn.one_hot(seed_site, self.n, dtype=jnp.bool_) \
+            & disagree
+
+        def grow(state):
+            cl, _ = state
+            # neighbor expansion through nonzero couplings
+            nbr_any = jnp.zeros_like(cl)
+            src = cl[:, :, g.idx]                            # (P/2, T, N, D)
+            reach = (src & (g.w != 0)[None, None]).any(axis=-1)
+            new = cl | (reach & disagree)
+            return new, (new != cl).any()
+
+        def cond(state):
+            return state[1]
+
+        cluster, _ = jax.lax.while_loop(cond, grow, (cluster0, jnp.bool_(True)))
+        flip = cluster & any_dis[:, :, None]
+        fl = jnp.where(flip, -1, 1).astype(jnp.int8)
+        m1n, m2n = m1 * fl, m2 * fl
+        mn = m.at[0::2].set(m1n).at[1::2].set(m2n)
+        En = jax.vmap(jax.vmap(lambda mm: direct_energy(self.g, mm)))(
+            mn.reshape(-1, self.n).reshape(self.P, self.T, self.n))
+        icms = icms + any_dis.sum().astype(jnp.int32)
+        return mn, En, key, icms
+
+    # -- scan step --------------------------------------------------------------------
+
+    def _step_impl(self, state: APTState, do_icm: bool) -> APTState:
+        m, E, key = state.m, state.E, state.key
+        m, E, key = self._gibbs_sweep(m, E, key)
+        m, E, key, swaps = self._exchange(m, E, key, state.swaps)
+        icms = state.icms
+        if do_icm:
+            m, E, key, icms = self._icm(m, E, key, icms)
+        return APTState(m=m, E=E, key=key, sweep=state.sweep + 1,
+                        swaps=swaps, icms=icms)
+
+    def run(self, state: APTState, sweeps: int, icm_every: int = 10,
+            record_every: int = 10):
+        """Returns (state, (sweep_idx, best-energy trace))."""
+        best, ts = [], []
+        for t in range(1, sweeps + 1):
+            state = self._step(state, do_icm=(icm_every > 0 and t % icm_every == 0))
+            if t % record_every == 0 or t == sweeps:
+                best.append(float(state.E.min()))
+                ts.append(t)
+        return state, (np.asarray(ts), np.asarray(best))
+
+    def best_config(self, state: APTState) -> Tuple[np.ndarray, float]:
+        E = np.asarray(state.E)
+        p, t = np.unravel_index(np.argmin(E), E.shape)
+        return np.asarray(state.m[p, t]), float(E[p, t])
+
+
+def adapt_ladder(g: IsingGraph, coloring: Coloring, beta_min: float,
+                 beta_max: float, n_temps: int, pilot_sweeps: int = 100,
+                 seed: int = 0) -> np.ndarray:
+    """Place betas so d_beta * sigma_E(beta) is ~constant (APT preprocessing)."""
+    from .gibbs import GibbsEngine
+    from .annealing import constant_schedule
+
+    probe = np.geomspace(beta_min, beta_max, 8)
+    sig = []
+    eng = GibbsEngine(g, coloring)
+    for b in probe:
+        st = eng.init_state(seed=seed)
+        st, (Etr, _) = eng.run_dense(
+            st, constant_schedule(float(b), pilot_sweeps).beta_array())
+        tail = np.asarray(Etr)[pilot_sweeps // 2:]
+        sig.append(max(float(tail.std()), 1e-6))
+    sig = np.asarray(sig)
+    # integrate d_beta proportional to 1/sigma between probes
+    dens = 1.0 / np.interp(np.linspace(beta_min, beta_max, 512), probe, sig)
+    cum = np.concatenate([[0.0], np.cumsum(dens)])
+    cum /= cum[-1]
+    grid = np.linspace(beta_min, beta_max, 513)
+    targets = np.linspace(0, 1, n_temps)
+    return np.interp(targets, cum, grid)

@@ -1,0 +1,105 @@
+"""Graph coloring for chromatic (colored) Gibbs updates.
+
+Every p-bit in a color group has no neighbor in the same group, so the whole
+group updates in one fused parallel step — the mechanism that lets the paper's
+machine flip all N p-bits once per N_color phases.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+__all__ = ["greedy_coloring", "color_groups", "lattice3d_coloring",
+           "validate_coloring", "Coloring"]
+
+
+class Coloring:
+    """Color assignment + per-color index groups (numpy, host side)."""
+
+    def __init__(self, colors: np.ndarray):
+        self.colors = np.asarray(colors, dtype=np.int32)
+        self.n_colors = int(self.colors.max()) + 1 if len(self.colors) else 0
+        self.groups: List[np.ndarray] = [
+            np.nonzero(self.colors == c)[0].astype(np.int32)
+            for c in range(self.n_colors)
+        ]
+
+    def __repr__(self):
+        sizes = [len(g) for g in self.groups]
+        return f"Coloring(n_colors={self.n_colors}, sizes={sizes})"
+
+
+def greedy_coloring(idx: np.ndarray, w: np.ndarray) -> Coloring:
+    """Largest-degree-first greedy coloring of an ELL graph."""
+    idx = np.asarray(idx)
+    w = np.asarray(w)
+    n, dmax = idx.shape
+    deg = (w != 0).sum(axis=1)
+    order = np.argsort(-deg, kind="stable")
+    colors = np.full(n, -1, dtype=np.int32)
+    valid = w != 0
+    for i in order:
+        nbr_colors = colors[idx[i][valid[i]]]
+        used = set(int(c) for c in nbr_colors if c >= 0)
+        c = 0
+        while c in used:
+            c += 1
+        colors[i] = c
+    return Coloring(colors)
+
+
+def lattice3d_coloring(L: int, periodic_z: bool = True) -> Coloring:
+    """Proper coloring of the L^3 lattice (open x/y, optionally periodic z).
+
+    Even L: 2-color checkerboard (paper: N_color = 2 at 100^3).
+    Odd L with periodic z: the z-cycle is odd, so 3 colors are required
+    (paper: N_color = 3 at 37^3).  We color by parity except on the seam plane
+    z = L-1, which takes color 2; that plane's internal x/y edges are handled
+    by alternating 2 with the parity colors — concretely, nodes on the seam
+    with even (x+y) take color 2 and odd (x+y) keep their parity color, which
+    leaves odd-(x+y) seam nodes adjacent to z=0 neighbors; those need color 2's
+    complement.  The simple provably-correct construction below instead colors
+    z < L-1 by parity and the seam plane by (x+y) parity shifted into {2, 0/1}:
+
+      color(x, y, z<L-1) = (x + y + z) % 2
+      color(x, y, L-1)   = 2                      if (x+y) % 2 == 0
+                         = (x + y + L - 1) % 2    otherwise
+
+    Seam internal edges: one endpooint even (color 2), other odd (parity) — ok.
+    Seam-to-(L-2) edges: even seam node color 2 vs parity != 2 — ok; odd seam
+    node has parity color (x+y+L-1)%2 vs neighbor (x+y+L-2)%2 — differ. ok.
+    Seam-to-0 (wrap) edges: even seam node 2 vs (x+y)%2 in {0,1} — ok; odd seam
+    node (x+y+L-1)%2 = (x+y)%2 xor (L-1)%2; L odd => = (x+y)%2 ... conflict!
+    To avoid the conflict the wrap partner column z=0 with odd (x+y) is flipped
+    to color 2 as well; z=0's own internal/z=1 edges then need checking, which
+    the validation in tests performs exhaustively.
+    """
+    xs, ys, zs = np.meshgrid(np.arange(L), np.arange(L), np.arange(L), indexing="ij")
+    par = (xs + ys + zs) % 2
+    colors = par.astype(np.int32)
+    if periodic_z and L % 2 == 1 and L > 2:
+        xyp = (xs + ys) % 2
+        seam = zs == L - 1
+        base = zs == 0
+        # seam plane: even (x+y) -> 2 ; odd keeps parity
+        colors = np.where(seam & (xyp == 0), 2, colors)
+        # wrap partners of the odd-(x+y) seam nodes: flip z=0 odd columns to 2
+        colors = np.where(base & (xyp == 1), 2, colors)
+    return Coloring(colors.ravel())
+
+
+def validate_coloring(idx: np.ndarray, w: np.ndarray, colors: np.ndarray) -> bool:
+    idx = np.asarray(idx)
+    w = np.asarray(w)
+    colors = np.asarray(colors)
+    n, dmax = idx.shape
+    src = np.repeat(np.arange(n), dmax)
+    dst = idx.ravel()
+    mask = w.ravel() != 0
+    return bool(np.all(colors[src[mask]] != colors[dst[mask]]))
+
+
+def color_groups(colors: np.ndarray) -> List[np.ndarray]:
+    return Coloring(colors).groups

@@ -1,0 +1,377 @@
+"""Distributed Sparse Ising Machine — partitioned Gibbs sampling with
+shadow weights and tunably-stale 1-bit boundary exchange (the paper's core).
+
+Construction (host side, numpy): the graph is partitioned into K clusters;
+cut-edge weights are duplicated on both sides (*shadow weights*), so each
+cluster evaluates every local field from cluster-local memory.  The only
+cross-cluster quantity is the boundary p-bit *state*, refreshed every
+``sync_every = S`` sweeps:
+
+  mode='dsim' : ghosts get the instantaneous boundary states (hardware).
+  mode='cmft' : ghosts get the mean over the last S sweeps (parallel cluster
+                mean-field theory, Supplementary S3).
+
+``sync_every``:
+  'phase'  : refresh before every color phase -> EXACTLY the monolithic
+             chromatic dynamics (the proper coloring guarantees a neighbor in
+             another cluster is never updated in the same phase), i.e. the
+             eta -> infinity limit of Fig. 3.
+  S >= 1   : refresh every S sweeps (eta ~ 1/S); the stale regime.
+  None     : never refresh (the paper's disconnected-links control, S7).
+
+Two numerically identical backends share this layout:
+  * stacked   — all K partitions batched on the leading axis of one device
+                (used for experiments and tests on CPU);
+  * shard_map — the leading axis laid across a mesh axis; the exchange
+                becomes an all-gather of the packed boundary states
+                (``repro.core.dsim_dist``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import IsingGraph
+from .coloring import Coloring
+from .pbit import FixedPoint, quantize, lfsr_init, lfsr_next, lfsr_uniform
+from .energy import energy as direct_energy
+from .gibbs import chunk_plan
+
+__all__ = ["PartitionedProblem", "build_partitioned", "DSIMEngine", "DSIMState"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionedProblem:
+    """Device-ready partitioned graph with shadow weights and ghost slots."""
+
+    K: int
+    n: int                      # global number of p-bits
+    n_max: int                  # local slots per partition (padded)
+    g_max: int                  # ghost slots per partition (padded)
+    local_idx: jnp.ndarray      # (K, n_max, D) int32 into [0, n_max + g_max)
+    local_w: jnp.ndarray        # (K, n_max, D) f32 (shadow weights included)
+    local_h: jnp.ndarray        # (K, n_max) f32
+    valid: jnp.ndarray          # (K, n_max) bool
+    ghost_src: jnp.ndarray      # (K, g_max) int32 flat into K * n_max
+    global_ids: jnp.ndarray     # (K, n_max) int32, padding -> n (dump slot)
+    color_slots: tuple          # per color: (K, nc_max) int32 local slots
+    color_mask: tuple           # per color: (K, nc_max) bool
+    # boundary packing (for the distributed backend): slots each partition
+    # must publish, and ghost_src re-indexed into the packed boundary pool
+    bnd_slots: jnp.ndarray      # (K, b_max) int32 local slots (pad 0)
+    bnd_mask: jnp.ndarray       # (K, b_max) bool
+    ghost_src_packed: jnp.ndarray  # (K, g_max) int32 flat into K * b_max
+    labels: np.ndarray = dataclasses.field(compare=False)  # (N,) original labels
+    graph: IsingGraph = dataclasses.field(compare=False)
+
+    @property
+    def b_max(self) -> int:
+        return int(self.bnd_slots.shape[1])
+
+
+def build_partitioned(g: IsingGraph, coloring: Coloring,
+                      labels: np.ndarray, K: int) -> PartitionedProblem:
+    idx = np.asarray(g.idx)
+    w = np.asarray(g.w)
+    h = np.asarray(g.h)
+    colors = coloring.colors
+    n, dmax = idx.shape
+    labels = np.asarray(labels, dtype=np.int32)
+    if labels.shape != (n,):
+        raise ValueError("labels shape mismatch")
+
+    locals_ = [np.nonzero(labels == k)[0] for k in range(K)]
+    n_max = max(max(len(l) for l in locals_), 1)
+    slot_of = np.zeros(n, dtype=np.int64)
+    for k in range(K):
+        slot_of[locals_[k]] = np.arange(len(locals_[k]))
+
+    ghosts, g_sizes = [], []
+    for k in range(K):
+        rows = idx[locals_[k]]
+        msk = w[locals_[k]] != 0
+        nb = rows[msk]
+        ext = np.unique(nb[labels[nb] != k])
+        ghosts.append(ext)
+        g_sizes.append(len(ext))
+    g_max = max(max(g_sizes), 1)
+
+    local_idx = np.zeros((K, n_max, dmax), dtype=np.int32)
+    local_w = np.zeros((K, n_max, dmax), dtype=np.float32)
+    local_h = np.zeros((K, n_max), dtype=np.float32)
+    valid = np.zeros((K, n_max), dtype=bool)
+    ghost_src = np.zeros((K, g_max), dtype=np.int32)
+    global_ids = np.full((K, n_max), n, dtype=np.int32)
+
+    for k in range(K):
+        loc = locals_[k]
+        nk = len(loc)
+        valid[k, :nk] = True
+        global_ids[k, :nk] = loc
+        local_h[k, :nk] = h[loc]
+        rows = idx[loc]                       # (nk, D)
+        ww = w[loc]
+        local_w[k, :nk] = ww
+        ext = ghosts[k]
+        # map neighbor ids: local -> slot, external -> n_max + ghost position
+        is_ext = (labels[rows] != k) & (ww != 0)
+        mapped = np.where(ww != 0, slot_of[rows], 0)
+        if len(ext):
+            gpos = np.searchsorted(ext, rows)
+            gpos = np.clip(gpos, 0, len(ext) - 1)
+            mapped = np.where(is_ext, n_max + gpos, mapped)
+        local_idx[k, :nk] = mapped
+        if len(ext):
+            ghost_src[k, :len(ext)] = labels[ext] * n_max + slot_of[ext]
+
+    # per-color slot lists
+    color_slots, color_mask = [], []
+    for c in range(coloring.n_colors):
+        sizes = [int((colors[locals_[k]] == c).sum()) for k in range(K)]
+        nc_max = max(max(sizes), 1)
+        cs = np.zeros((K, nc_max), dtype=np.int32)
+        cm = np.zeros((K, nc_max), dtype=bool)
+        for k in range(K):
+            sel = np.nonzero(colors[locals_[k]] == c)[0]
+            cs[k, :len(sel)] = sel
+            cm[k, :len(sel)] = True
+        color_slots.append(jnp.asarray(cs))
+        color_mask.append(jnp.asarray(cm))
+
+    # boundary publication lists: slots of k referenced by any other partition
+    bnd = []
+    referenced = np.zeros((K, n_max), dtype=bool)
+    for k in range(K):
+        ext = ghosts[k]
+        referenced[labels[ext], slot_of[ext]] = True
+    b_sizes = [int(referenced[k].sum()) for k in range(K)]
+    b_max = max(max(b_sizes), 1)
+    bnd_slots = np.zeros((K, b_max), dtype=np.int32)
+    bnd_mask = np.zeros((K, b_max), dtype=bool)
+    packed_pos = np.full((K, n_max), -1, dtype=np.int64)  # slot -> packed col
+    for k in range(K):
+        sl = np.nonzero(referenced[k])[0]
+        bnd_slots[k, :len(sl)] = sl
+        bnd_mask[k, :len(sl)] = True
+        packed_pos[k, sl] = np.arange(len(sl))
+    gk = ghost_src // n_max
+    gs = ghost_src % n_max
+    ghost_src_packed = (gk * b_max + packed_pos[gk, gs]).astype(np.int32)
+    ghost_src_packed = np.where(ghost_src_packed < 0, 0, ghost_src_packed)
+
+    return PartitionedProblem(
+        K=K, n=n, n_max=n_max, g_max=g_max,
+        local_idx=jnp.asarray(local_idx), local_w=jnp.asarray(local_w),
+        local_h=jnp.asarray(local_h), valid=jnp.asarray(valid),
+        ghost_src=jnp.asarray(ghost_src), global_ids=jnp.asarray(global_ids),
+        color_slots=tuple(color_slots), color_mask=tuple(color_mask),
+        bnd_slots=jnp.asarray(bnd_slots), bnd_mask=jnp.asarray(bnd_mask),
+        ghost_src_packed=jnp.asarray(ghost_src_packed),
+        labels=labels, graph=g,
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DSIMState:
+    m: jnp.ndarray        # (K, n_max) int8 local spins
+    ghosts: jnp.ndarray   # (K, g_max) f32 (instantaneous +-1 or CMFT means)
+    macc: jnp.ndarray     # (K, n_max) f32 window accumulator (CMFT)
+    rng: jnp.ndarray      # philox key | (K, n_max) uint32 LFSR states
+    sweep: jnp.ndarray    # scalar int32
+    flips: jnp.ndarray    # scalar int32
+
+
+SyncSpec = Union[int, str, None]
+
+
+class DSIMEngine:
+    """Partitioned chromatic Gibbs sampler (stacked single-device backend)."""
+
+    def __init__(self, prob: PartitionedProblem, rng: str = "philox",
+                 fmt: Optional[FixedPoint] = None, mode: str = "dsim"):
+        if mode not in ("dsim", "cmft"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if rng not in ("philox", "lfsr"):
+            raise ValueError(f"unknown rng {rng!r}")
+        self.p = prob
+        self.rng_kind = rng
+        self.fmt = fmt
+        self.mode = mode
+        self._rows = jnp.arange(prob.K)[:, None]
+        self._chunk_cache = {}
+        self._energy = jax.jit(self._energy_impl)
+
+    # -- state -----------------------------------------------------------------
+
+    def init_state(self, seed: int = 0, m0: Optional[np.ndarray] = None) -> DSIMState:
+        p = self.p
+        key = jax.random.PRNGKey(seed)
+        if m0 is None:
+            key, sub = jax.random.split(key)
+            m = jnp.where(jax.random.bernoulli(sub, 0.5, (p.K, p.n_max)), 1, -1)
+            m = m.astype(jnp.int8)
+        else:
+            mg = np.asarray(m0, dtype=np.int8)
+            m = np.ones((p.K, p.n_max), dtype=np.int8)
+            gid = np.asarray(p.global_ids)
+            ok = gid < p.n
+            m[ok] = mg[gid[ok]]
+            m = jnp.asarray(m)
+        rng = key if self.rng_kind == "philox" else \
+            lfsr_init(p.K * p.n_max, seed).reshape(p.K, p.n_max)
+        ghosts = self._exchange_inst(m)
+        zero = jnp.zeros((), dtype=jnp.int32)
+        return DSIMState(m=m, ghosts=ghosts,
+                         macc=jnp.zeros((p.K, p.n_max), jnp.float32),
+                         rng=rng, sweep=zero, flips=zero)
+
+    # -- exchange ---------------------------------------------------------------
+
+    def _exchange_inst(self, m) -> jnp.ndarray:
+        """Instantaneous 1-bit boundary states -> ghost slots (DSIM)."""
+        flat = m.reshape(-1).astype(jnp.float32)
+        return flat[self.p.ghost_src]
+
+    def _exchange_mean(self, macc, S) -> jnp.ndarray:
+        """Window-mean boundary values -> ghost slots (CMFT)."""
+        flat = (macc / jnp.float32(S)).reshape(-1)
+        return flat[self.p.ghost_src]
+
+    # -- one color phase ----------------------------------------------------------
+
+    def _phase(self, c: int, m, ghosts, rng, beta):
+        p = self.p
+        slots, mask = p.color_slots[c], p.color_mask[c]       # (K, nc)
+        mext = jnp.concatenate([m.astype(jnp.float32), ghosts], axis=1)
+        # (K, nc, D) neighbor slot ids -> per-partition-row gather (vmapped,
+        # no (K, nc, n_max+g_max) broadcast is ever materialized)
+        idx_c = jnp.take_along_axis(p.local_idx, slots[:, :, None], axis=1)
+        w_c = jnp.take_along_axis(p.local_w, slots[:, :, None], axis=1)
+        h_c = jnp.take_along_axis(p.local_h, slots, axis=1)
+        nbr = jax.vmap(lambda row, ii: row[ii])(mext, idx_c)
+        field = h_c + (w_c * nbr).sum(axis=-1)
+        if self.rng_kind == "philox":
+            rng, sub = jax.random.split(rng)
+            r = jax.random.uniform(sub, field.shape, minval=-1.0, maxval=1.0)
+        else:
+            s = jnp.take_along_axis(rng, slots, axis=1)
+            s = lfsr_next(s)
+            r = lfsr_uniform(s)
+            rng = rng.at[self._rows, slots].set(s)
+        act = quantize(beta * field, self.fmt)
+        old = jnp.take_along_axis(m, slots, axis=1)
+        new = jnp.where(jnp.tanh(act) + r >= 0, 1, -1).astype(jnp.int8)
+        new = jnp.where(mask, new, old)
+        flips = (new != old).sum().astype(jnp.int32)
+        m = m.at[self._rows, slots].set(new)
+        return m, rng, flips
+
+    def _sweep(self, m, ghosts, rng, beta, sync_phase: bool):
+        flips = jnp.zeros((), jnp.int32)
+        for c in range(len(self.p.color_slots)):
+            if sync_phase:
+                ghosts = self._exchange_inst(m)
+            m, rng, f = self._phase(c, m, ghosts, rng, beta)
+            flips = flips + f
+        return m, ghosts, rng, flips
+
+    # -- runners -----------------------------------------------------------------
+
+    def _iteration(self, state: DSIMState, betas_S: jnp.ndarray,
+                   sync: SyncSpec) -> DSIMState:
+        """S sweeps then one boundary exchange (or per-phase / none)."""
+        m, ghosts, macc, rng = state.m, state.ghosts, state.macc, state.rng
+        flips = state.flips
+        S = betas_S.shape[0]
+
+        def body(carry, beta):
+            m, ghosts, macc, rng, flips = carry
+            m, ghosts, rng, f = self._sweep(m, ghosts, rng, beta,
+                                            sync_phase=(sync == "phase"))
+            macc = macc + m.astype(jnp.float32)
+            return (m, ghosts, macc, rng, flips + f), None
+
+        (m, ghosts, macc, rng, flips), _ = jax.lax.scan(
+            body, (m, ghosts, macc, rng, flips), betas_S)
+        if sync == "phase" or sync is None:
+            pass  # ghosts already handled / never refreshed
+        elif self.mode == "cmft":
+            ghosts = self._exchange_mean(macc, S)
+        else:
+            ghosts = self._exchange_inst(m)
+        macc = jnp.zeros_like(macc)
+        return DSIMState(m=m, ghosts=ghosts, macc=macc, rng=rng,
+                         sweep=state.sweep + S, flips=flips)
+
+    def _run_chunk(self, iters: int, S: int, sync: SyncSpec):
+        key = (iters, S, sync)
+        if key not in self._chunk_cache:
+            @jax.jit
+            def f(state, betas):  # betas (iters, S)
+                def body(st, b):
+                    return self._iteration(st, b, sync), None
+                st, _ = jax.lax.scan(body, state, betas)
+                return st
+            self._chunk_cache[key] = f
+        return self._chunk_cache[key]
+
+    def run_recorded(self, state: DSIMState, schedule,
+                     record_points: Sequence[int],
+                     sync_every: SyncSpec = 1):
+        """Run to each record point; returns (state, energies at points).
+
+        ``sync_every``: int S (exchange every S sweeps), 'phase', or None.
+        Record points are quantized to multiples of S.
+        """
+        S = 1 if sync_every in ("phase", None) else int(sync_every)
+        sync = sync_every if sync_every in ("phase", None) else int(sync_every)
+        pts = sorted(set(max(S, int(round(pp / S)) * S) for pp in record_points))
+        betas = schedule.beta_array()
+        total = pts[-1]
+        if len(betas) < total:
+            raise ValueError("schedule shorter than last record point")
+        out, times = [], []
+        pos = 0
+        plan = chunk_plan([pp // S for pp in pts])
+        targets = set(pts)
+        for c in plan:
+            nsw = c * S
+            chunk_betas = jnp.asarray(betas[pos:pos + nsw]).reshape(c, S)
+            state = self._run_chunk(c, S, sync)(state, chunk_betas)
+            pos += nsw
+            if pos in targets:
+                out.append(self.energy(state))
+                times.append(pos)
+        return state, (np.asarray(times), jnp.stack(out))
+
+    # -- observables ----------------------------------------------------------------
+
+    def global_spins(self, state: DSIMState) -> jnp.ndarray:
+        p = self.p
+        buf = jnp.ones((p.n + 1,), dtype=jnp.int8)
+        buf = buf.at[p.global_ids.reshape(-1)].set(state.m.reshape(-1))
+        return buf[: p.n]
+
+    def _energy_impl(self, state: DSIMState) -> jnp.ndarray:
+        return direct_energy(self.p.graph, self.global_spins(state))
+
+    def energy(self, state: DSIMState) -> jnp.ndarray:
+        """True global energy of the current configuration."""
+        return self._energy(state)
+
+    def local_fields_check(self, state: DSIMState) -> jnp.ndarray:
+        """Global-layout local fields as the partitions see them (tests)."""
+        p = self.p
+        mext = jnp.concatenate([state.m.astype(jnp.float32), state.ghosts], axis=1)
+        nbr = jax.vmap(lambda row, ii: row[ii])(mext, p.local_idx)
+        f = p.local_h + (p.local_w * nbr).sum(axis=-1)       # (K, n_max)
+        buf = jnp.zeros((p.n + 1,), dtype=jnp.float32)
+        buf = buf.at[p.global_ids.reshape(-1)].set(f.reshape(-1))
+        return buf[: p.n]

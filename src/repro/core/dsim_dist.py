@@ -1,0 +1,272 @@
+"""Distributed (shard_map) backend of the DSIM.
+
+Each mesh device hosts one partition: local spins, shadow weights, and ghost
+slots live device-local; the *only* collective during sampling is the
+boundary-state exchange — an all-gather of 1-bit-packed boundary spins, every
+``sync_every`` sweeps.  This is the TPU-native realization of the paper's
+"devices exchange nothing but 1-bit boundary states".
+
+Semantics are identical to the stacked backend in :mod:`repro.core.dsim`
+(verified in tests with a multi-device subprocess); the same
+:class:`PartitionedProblem` feeds both.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .dsim import PartitionedProblem, DSIMState
+from .pbit import FixedPoint, quantize, lfsr_init, lfsr_next, lfsr_uniform
+from .packing import pack_pm1, unpack_pm1, pad_to_multiple
+from .energy import energy as direct_energy
+from .gibbs import chunk_plan
+
+__all__ = ["DistDSIMEngine"]
+
+SyncSpec = Union[int, str, None]
+
+
+class DistDSIMEngine:
+    """One partition per device along ``axis`` of ``mesh`` (K = axis size)."""
+
+    def __init__(self, prob: PartitionedProblem, mesh: Mesh,
+                 axis: Union[str, tuple] = "data",
+                 rng: str = "philox", fmt: Optional[FixedPoint] = None,
+                 mode: str = "dsim", bitpack: bool = True):
+        axis_tuple = (axis,) if isinstance(axis, str) else tuple(axis)
+        ndev = int(np.prod([mesh.shape[a] for a in axis_tuple]))
+        if ndev != prob.K:
+            raise ValueError(f"mesh axis size {ndev} != K={prob.K}")
+        if mode not in ("dsim", "cmft"):
+            raise ValueError(mode)
+        self.p = prob
+        self.mesh = mesh
+        self.axis = axis_tuple if len(axis_tuple) > 1 else axis_tuple[0]
+        self.rng_kind = rng
+        self.fmt = fmt
+        self.mode = mode
+        # bit-packing needs b_max % 8 == 0; re-pad the packed pool coords
+        self.b_pad = pad_to_multiple(prob.b_max, 8)
+        self.bitpack = bitpack and mode == "dsim"
+        self._shard = NamedSharding(mesh, P(self.axis))
+        self._repl = NamedSharding(mesh, P())
+        self._chunk_cache = {}
+
+        bs = np.asarray(prob.bnd_slots)
+        pad = np.zeros((prob.K, self.b_pad - prob.b_max), dtype=bs.dtype)
+        self._bnd_slots = jnp.asarray(np.concatenate([bs, pad], axis=1))
+        gsp = np.asarray(prob.ghost_src_packed)
+        gk, gc = gsp // prob.b_max, gsp % prob.b_max
+        self._ghost_src_pool = jnp.asarray((gk * self.b_pad + gc).astype(np.int32))
+
+        self._consts = dict(
+            local_idx=prob.local_idx, local_w=prob.local_w, local_h=prob.local_h,
+            color_slots=prob.color_slots, color_mask=prob.color_mask,
+            bnd_slots=self._bnd_slots, ghost_src_pool=self._ghost_src_pool,
+        )
+
+    # -- state ------------------------------------------------------------------
+
+    def init_state(self, seed: int = 0) -> DSIMState:
+        p = self.p
+        key = jax.random.PRNGKey(seed)
+        key, sub = jax.random.split(key)
+        m = jnp.where(jax.random.bernoulli(sub, 0.5, (p.K, p.n_max)), 1, -1)
+        m = m.astype(jnp.int8)
+        if self.rng_kind == "philox":
+            rng = jax.random.split(key, p.K)        # (K,) typed keys
+        else:
+            rng = lfsr_init(p.K * p.n_max, seed).reshape(p.K, p.n_max)
+        ghosts = self._exchange_host(m)
+        zero = jnp.zeros((), dtype=jnp.int32)
+        st = DSIMState(m=m, ghosts=ghosts,
+                       macc=jnp.zeros((p.K, p.n_max), jnp.float32),
+                       rng=rng, sweep=zero, flips=zero)
+        return self.shard_state(st)
+
+    def shard_state(self, st: DSIMState) -> DSIMState:
+        put = lambda x: jax.device_put(x, self._shard)
+        return DSIMState(m=put(st.m), ghosts=put(st.ghosts), macc=put(st.macc),
+                         rng=put(st.rng),
+                         sweep=jax.device_put(st.sweep, self._repl),
+                         flips=jax.device_put(st.flips, self._repl))
+
+    def _exchange_host(self, m) -> jnp.ndarray:
+        flat = m.reshape(-1).astype(jnp.float32)
+        return flat[self.p.ghost_src]
+
+    # -- device-local block functions (run inside shard_map) -----------------------
+
+    def _exchange_block(self, m, macc, S, consts):
+        """Publish boundary states, all-gather, gather this device's ghosts."""
+        if self.mode == "cmft":
+            vals = jnp.take_along_axis(macc / jnp.float32(S),
+                                       consts["bnd_slots"], axis=1)
+            pool = jax.lax.all_gather(vals[0], self.axis, tiled=True)
+        elif self.bitpack:
+            bnd = jnp.take_along_axis(m, consts["bnd_slots"], axis=1)   # (1, b_pad)
+            packed = pack_pm1(bnd[0])
+            pool_p = jax.lax.all_gather(packed, self.axis, tiled=True)
+            pool = unpack_pm1(pool_p, self.p.K * self.b_pad).astype(jnp.float32)
+        else:
+            bnd = jnp.take_along_axis(m, consts["bnd_slots"], axis=1)
+            pool = jax.lax.all_gather(bnd[0], self.axis,
+                                      tiled=True).astype(jnp.float32)
+        pool = pool.reshape(-1)
+        return pool[consts["ghost_src_pool"]]                 # (1, g_max)
+
+    def _phase_block(self, c, m, ghosts, rng, beta, consts):
+        slots, mask = consts["color_slots"][c], consts["color_mask"][c]
+        mext = jnp.concatenate([m.astype(jnp.float32), ghosts], axis=1)
+        idx_c = jnp.take_along_axis(consts["local_idx"], slots[:, :, None], axis=1)
+        w_c = jnp.take_along_axis(consts["local_w"], slots[:, :, None], axis=1)
+        h_c = jnp.take_along_axis(consts["local_h"], slots, axis=1)
+        nbr = jax.vmap(lambda row, ii: row[ii])(mext, idx_c)
+        field = h_c + (w_c * nbr).sum(axis=-1)
+        if self.rng_kind == "philox":
+            k0, sub = jax.random.split(rng[0])
+            rng = rng.at[0].set(k0)
+            r = jax.random.uniform(sub, field.shape, minval=-1.0, maxval=1.0)
+        else:
+            s = jnp.take_along_axis(rng, slots, axis=1)
+            s = lfsr_next(s)
+            r = lfsr_uniform(s)
+            rng = rng.at[jnp.zeros_like(slots), slots].set(s)
+        act = quantize(beta * field, self.fmt)
+        old = jnp.take_along_axis(m, slots, axis=1)
+        new = jnp.where(jnp.tanh(act) + r >= 0, 1, -1).astype(jnp.int8)
+        new = jnp.where(mask, new, old)
+        flips = (new != old).sum().astype(jnp.int32)
+        m = m.at[jnp.zeros_like(slots), slots].set(new)
+        return m, rng, flips
+
+    def _iteration_block(self, m, ghosts, macc, rng, flips, betas_S, sync, consts):
+        S = betas_S.shape[0]
+
+        def body(carry, beta):
+            m, ghosts, macc, rng, flips = carry
+            for c in range(len(consts["color_slots"])):
+                if sync == "phase":
+                    ghosts = self._exchange_block(m, macc, 1, consts)
+                m, rng, f = self._phase_block(c, m, ghosts, rng, beta, consts)
+                flips = flips + f
+            macc = macc + m.astype(jnp.float32)
+            return (m, ghosts, macc, rng, flips), None
+
+        (m, ghosts, macc, rng, flips), _ = jax.lax.scan(
+            body, (m, ghosts, macc, rng, flips), betas_S)
+        if sync not in ("phase", None):
+            ghosts = self._exchange_block(m, macc, S, consts)
+        macc = jnp.zeros_like(macc)
+        return m, ghosts, macc, rng, flips
+
+    # -- runners --------------------------------------------------------------------
+
+    def _run_chunk(self, iters: int, S: int, sync: SyncSpec):
+        key = (iters, S, sync)
+        if key in self._chunk_cache:
+            return self._chunk_cache[key]
+
+        spec_m = P(self.axis)
+        rng_spec = P(self.axis)
+        cspec = dict(
+            local_idx=spec_m, local_w=spec_m, local_h=spec_m,
+            color_slots=tuple(spec_m for _ in self.p.color_slots),
+            color_mask=tuple(spec_m for _ in self.p.color_mask),
+            bnd_slots=spec_m, ghost_src_pool=spec_m,
+        )
+
+        def block(m, ghosts, macc, rng, flips_in, betas, consts):
+            local = jnp.zeros((), jnp.int32)
+
+            def it(carry, b):
+                m, ghosts, macc, rng, fl = carry
+                out = self._iteration_block(m, ghosts, macc, rng, fl, b,
+                                            sync, consts)
+                return out, None
+            (m, ghosts, macc, rng, local), _ = jax.lax.scan(
+                it, (m, ghosts, macc, rng, local), betas)
+            flips = flips_in + jax.lax.psum(local, self.axis)
+            return m, ghosts, macc, rng, flips
+
+        smapped = jax.shard_map(
+            block, mesh=self.mesh,
+            in_specs=(spec_m, spec_m, spec_m, rng_spec, P(), P(), cspec),
+            out_specs=(spec_m, spec_m, spec_m, rng_spec, P()),
+            check_vma=False,
+        )
+
+        @jax.jit
+        def run(state: DSIMState, betas, consts):
+            m, ghosts, macc, rng, flips = smapped(
+                state.m, state.ghosts, state.macc, state.rng, state.flips,
+                betas, consts)
+            return DSIMState(m=m, ghosts=ghosts, macc=macc, rng=rng,
+                             sweep=state.sweep + betas.shape[0] * betas.shape[1],
+                             flips=flips)
+
+        self._chunk_cache[key] = run
+        return run
+
+    def run_recorded(self, state: DSIMState, schedule,
+                     record_points: Sequence[int], sync_every: SyncSpec = 1):
+        S = 1 if sync_every in ("phase", None) else int(sync_every)
+        sync = sync_every if sync_every in ("phase", None) else int(sync_every)
+        pts = sorted(set(max(S, int(round(pp / S)) * S) for pp in record_points))
+        betas = schedule.beta_array()
+        if len(betas) < pts[-1]:
+            raise ValueError("schedule shorter than last record point")
+        out, times, pos = [], [], 0
+        for c in chunk_plan([pp // S for pp in pts]):
+            nsw = c * S
+            bchunk = jnp.asarray(betas[pos:pos + nsw]).reshape(c, S)
+            state = self._run_chunk(c, S, sync)(state, bchunk, self._consts)
+            pos += nsw
+            if pos in set(pts):
+                out.append(self.energy(state))
+                times.append(pos)
+        return state, (np.asarray(times), jnp.stack(out))
+
+    # -- observables -------------------------------------------------------------------
+
+    def global_spins(self, state: DSIMState) -> jnp.ndarray:
+        p = self.p
+        buf = jnp.ones((p.n + 1,), dtype=jnp.int8)
+        buf = buf.at[p.global_ids.reshape(-1)].set(state.m.reshape(-1))
+        return buf[: p.n]
+
+    def energy(self, state: DSIMState) -> jnp.ndarray:
+        return direct_energy(self.p.graph, self.global_spins(state))
+
+    # -- dry-run hook --------------------------------------------------------------------
+
+    def lower_chunk(self, iters: int = 4, S: int = 4, sync: SyncSpec = 4):
+        """Lower (not run) one sampling chunk — used by the launch dry-run."""
+        run = self._run_chunk(iters, S, sync)
+        p = self.p
+
+        def sds(x, shard):
+            return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=shard)
+
+        rng_t = jax.random.split(jax.random.PRNGKey(0), p.K) \
+            if self.rng_kind == "philox" else \
+            jnp.zeros((p.K, p.n_max), jnp.uint32)
+        zero = jnp.zeros((), jnp.int32)
+        st = DSIMState(
+            m=jax.ShapeDtypeStruct((p.K, p.n_max), jnp.int8, sharding=self._shard),
+            ghosts=jax.ShapeDtypeStruct((p.K, p.g_max), jnp.float32, sharding=self._shard),
+            macc=jax.ShapeDtypeStruct((p.K, p.n_max), jnp.float32, sharding=self._shard),
+            rng=sds(rng_t, self._shard),
+            sweep=sds(zero, self._repl),
+            flips=sds(zero, self._repl),
+        )
+        betas = jax.ShapeDtypeStruct((iters, S), jnp.float32, sharding=self._repl)
+        consts = jax.tree.map(lambda x: sds(x, self._shard), self._consts)
+        return run.lower(st, betas, consts)

@@ -1,0 +1,299 @@
+"""Brick-partitioned lattice DSIM on a device mesh (the production engine).
+
+The global lattice arrays are sharded directly over mesh axes — one brick
+per device.  Inside ``shard_map`` each device runs the fused Pallas color
+update on its brick; the ONLY collectives during sampling are the halo
+``ppermute``s of 1-byte boundary spin planes, every ``sync_every`` sweeps
+(x/y open chains, z a periodic ring — exactly the paper's boundary traffic,
+with ppermute as the source-synchronous link).
+
+This is the path the 1M-p-bit production config (`ea3d_1m`) lowers through
+in the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .lattice import LatticeProblem
+from .packing import pack_pm1, unpack_pm1, pad_to_multiple
+from .pbit import FixedPoint, lfsr_init
+from .gibbs import chunk_plan
+from repro.kernels.ops import pbit_update_op, brick_energy_op
+
+__all__ = ["LatticeDSIM", "LatticeState"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LatticeState:
+    m: jnp.ndarray        # (X, Y, Z) int8
+    s: jnp.ndarray        # (X, Y, Z) uint32 LFSR states
+    halos: tuple          # 6 halo-plane arrays (see _halo_shapes)
+    sweep: jnp.ndarray
+    flips: jnp.ndarray
+
+
+class LatticeDSIM:
+    """dim_axes: mesh axis name (or None) for each lattice dim (x, y, z).
+
+    ``bitpack_halos``: ship halo planes as 1-bit bitmaps over the ppermute
+    links (8x less wire than int8 — the paper's exact 1-bit-per-boundary-
+    p-bit traffic; §Perf H8)."""
+
+    def __init__(self, prob: LatticeProblem, mesh: Mesh,
+                 dim_axes: Tuple[Optional[str], Optional[str], Optional[str]],
+                 fmt: Optional[FixedPoint] = None, impl: str = "auto",
+                 kernel_bx: Optional[int] = None, bitpack_halos: bool = True):
+        self.p = prob
+        self.mesh = mesh
+        self.dim_axes = dim_axes
+        self.fmt = fmt
+        self.impl = impl
+        self.kernel_bx = kernel_bx
+        self.bitpack_halos = bitpack_halos
+        X, Y, Z = prob.dims
+        self.nb = tuple(1 if a is None else mesh.shape[a] for a in dim_axes)
+        for d, (ext, k) in enumerate(zip(prob.dims, self.nb)):
+            if ext % k != 0:
+                raise ValueError(f"dim {d} extent {ext} not divisible by mesh factor {k}")
+        self.brick = tuple(e // k for e, k in zip(prob.dims, self.nb))
+        ax, ay, az = dim_axes
+        self.spec_m = P(ax, ay, az)
+        self.spec_masks = P(None, ax, ay, az)
+        # halo plane specs: (nbx, Y, Z), (nbx, Y, Z), (X, nby, Z), ... each
+        # sharded so every device holds exactly its (1-plane) halo slice
+        self.halo_specs = (P(ax, ay, az), P(ax, ay, az),
+                           P(ax, ay, az), P(ax, ay, az),
+                           P(ax, ay, az), P(ax, ay, az))
+        self._shard = lambda spec: NamedSharding(mesh, spec)
+        self._chunk_cache = {}
+        self._energy_fn = None
+
+    # -- halo plumbing -------------------------------------------------------------
+
+    def _halo_shapes(self):
+        (X, Y, Z), (kx, ky, kz) = self.p.dims, self.nb
+        return [(kx, Y, Z), (kx, Y, Z), (X, ky, Z), (X, ky, Z), (X, Y, kz), (X, Y, kz)]
+
+    def _exchange_block(self, m):
+        """Refresh the six halo planes of this brick via neighbor ppermute.
+
+        Halo planes cross links 1-bit packed (pack -> permute -> unpack),
+        exactly the paper's boundary traffic; padding spins in the packed
+        tail are inert (their couplings are zero)."""
+        ax, ay, az = self.dim_axes
+        kx, ky, kz = self.nb
+
+        def shift(plane, axis_name, k, up: bool, periodic: bool):
+            # up=True: receive the plane of my -1 neighbor (their high face)
+            if axis_name is None or k == 1:
+                if periodic:
+                    return plane  # my own opposite face wraps to me
+                return jnp.zeros_like(plane)
+            if up:
+                perm = [(i, (i + 1) % k) for i in range(k)] if periodic \
+                    else [(i, i + 1) for i in range(k - 1)]
+            else:
+                perm = [(i, (i - 1) % k) for i in range(k)] if periodic \
+                    else [(i, i - 1) for i in range(1, k)]
+            if not self.bitpack_halos:
+                return jax.lax.ppermute(plane, axis_name, perm)
+            shape = plane.shape
+            n = int(np.prod(shape))
+            npad = pad_to_multiple(n, 8)
+            flat = jnp.pad(plane.reshape(-1), (0, npad - n),
+                           constant_values=1)
+            packed = pack_pm1(flat)
+            packed = jax.lax.ppermute(packed, axis_name, perm)
+            return unpack_pm1(packed, n).reshape(shape)
+
+        xlo = shift(m[-1:, :, :], ax, kx, True, False)[0]
+        xhi = shift(m[:1, :, :], ax, kx, False, False)[0]
+        ylo = shift(m[:, -1:, :], ay, ky, True, False)[:, 0, :]
+        yhi = shift(m[:, :1, :], ay, ky, False, False)[:, 0, :]
+        zlo = shift(m[:, :, -1:], az, kz, True, True)[:, :, 0]
+        zhi = shift(m[:, :, :1], az, kz, False, True)[:, :, 0]
+        return (xlo, xhi, ylo, yhi, zlo, zhi)
+
+    # -- block step -------------------------------------------------------------------
+
+    def _sweep_block(self, m, s, halos, beta, masks, h, w6):
+        flips = jnp.zeros((), jnp.int32)
+        for c in range(self.p.n_colors):
+            m2, s = pbit_update_op(m, s, beta, masks[c], h, w6, halos,
+                                   fmt=self.fmt, bx=self.kernel_bx,
+                                   impl=self.impl)
+            flips = flips + (m2 != m).sum().astype(jnp.int32)
+            m = m2
+        return m, s, flips
+
+    def _iteration_block(self, m, s, halos, betas_S, masks, h, w6):
+        def body(carry, beta):
+            m, s, fl = carry
+            m, s, f = self._sweep_block(m, s, halos, beta, masks, h, w6)
+            return (m, s, fl + f), None
+        (m, s, fl), _ = jax.lax.scan(body, (m, s, jnp.zeros((), jnp.int32)),
+                                     betas_S)
+        halos = self._exchange_block(m)
+        return m, s, halos, fl
+
+    # -- runners ------------------------------------------------------------------------
+
+    def _axes_all(self):
+        return tuple(a for a in self.dim_axes if a is not None)
+
+    def _run_chunk(self, iters: int, S: int):
+        key = (iters, S)
+        if key in self._chunk_cache:
+            return self._chunk_cache[key]
+        spec_m, spec_masks = self.spec_m, self.spec_masks
+        hspecs = self.halo_specs
+        axes_all = self._axes_all()
+
+        def block(m, s, halos, betas, masks, h, w6):
+            # halos arrive as (k?, ...) plane stacks; squeeze the brick dims
+            xlo, xhi, ylo, yhi, zlo, zhi = halos
+            halos = (xlo[0], xhi[0], ylo[:, 0, :], yhi[:, 0, :],
+                     zlo[:, :, 0], zhi[:, :, 0])
+            local = jnp.zeros((), jnp.int32)
+
+            def it(carry, b):
+                m, s, halos, fl = carry
+                m, s, halos, f = self._iteration_block(m, s, halos, b,
+                                                       masks, h, w6)
+                return (m, s, halos, fl + f), None
+            (m, s, halos, local), _ = jax.lax.scan(
+                it, (m, s, halos, local), betas)
+            flips = jax.lax.psum(local, axes_all) if axes_all else local
+            xlo, xhi, ylo, yhi, zlo, zhi = halos
+            halos = (xlo[None], xhi[None], ylo[:, None, :], yhi[:, None, :],
+                     zlo[:, :, None], zhi[:, :, None])
+            return m, s, halos, flips
+
+        smapped = jax.shard_map(
+            block, mesh=self.mesh,
+            in_specs=(spec_m, spec_m, hspecs, P(), spec_masks, spec_m,
+                      tuple(spec_m for _ in range(6))),
+            out_specs=(spec_m, spec_m, hspecs, P()),
+            check_vma=False,
+        )
+
+        @jax.jit
+        def run(state: LatticeState, betas, masks, h, w6):
+            m, s, halos, fl = smapped(state.m, state.s, state.halos, betas,
+                                      masks, h, w6)
+            return LatticeState(
+                m=m, s=s, halos=halos,
+                sweep=state.sweep + betas.shape[0] * betas.shape[1],
+                flips=state.flips + fl)
+
+        self._chunk_cache[key] = run
+        return run
+
+    def init_state(self, seed: int = 0) -> LatticeState:
+        p = self.p
+        X, Y, Z = p.dims
+        rng = np.random.default_rng(seed)
+        m = jnp.asarray(rng.choice(np.array([-1, 1], np.int8), size=(X, Y, Z)))
+        s = lfsr_init(X * Y * Z, seed).reshape(X, Y, Z)
+        halos = tuple(jnp.zeros(sh, jnp.int8) for sh in self._halo_shapes())
+        st = LatticeState(m=m, s=s, halos=halos,
+                          sweep=jnp.zeros((), jnp.int32),
+                          flips=jnp.zeros((), jnp.int32))
+        st = self.shard_state(st)
+        # one synchronizing exchange so the first sweeps see real halos
+        return self._refresh_halos(st)
+
+    def shard_state(self, st: LatticeState) -> LatticeState:
+        put = jax.device_put
+        return LatticeState(
+            m=put(st.m, self._shard(self.spec_m)),
+            s=put(st.s, self._shard(self.spec_m)),
+            halos=tuple(put(hh, self._shard(sp))
+                        for hh, sp in zip(st.halos, self.halo_specs)),
+            sweep=put(st.sweep, self._shard(P())),
+            flips=put(st.flips, self._shard(P())))
+
+    def _refresh_halos(self, st: LatticeState) -> LatticeState:
+        def block(m):
+            xlo, xhi, ylo, yhi, zlo, zhi = self._exchange_block(m)
+            return (xlo[None], xhi[None], ylo[:, None, :], yhi[:, None, :],
+                    zlo[:, :, None], zhi[:, :, None])
+        halos = jax.jit(jax.shard_map(
+            block, mesh=self.mesh, in_specs=(self.spec_m,),
+            out_specs=self.halo_specs, check_vma=False))(st.m)
+        return dataclasses.replace(st, halos=halos)
+
+    def run_recorded(self, state: LatticeState, schedule,
+                     record_points: Sequence[int], sync_every: int = 1):
+        S = int(sync_every)
+        pts = sorted(set(max(S, int(round(pp / S)) * S) for pp in record_points))
+        betas = schedule.beta_array()
+        if len(betas) < pts[-1]:
+            raise ValueError("schedule shorter than last record point")
+        out, times, pos = [], [], 0
+        for c in chunk_plan([pp // S for pp in pts]):
+            nsw = c * S
+            bchunk = jnp.asarray(betas[pos:pos + nsw]).reshape(c, S)
+            state = self._run_chunk(c, S)(state, bchunk, self.p.masks,
+                                          self.p.h, self.p.w6)
+            pos += nsw
+            if pos in set(pts):
+                out.append(self.energy(state))
+                times.append(pos)
+        return state, (np.asarray(times), jnp.stack(out))
+
+    # -- observables -----------------------------------------------------------------------
+
+    def energy(self, state: LatticeState) -> jnp.ndarray:
+        """True global energy (halos refreshed for the readout)."""
+        if self._energy_fn is None:
+            axes_all = self._axes_all()
+
+            def block(m, active, h, w6):
+                halos = self._exchange_block(m)
+                e = brick_energy_op(m, active, h, w6, halos,
+                                    bx=self.kernel_bx, impl=self.impl)
+                return jax.lax.psum(e, axes_all) if axes_all else e
+
+            self._energy_fn = jax.jit(jax.shard_map(
+                block, mesh=self.mesh,
+                in_specs=(self.spec_m, self.spec_m, self.spec_m,
+                          tuple(self.spec_m for _ in range(6))),
+                out_specs=P(), check_vma=False))
+        return self._energy_fn(state.m, self.p.active, self.p.h, self.p.w6)
+
+    # -- dry-run hook -----------------------------------------------------------------------
+
+    def lower_chunk(self, iters: int = 2, S: int = 4):
+        run = self._run_chunk(iters, S)
+
+        def sds(x, spec):
+            return jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                        sharding=self._shard(spec))
+        p = self.p
+        X, Y, Z = p.dims
+        st = LatticeState(
+            m=jax.ShapeDtypeStruct((X, Y, Z), jnp.int8,
+                                   sharding=self._shard(self.spec_m)),
+            s=jax.ShapeDtypeStruct((X, Y, Z), jnp.uint32,
+                                   sharding=self._shard(self.spec_m)),
+            halos=tuple(jax.ShapeDtypeStruct(tuple(sh), jnp.int8,
+                                             sharding=self._shard(sp))
+                        for sh, sp in zip(self._halo_shapes(), self.halo_specs)),
+            sweep=jax.ShapeDtypeStruct((), jnp.int32, sharding=self._shard(P())),
+            flips=jax.ShapeDtypeStruct((), jnp.int32, sharding=self._shard(P())),
+        )
+        betas = jax.ShapeDtypeStruct((iters, S), jnp.float32,
+                                     sharding=self._shard(P()))
+        masks = sds(p.masks, self.spec_masks)
+        h = sds(p.h, self.spec_m)
+        w6 = tuple(sds(w, self.spec_m) for w in p.w6)
+        return run.lower(st, betas, masks, h, w6)

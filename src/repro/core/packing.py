@@ -1,0 +1,39 @@
+"""1-bit packing of boundary p-bit states.
+
+The paper's architecture ships exactly 1 bit per boundary p-bit.  TPU ICI
+moves bytes, so the distributed backend packs +-1 spins into uint8 lanes
+before the boundary all-gather; the roofline collective term then counts the
+packed size (N/8 bytes), faithful to the paper's traffic accounting.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = ["pad_to_multiple", "pack_pm1", "unpack_pm1"]
+
+# numpy constant: creating a jnp array at import time leaks a tracer if the
+# first import happens inside an active trace (e.g. lazy import under jit)
+_POW2 = np.asarray([1, 2, 4, 8, 16, 32, 64, 128], dtype=np.uint8)
+
+
+def pad_to_multiple(n: int, k: int = 8) -> int:
+    return ((n + k - 1) // k) * k
+
+
+def pack_pm1(x: jnp.ndarray) -> jnp.ndarray:
+    """Pack +-1 int8 spins (last dim, multiple of 8) into uint8 bitmaps."""
+    *lead, n = x.shape
+    if n % 8 != 0:
+        raise ValueError("last dim must be a multiple of 8")
+    bits = (x > 0).astype(jnp.uint8).reshape(*lead, n // 8, 8)
+    return (bits * _POW2).sum(axis=-1).astype(jnp.uint8)
+
+
+def unpack_pm1(p: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_pm1`; returns +-1 int8 of last-dim size n."""
+    *lead, nb = p.shape
+    bits = (p[..., :, None] & _POW2) > 0
+    out = jnp.where(bits, 1, -1).astype(jnp.int8).reshape(*lead, nb * 8)
+    return out[..., :n]

@@ -1,0 +1,96 @@
+"""The p-bit update rule and its numeric-format options.
+
+Paper Sec. II:  m_i = sgn[tanh(I_i) + r],  r ~ U(-1, 1),
+I_i = beta * (h_i + sum_j J_ij m_j).
+
+Numeric formats (paper Methods): the GPU baseline uses floating point +
+Philox; the hardware uses fixed point s{a}{b} + on-chip LFSRs.  Both are
+first-class here: ``rng='philox'`` uses jax.random, ``rng='lfsr'`` uses a
+vectorized xorshift32 (one 32-bit LFSR state per p-bit, mirroring the
+hardware's per-p-bit LFSR fabric).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FixedPoint", "quantize", "pbit_update", "lfsr_init", "lfsr_next",
+           "lfsr_uniform", "S41", "S43", "S46"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPoint:
+    """Signed fixed point s{int_bits}{frac_bits}: step 2^-frac, saturating."""
+
+    int_bits: int
+    frac_bits: int
+
+    @property
+    def step(self) -> float:
+        return 2.0 ** (-self.frac_bits)
+
+    @property
+    def lo(self) -> float:
+        return -(2.0 ** self.int_bits)
+
+    @property
+    def hi(self) -> float:
+        return 2.0 ** self.int_bits - self.step
+
+
+S41 = FixedPoint(4, 1)  # EA benchmarks
+S43 = FixedPoint(4, 3)  # Pegasus / Zephyr / 3SAT
+S46 = FixedPoint(4, 6)  # G81 adaptive parallel tempering
+
+
+def quantize(x: jnp.ndarray, fmt: Optional[FixedPoint]) -> jnp.ndarray:
+    """Round-to-nearest + saturate to the fixed-point grid (no-op if fmt None)."""
+    if fmt is None:
+        return x
+    q = jnp.round(x / fmt.step) * fmt.step
+    return jnp.clip(q, fmt.lo, fmt.hi)
+
+
+def pbit_update(field: jnp.ndarray, beta, rand_u: jnp.ndarray,
+                fmt: Optional[FixedPoint] = None) -> jnp.ndarray:
+    """One synchronous p-bit update for an independent (same-color) set.
+
+    ``field`` is h + sum_j J_ij m_j (pre-beta); ``rand_u`` uniform in (-1, 1).
+    Returns int8 spins in {-1, +1}.
+    """
+    act = quantize(beta * field, fmt)
+    val = jnp.tanh(act) + rand_u
+    # sgn with the (measure-zero) tie broken toward +1
+    return jnp.where(val >= 0, 1, -1).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# LFSR (xorshift32) — the hardware RNG, vectorized one state per p-bit
+# ---------------------------------------------------------------------------
+
+def lfsr_init(n: int, seed: int) -> jnp.ndarray:
+    """Nonzero uint32 states, seeded reproducibly (host-side splitmix64)."""
+    rng = np.random.default_rng(np.uint64(seed) ^ np.uint64(0x9E3779B97F4A7C15))
+    s = rng.integers(1, 2 ** 32, size=n, dtype=np.uint32)
+    return jnp.asarray(s)
+
+
+def lfsr_next(state: jnp.ndarray) -> jnp.ndarray:
+    """xorshift32 step (Marsaglia); acts elementwise on uint32 states."""
+    s = state
+    s = s ^ (s << jnp.uint32(13))
+    s = s ^ (s >> jnp.uint32(17))
+    s = s ^ (s << jnp.uint32(5))
+    return s
+
+
+def lfsr_uniform(state: jnp.ndarray) -> jnp.ndarray:
+    """Map uint32 state -> uniform float32 in (-1, 1)."""
+    # keep 24 mantissa-safe bits
+    bits = (state >> jnp.uint32(8)).astype(jnp.float32)
+    return bits * jnp.float32(2.0 / 16777216.0) - jnp.float32(1.0)

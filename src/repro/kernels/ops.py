@@ -1,0 +1,47 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``impl`` selection:
+  'pallas'    — real Pallas lowering (TPU target).
+  'interpret' — Pallas interpreter (CPU correctness validation).
+  'ref'       — the pure-jnp oracle (fast CPU path; numerically identical).
+  'auto'      — 'pallas' on TPU backends, 'ref' elsewhere.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core.pbit import FixedPoint
+from . import pbit_lattice, lattice_energy, ref as _ref
+
+__all__ = ["pbit_update_op", "brick_energy_op", "default_impl"]
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _resolve(impl: str) -> str:
+    return default_impl() if impl == "auto" else impl
+
+
+def pbit_update_op(m, s, beta, parity_mask, h, w6, halos,
+                   fmt: Optional[FixedPoint] = None,
+                   bx: Optional[int] = None, impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.pbit_brick_update_ref(m, s, beta, parity_mask, h, w6, halos, fmt)
+    return pbit_lattice.pbit_brick_update(
+        m, s, beta, parity_mask, h, w6, halos, fmt=fmt, bx=bx,
+        interpret=(impl == "interpret"))
+
+
+def brick_energy_op(m, active, h, w6, halos, bx: Optional[int] = None,
+                    impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.brick_energy_ref(m, active, h, w6, halos)
+    return lattice_energy.brick_energy(
+        m, active, h, w6, halos, bx=bx, interpret=(impl == "interpret"))

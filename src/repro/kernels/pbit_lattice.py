@@ -1,0 +1,146 @@
+"""Fused p-bit color-update Pallas kernel for 3D lattice bricks.
+
+This is the compute hot-spot of the paper's machine: for every site of one
+color group, gather the six neighbor spins, accumulate the local field from
+on-chip weights, draw an LFSR random number, threshold a (quantized) tanh,
+and write the new spin — all in one pass, exactly what one FPGA clock does
+for a color group.
+
+TPU adaptation (DESIGN.md): the FPGA's hardwired neighbor fabric becomes
+shifted-plane reads of a VMEM-resident brick; the per-p-bit LFSR column
+becomes a vectorized xorshift32 lane; s{4}{1} fixed point becomes a
+round+clip on the activation.  The brick's x extent is tiled by BlockSpec
+(grid over x-slabs); neighbor access across tile boundaries uses the
+standard shifted-index-map halo pattern (the same input bound three times at
+block indices i-1, i, i+1), and physical brick boundaries use explicit halo
+planes produced by the inter-device ppermute exchange.
+
+All operands of one grid step fit in VMEM: for a (bx, By, Bz) tile the
+working set is 7 f32 weight/bias tiles + 3 int8 spin tiles + 1 u32 LFSR tile
++ 6 halo planes ~= (32 + 4) * bx*By*Bz bytes; the default bx keeps this
+under 4 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.pbit import FixedPoint
+
+__all__ = ["pbit_brick_update"]
+
+
+def _kernel(parity_ref, beta_ref,
+            h_ref, wxm_ref, wxp_ref, wym_ref, wyp_ref, wzm_ref, wzp_ref,
+            m_l_ref, m_c_ref, m_r_ref,
+            xlo_ref, xhi_ref, ylo_ref, yhi_ref, zlo_ref, zhi_ref,
+            s_ref,
+            m_out_ref, s_out_ref,
+            *, fmt: Optional[FixedPoint], nblocks: int):
+    i = pl.program_id(0)
+    f32 = jnp.float32
+    mc_raw = m_c_ref[...]
+    mc = mc_raw.astype(f32)
+
+    # x-direction neighbors: interior from the shifted blocks, edges from halos
+    left_plane = jnp.where(i == 0, xlo_ref[...].astype(f32)[None],
+                           m_l_ref[...][-1:].astype(f32))
+    right_plane = jnp.where(i == nblocks - 1, xhi_ref[...].astype(f32)[None],
+                            m_r_ref[...][:1].astype(f32))
+    xm = jnp.concatenate([left_plane, mc[:-1]], axis=0)
+    xp = jnp.concatenate([mc[1:], right_plane], axis=0)
+    # y / z neighbors: in-tile shifts with per-tile halo planes
+    ym = jnp.concatenate([ylo_ref[...].astype(f32)[:, None, :], mc[:, :-1]], axis=1)
+    yp = jnp.concatenate([mc[:, 1:], yhi_ref[...].astype(f32)[:, None, :]], axis=1)
+    zm = jnp.concatenate([zlo_ref[...].astype(f32)[:, :, None], mc[:, :, :-1]], axis=2)
+    zp = jnp.concatenate([mc[:, :, 1:], zhi_ref[...].astype(f32)[:, :, None]], axis=2)
+
+    field = (h_ref[...]
+             + wxm_ref[...] * xm + wxp_ref[...] * xp
+             + wym_ref[...] * ym + wyp_ref[...] * yp
+             + wzm_ref[...] * zm + wzp_ref[...] * zp)
+
+    # free-running per-site LFSR (every site advances every phase, like the
+    # hardware's always-on LFSR columns)
+    s = s_ref[...]
+    s = s ^ (s << jnp.uint32(13))
+    s = s ^ (s >> jnp.uint32(17))
+    s = s ^ (s << jnp.uint32(5))
+    r = (s >> jnp.uint32(8)).astype(f32) * f32(2.0 / 16777216.0) - f32(1.0)
+
+    act = beta_ref[0, 0] * field
+    if fmt is not None:
+        act = jnp.clip(jnp.round(act / fmt.step) * fmt.step, fmt.lo, fmt.hi)
+    upd = jnp.where(jnp.tanh(act) + r >= 0, 1, -1).astype(jnp.int8)
+    mask = parity_ref[...] != 0
+    m_out_ref[...] = jnp.where(mask, upd, mc_raw)
+    s_out_ref[...] = s
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "bx", "interpret"))
+def pbit_brick_update(m, s, beta, parity_mask, h, w6, halos,
+                      fmt: Optional[FixedPoint] = None,
+                      bx: Optional[int] = None,
+                      interpret: bool = True):
+    """One fused color-phase update of a lattice brick.
+
+    Args:
+      m: (Bx, By, Bz) int8 spins.
+      s: (Bx, By, Bz) uint32 LFSR states.
+      beta: scalar f32 inverse temperature.
+      parity_mask: (Bx, By, Bz) int8 — 1 where this color updates (also folds
+        the active-site mask for padded lattices).
+      h: (Bx, By, Bz) f32 biases.
+      w6: tuple (wxm, wxp, wym, wyp, wzm, wzp), each (Bx, By, Bz) f32 —
+        coupling to the -x/+x/-y/+y/-z/+z neighbor (0 on open boundaries);
+        cross-device couplings appear on both sides (shadow weights).
+      halos: tuple (xlo (By,Bz), xhi (By,Bz), ylo (Bx,Bz), yhi (Bx,Bz),
+        zlo (Bx,By), zhi (Bx,By)) int8 neighbor boundary planes.
+      fmt: optional fixed-point format for the activation (s{4}{1} etc).
+      bx: x tile size (defaults to whole brick).
+      interpret: run the Pallas interpreter (CPU validation); False on TPU.
+
+    Returns: (m_new, s_new).
+    """
+    Bx, By, Bz = m.shape
+    bx = Bx if bx is None else bx
+    if Bx % bx != 0:
+        raise ValueError(f"Bx={Bx} not divisible by tile bx={bx}")
+    nb = Bx // bx
+    wxm, wxp, wym, wyp, wzm, wzp = w6
+    xlo, xhi, ylo, yhi, zlo, zhi = halos
+    beta_arr = jnp.asarray(beta, jnp.float32).reshape(1, 1)
+
+    blk = (bx, By, Bz)
+    cur = pl.BlockSpec(blk, lambda i: (i, 0, 0))
+    prv = pl.BlockSpec(blk, lambda i: (jnp.maximum(i - 1, 0), 0, 0))
+    nxt = pl.BlockSpec(blk, lambda i: (jnp.minimum(i + 1, nb - 1), 0, 0))
+    full2 = lambda a, b: pl.BlockSpec((a, b), lambda i: (0, 0))
+    xtile = lambda b2: pl.BlockSpec((bx, b2), lambda i: (i, 0))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, fmt=fmt, nblocks=nb),
+        grid=(nb,),
+        in_specs=[
+            cur,                      # parity_mask
+            full2(1, 1),              # beta
+            cur, cur, cur, cur, cur, cur, cur,   # h + 6 weights
+            prv, cur, nxt,            # m at i-1, i, i+1
+            full2(By, Bz), full2(By, Bz),        # xlo, xhi
+            xtile(Bz), xtile(Bz),     # ylo, yhi
+            xtile(By), xtile(By),     # zlo, zhi
+            cur,                      # lfsr state
+        ],
+        out_specs=[cur, cur],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bx, By, Bz), jnp.int8),
+            jax.ShapeDtypeStruct((Bx, By, Bz), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(parity_mask, beta_arr, h, wxm, wxp, wym, wyp, wzm, wzp,
+      m, m, m, xlo, xhi, ylo, yhi, zlo, zhi, s)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels (no pallas imports).
+
+Same math, whole-array formulation.  The kernel tests assert exact agreement
+(identical op sequences -> bitwise-equal int8/uint32 outputs, allclose f32).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.pbit import FixedPoint
+
+__all__ = ["pbit_brick_update_ref", "brick_energy_ref", "neighbor_sums_ref"]
+
+
+def _shifted(m, halos):
+    """Assemble the 6 neighbor arrays of a brick from halo planes."""
+    f32 = jnp.float32
+    xlo, xhi, ylo, yhi, zlo, zhi = [a.astype(f32) for a in halos]
+    mc = m.astype(f32)
+    xm = jnp.concatenate([xlo[None], mc[:-1]], axis=0)
+    xp = jnp.concatenate([mc[1:], xhi[None]], axis=0)
+    ym = jnp.concatenate([ylo[:, None, :], mc[:, :-1]], axis=1)
+    yp = jnp.concatenate([mc[:, 1:], yhi[:, None, :]], axis=1)
+    zm = jnp.concatenate([zlo[:, :, None], mc[:, :, :-1]], axis=2)
+    zp = jnp.concatenate([mc[:, :, 1:], zhi[:, :, None]], axis=2)
+    return xm, xp, ym, yp, zm, zp
+
+
+def neighbor_sums_ref(m, h, w6, halos):
+    wxm, wxp, wym, wyp, wzm, wzp = w6
+    xm, xp, ym, yp, zm, zp = _shifted(m, halos)
+    return (h + wxm * xm + wxp * xp + wym * ym + wyp * yp
+            + wzm * zm + wzp * zp)
+
+
+def pbit_brick_update_ref(m, s, beta, parity_mask, h, w6, halos,
+                          fmt: Optional[FixedPoint] = None):
+    field = neighbor_sums_ref(m, h, w6, halos)
+    s = s ^ (s << jnp.uint32(13))
+    s = s ^ (s >> jnp.uint32(17))
+    s = s ^ (s << jnp.uint32(5))
+    r = (s >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0 / 16777216.0) \
+        - jnp.float32(1.0)
+    act = jnp.asarray(beta, jnp.float32) * field
+    if fmt is not None:
+        act = jnp.clip(jnp.round(act / fmt.step) * fmt.step, fmt.lo, fmt.hi)
+    upd = jnp.where(jnp.tanh(act) + r >= 0, 1, -1).astype(jnp.int8)
+    m_new = jnp.where(parity_mask != 0, upd, m)
+    return m_new, s
+
+
+def brick_energy_ref(m, active, h, w6, halos):
+    field = neighbor_sums_ref(m, h, w6, halos)
+    mc = m.astype(jnp.float32)
+    e = (-0.5 * mc * (field - h) - h * mc) * active.astype(jnp.float32)
+    return e.sum()

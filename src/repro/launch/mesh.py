@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Single pod = 16x16 = 256 chips (TPU v5e pod), axes ('data', 'model').
+Multi-pod = 2 pods = (2, 16, 16) = 512 chips, axes ('pod', 'data', 'model').
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state (required so smoke tests see 1 device).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_mesh_shape"]
+
+
+def make_mesh_shape(multi_pod: bool = False):
+    if multi_pod:
+        return (2, 16, 16), ("pod", "data", "model")
+    return (16, 16), ("data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape, axes = make_mesh_shape(multi_pod)
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devs)} — the "
+            f"dry-run entrypoint must set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            f"any jax import")
+    try:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+                             devices=devs[:n])
+    except TypeError:
+        # older signatures: fall back to explicit Mesh
+        return Mesh(np.asarray(devs[:n]).reshape(shape), axes)

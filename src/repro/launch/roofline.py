@@ -1,0 +1,370 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs / (chips * 197e12 FLOP/s bf16)
+  memory term     = HLO_bytes / (chips * 819e9 B/s HBM)
+  collective term = wire_bytes_per_chip / 50e9 B/s per ICI link
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (whole-program, i.e.
+already the global totals).  Collective bytes are NOT in cost_analysis:
+we parse ``compiled.as_text()``, summing the shapes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, multiplied
+by the trip count of every enclosing while loop (jax `scan`s compile to
+whiles; the trip count is recovered from the loop-condition region's
+comparison constant).  Ring-transfer accounting per chip:
+
+  all-gather      result_bytes * (K-1)/K        (receives everyone's shard)
+  reduce-scatter  operand_bytes * (K-1)/K
+  all-reduce      2 * result_bytes * (K-1)/K    (RS + AG)
+  all-to-all      result_bytes * (K-1)/K
+  collective-permute  result_bytes
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HW", "collective_bytes", "roofline", "RooflineReport",
+           "parse_collectives"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12     # bf16 / chip
+    hbm_bw: float = 819e9          # B/s / chip
+    ici_bw: float = 50e9           # B/s / link
+    hbm_bytes: float = 16e9        # v5e capacity
+
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every dtype[shape] group in an HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)[\s(].*\{\s*$", line)
+        if m and not line.startswith(" "):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _entry_name(hlo: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+    return m.group(1) if m else None
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Heuristic: max s32/u32 constant in the while-condition region."""
+    best = 1
+    for line in cond_lines:
+        for m in re.finditer(r"[su]32\[\]\s+constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def parse_collectives(hlo: str) -> List[dict]:
+    """Per-collective records with while-loop multiplicity applied."""
+    comps = _split_computations(hlo)
+    entry = _entry_name(hlo)
+
+    # while ops: body/condition computation references
+    whiles: Dict[str, List[Tuple[str, str]]] = {k: [] for k in comps}
+    for name, lines in comps.items():
+        for line in lines:
+            m = re.search(r"while\(.*?\)"
+                          r".*condition=%?([\w\.\-]+).*body=%?([\w\.\-]+)",
+                          line)
+            if m:
+                whiles[name].append((m.group(1), m.group(2)))
+
+    # multiplicity via DFS from entry
+    mult: Dict[str, int] = {}
+
+    def visit(name: str, m: int):
+        mult[name] = mult.get(name, 0) + m
+        for cond, body in whiles.get(name, ()):
+            trips = _trip_count(comps.get(cond, []))
+            visit(body, m * trips)
+
+    if entry:
+        visit(entry, 1)
+
+    out = []
+    for name, lines in comps.items():
+        m = mult.get(name, 0)
+        if m == 0:
+            continue
+        for line in lines:
+            for kind in _COLL_KINDS:
+                if re.search(rf"\s{kind}(?:-start)?\(", line):
+                    # result type = everything between '=' and the op name
+                    rhs = line.split("=", 1)
+                    if len(rhs) != 2:
+                        continue
+                    lhs_type = rhs[1].split(f"{kind}")[0]
+                    size = _shape_bytes(lhs_type)
+                    k = _group_size(line)
+                    out.append({"kind": kind, "bytes": size, "group": k,
+                                "mult": m, "comp": name})
+                    break
+    return out
+
+
+def _group_size(line: str) -> int:
+    # explicit format: replica_groups={{0,1,2,3},{...}}
+    g = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if g:
+        return len(g.group(1).split(","))
+    # iota format: replica_groups=[G,S]<=[...]
+    g = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if g:
+        return int(g.group(2))
+    # collective-permute has source_target_pairs instead
+    if "source_target_pairs" in line:
+        return 2
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# text-based per-program cost model
+#
+# XLA's HloCostAnalysis (compiled.cost_analysis()) visits every computation
+# ONCE — it does not multiply while-loop bodies by their trip count, so a
+# scanned L-layer model reports ~1/L of its true FLOPs.  We therefore walk
+# the HLO text ourselves: symbol table per computation (name -> shape),
+# dot/convolution FLOPs, naive operand+result HBM bytes per op (the same
+# convention HloCostAnalysis uses), multiplied by loop multiplicity.
+# ---------------------------------------------------------------------------
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPND_RE = re.compile(r"%([\w\.\-]+)")
+_SKIP_OPS = ("parameter(", "constant(", "get-tuple-element(", "tuple(",
+             "bitcast(", "after-all(", "custom-call(")
+# ops whose operand/result traffic actually hits HBM on TPU; standalone
+# elementwise ops in the CPU-lowered HLO would be fused into neighbors by
+# XLA:TPU, so counting them would systematically inflate the memory term
+_MEM_OPS = frozenset({
+    "dot", "convolution", "fusion", "copy", "transpose",
+    "gather", "scatter", "dynamic-update-slice", "dynamic-slice", "slice",
+    "reduce", "reduce-window", "sort", "select-and-scatter", "concatenate",
+    "pad", "all-gather", "all-reduce", "reduce-scatter",
+    "all-to-all", "collective-permute", "rng", "rng-bit-generator",
+})
+
+
+def _op_name(rest: str) -> str:
+    # rest looks like: "f32[2,3]{1,0} add(%a, %b), meta..."
+    m = re.search(r"\}?\s([a-z][\w\-]*)\(", rest)
+    return m.group(1) if m else ""
+
+
+def _parse_dims(rest: str):
+    m = _SHAPE_RE.search(rest)
+    if not m:
+        return None, None
+    dt, dims = m.group(1), m.group(2)
+    shape = [int(d) for d in dims.split(",") if d]
+    return dt, shape
+
+
+def _region_cost(lines: List[str]):
+    """(flops, bytes) of one computation body (single visit)."""
+    sym: Dict[str, int] = {}        # name -> result bytes
+    shp: Dict[str, list] = {}       # name -> result dims (first array only)
+    flops = 0.0
+    byts = 0.0
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        sym[name] = _shape_bytes(rest.split("(")[0] if "(" in rest else rest)
+        dt, dims = _parse_dims(rest)
+        shp[name] = dims or []
+        if any(rest.lstrip().startswith(s) or f" {s}" in rest
+               for s in _SKIP_OPS):
+            continue
+        op = _op_name(rest)
+        if not op:
+            continue
+        body = rest.split("(", 1)[1] if "(" in rest else ""
+        body = body.split("), ")[0]
+        operands = _OPND_RE.findall(body)
+        if op in _MEM_OPS:
+            # traffic: result + operands (HloCostAnalysis convention),
+            # restricted to ops that hit HBM on TPU (see _MEM_OPS)
+            byts += sym[name] + sum(sym.get(o, 0) for o in operands)
+        if op == "dot":
+            res = shp.get(name) or []
+            cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+            lhs = shp.get(operands[0]) if operands else None
+            csize = 1
+            if cdims and lhs:
+                for d in cdims.group(1).split(","):
+                    if d:
+                        csize *= lhs[int(d)]
+            n = 1
+            for d in res:
+                n *= d
+            flops += 2.0 * n * csize
+        elif op == "convolution":
+            # approx: 2 * out_elems * (in_ch/feature_group * prod(kernel))
+            res = shp.get(name) or []
+            n = 1
+            for d in res:
+                n *= d
+            ker = shp.get(operands[1]) if len(operands) > 1 else None
+            k = 1
+            if ker:
+                for d in ker[:-1]:
+                    k *= d
+            flops += 2.0 * n * k
+    return flops, byts
+
+
+def program_cost(hlo: str) -> Tuple[float, float]:
+    """(flops, hbm_bytes) with while-loop multiplicity applied.
+
+    FLOPs follow while bodies, fusions/calls, and conditional branches;
+    bytes follow only while bodies and conditionals (a fusion's interior
+    traffic stays in VMEM — the parent's fusion-op line already counts its
+    boundary bytes)."""
+    comps = _split_computations(hlo)
+    entry = _entry_name(hlo)
+    whiles: Dict[str, List[Tuple[str, str]]] = {k: [] for k in comps}
+    calls: Dict[str, List[str]] = {k: [] for k in comps}
+    branches: Dict[str, List[str]] = {k: [] for k in comps}
+    for name, lines in comps.items():
+        for line in lines:
+            m = re.search(r"while\(.*?\).*condition=%?([\w\.\-]+)"
+                          r".*body=%?([\w\.\-]+)", line)
+            if m:
+                whiles[name].append((m.group(1), m.group(2)))
+                continue
+            for cm in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", line):
+                calls[name].append(cm.group(1))
+            bm = re.search(r"branch_computations=\{([^}]*)\}", line)
+            if bm:
+                branches[name].extend(
+                    x.strip().lstrip("%") for x in bm.group(1).split(","))
+            for key in ("true_computation", "false_computation"):
+                km = re.search(rf"{key}=%?([\w\.\-]+)", line)
+                if km:
+                    branches[name].append(km.group(1))
+
+    mult_f: Dict[str, int] = {}
+    mult_b: Dict[str, int] = {}
+
+    def visit(name: str, m: int, for_flops: bool):
+        tab = mult_f if for_flops else mult_b
+        tab[name] = tab.get(name, 0) + m
+        for cond, body in whiles.get(name, ()):
+            visit(body, m * _trip_count(comps.get(cond, [])), for_flops)
+        for callee in branches.get(name, ()):
+            visit(callee, m, for_flops)
+        if for_flops:
+            for callee in calls.get(name, ()):
+                visit(callee, m, for_flops)
+
+    if entry:
+        visit(entry, 1, True)
+        visit(entry, 1, False)
+    flops = byts = 0.0
+    for name, lines in comps.items():
+        f, b = _region_cost(lines)
+        flops += mult_f.get(name, 0) * f
+        byts += mult_b.get(name, 0) * b
+    return flops, byts
+
+
+def collective_bytes(hlo: str) -> Tuple[float, dict]:
+    """Wire bytes per chip (ring accounting) + per-kind breakdown."""
+    per_kind: Dict[str, float] = {}
+    total = 0.0
+    for rec in parse_collectives(hlo):
+        k = max(rec["group"], 1)
+        ring = (k - 1) / k if k > 1 else 0.0
+        if rec["kind"] == "all-reduce":
+            b = 2.0 * rec["bytes"] * ring
+        elif rec["kind"] == "collective-permute":
+            b = float(rec["bytes"])
+        else:
+            b = rec["bytes"] * ring
+        b *= rec["mult"]
+        per_kind[rec["kind"]] = per_kind.get(rec["kind"], 0.0) + b
+        total += b
+    return total, per_kind
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops: float
+    bytes_accessed: float
+    wire_bytes: float
+    per_kind: dict
+    chips: int
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: Optional[float] = None
+
+    @property
+    def useful_ratio(self) -> Optional[float]:
+        if self.model_flops is None or self.flops == 0:
+            return None
+        return self.model_flops / self.flops
+
+    def as_dict(self) -> dict:
+        return {**dataclasses.asdict(self),
+                "useful_ratio": self.useful_ratio}
+
+
+def roofline(compiled, chips: int, hw: HW = HW(),
+             model_flops: Optional[float] = None,
+             hlo_text: Optional[str] = None) -> RooflineReport:
+    hlo = hlo_text if hlo_text is not None else compiled.as_text()
+    # per-device program costs with loop multiplicity (XLA's own
+    # cost_analysis() visits each computation once and so undercounts
+    # scanned models by ~n_layers; see program_cost docstring)
+    flops, byts = program_cost(hlo)
+    wire, per_kind = collective_bytes(hlo)
+    t_c = flops / hw.peak_flops
+    t_m = byts / hw.hbm_bw
+    t_x = wire / hw.ici_bw
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    return RooflineReport(
+        flops=flops, bytes_accessed=byts, wire_bytes=wire, per_kind=per_kind,
+        chips=chips, t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=max(terms, key=terms.get), model_flops=model_flops)

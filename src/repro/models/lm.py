@@ -1,0 +1,255 @@
+"""Causal LM and encoder-decoder model classes over scanned block groups."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import (init_rms, rms_norm, init_dense, dense, rope_freqs,
+                     init_kv_cache, KVCache, batch_hint, shard_hint,
+                     BATCH_AXES, residual_hint)
+from .blocks import BlockSpec, init_block, block_fwd, init_block_cache
+
+__all__ = ["CausalLM", "EncDecLM", "build_model", "cross_entropy"]
+
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def cross_entropy(logits, targets, mask):
+    """Mean next-token CE over masked positions; logits (B,S,V) any dtype."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - tgt) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+class CausalLM:
+    """Decoder-only LM (dense / SWA / MoE / Mamba2 / hybrid / VLM backbone)."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.freqs = jnp.asarray(rope_freqs(cfg.d_head or 64, cfg.rope_theta),
+                                 jnp.float32)
+
+    # -- params ---------------------------------------------------------------
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = cfg.compute_dtype
+        keys = jax.random.split(key, 4 + len(cfg.prelude))
+        p: dict = {
+            "embed": (jax.random.normal(keys[0], (cfg.vocab_padded, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(dtype),
+            "final_norm": init_rms(cfg.d_model, dtype),
+            "lm_head": init_dense(keys[1], cfg.d_model, cfg.vocab_padded, dtype),
+        }
+        for i, spec in enumerate(cfg.prelude):
+            p[f"prelude{i}"] = init_block(keys[4 + i], spec, cfg, dtype)
+        gkeys = jax.random.split(keys[2], cfg.n_groups)
+        groups = []
+        for g in range(cfg.n_groups):
+            bkeys = jax.random.split(gkeys[g], len(cfg.group))
+            groups.append(tuple(init_block(bkeys[b], spec, cfg, dtype)
+                                for b, spec in enumerate(cfg.group)))
+        p["groups"] = _stack_trees(groups)
+        return p
+
+    # -- caches ----------------------------------------------------------------
+
+    def init_cache(self, batch: int, s_max: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        pre = tuple(init_block_cache(spec, cfg, batch, s_max, dtype)
+                    for spec in cfg.prelude)
+        groups = []
+        for g in range(cfg.n_groups):
+            groups.append(tuple(init_block_cache(spec, cfg, batch, s_max, dtype)
+                                for spec in cfg.group))
+        return {"prelude": pre, "groups": _stack_trees(groups)}
+
+    # -- forward ----------------------------------------------------------------
+
+    def forward(self, params, tokens=None, *, embeds=None, positions=None,
+                caches=None, positions3=None, train: bool = False):
+        """Returns (logits, new_caches, aux_loss_sum)."""
+        cfg = self.cfg
+        if embeds is None:
+            x = jnp.take(params["embed"], tokens, axis=0)
+        else:
+            x = embeds.astype(cfg.compute_dtype)
+        x = batch_hint(x)
+        B, S = x.shape[:2]
+        if positions is None:
+            base = 0 if caches is None else _first_cache_pos(caches)
+            positions = base + jnp.arange(S)[None, :].astype(jnp.int32)
+            positions = jnp.broadcast_to(positions, (B, S))
+        aux = jnp.zeros((), jnp.float32)
+
+        new_pre = []
+        for i, spec in enumerate(cfg.prelude):
+            c = None if caches is None else caches["prelude"][i]
+            x, c, a = block_fwd(params[f"prelude{i}"], spec, cfg, x, positions,
+                                self.freqs, cache=c, positions3=positions3)
+            new_pre.append(c)
+            aux = aux + a
+
+        def group_body(x, scanned):
+            gp, gc = scanned
+            x = batch_hint(x)   # keep batch on the data axes (H2)
+            a_sum = jnp.zeros((), jnp.float32)
+            new_cs = []
+            for b, spec in enumerate(cfg.group):
+                c = None if gc is None else gc[b]
+
+                def one_block(x, c, gpb=gp[b], spec=spec):
+                    return block_fwd(gpb, spec, cfg, x, positions,
+                                     self.freqs, cache=c,
+                                     positions3=positions3)
+                if train and cfg.remat and len(cfg.group) == 1:
+                    # nested remat: backward holds one block's internals
+                    # at a time instead of the whole layer's (§Perf H6)
+                    one_block = jax.checkpoint(one_block)
+                x, c, a = one_block(x, c)
+                new_cs.append(c)
+                a_sum = a_sum + a
+            return x, (tuple(new_cs) if gc is not None else None, a_sum)
+
+        body = jax.checkpoint(group_body) if (train and cfg.remat) else group_body
+        gcaches = None if caches is None else caches["groups"]
+        x, (new_gc, auxs) = jax.lax.scan(
+            body, x, (params["groups"], gcaches))
+        aux = aux + auxs.sum()
+
+        x = batch_hint(rms_norm(params["final_norm"], x))
+        logits = dense(params["lm_head"], x)
+        # logits: batch on data axes, padded vocab on model (§Perf H3)
+        logits = shard_hint(logits, BATCH_AXES, None, "model")
+        new_caches = None
+        if caches is not None:
+            new_caches = {"prelude": tuple(new_pre), "groups": new_gc}
+        return logits, new_caches, aux
+
+    # -- losses -----------------------------------------------------------------
+
+    def loss(self, params, batch, train: bool = True):
+        logits, _, aux = self.forward(
+            params, batch.get("tokens"), embeds=batch.get("embeds"),
+            positions3=batch.get("positions3"), train=train)
+        ce = cross_entropy(logits[:, :-1], batch["targets"][:, 1:],
+                           batch["mask"][:, 1:].astype(jnp.float32))
+        return ce + 0.01 * aux
+
+
+def _first_cache_pos(caches):
+    """Base query position = tokens already cached (scalar, from any KVCache;
+    stacked group caches carry one pos per group — all equal, take [0])."""
+    for leaf in jax.tree.leaves(
+            caches, is_leaf=lambda x: isinstance(x, KVCache)):
+        if isinstance(leaf, KVCache):
+            p = leaf.pos
+            return p if p.ndim == 0 else p.reshape(-1)[0]
+    return jnp.zeros((), jnp.int32)
+
+
+class EncDecLM:
+    """Encoder-decoder (Seamless backbone): bidirectional encoder over stub
+    frame embeddings, causal decoder with cross-attention."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.freqs = jnp.asarray(rope_freqs(cfg.d_head, cfg.rope_theta),
+                                 jnp.float32)
+        self.enc_group = (BlockSpec("attn", "dense"),)
+        self.dec_group = (BlockSpec("attn", None), BlockSpec("cross_attn", "dense"))
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = cfg.compute_dtype
+        keys = jax.random.split(key, 6)
+        enc_groups, dec_groups = [], []
+        ekeys = jax.random.split(keys[0], cfg.enc_layers)
+        for g in range(cfg.enc_layers):
+            bk = jax.random.split(ekeys[g], 1)
+            enc_groups.append(tuple(init_block(bk[0], s, cfg, dtype)
+                                    for s in self.enc_group))
+        dkeys = jax.random.split(keys[1], cfg.n_groups)
+        for g in range(cfg.n_groups):
+            bk = jax.random.split(dkeys[g], len(self.dec_group))
+            dec_groups.append(tuple(init_block(bk[b], s, cfg, dtype)
+                                    for b, s in enumerate(self.dec_group)))
+        return {
+            "embed": (jax.random.normal(keys[2], (cfg.vocab_padded, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(dtype),
+            "enc_groups": _stack_trees(enc_groups),
+            "enc_norm": init_rms(cfg.d_model, dtype),
+            "dec_groups": _stack_trees(dec_groups),
+            "final_norm": init_rms(cfg.d_model, dtype),
+            "lm_head": init_dense(keys[3], cfg.d_model, cfg.vocab_padded, dtype),
+        }
+
+    def init_cache(self, batch: int, s_max: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        groups = []
+        for g in range(cfg.n_groups):
+            groups.append(tuple(init_block_cache(s, cfg, batch, s_max, dtype)
+                                for s in self.dec_group))
+        return {"groups": _stack_trees(groups)}
+
+    def encode(self, params, frames, train: bool = False):
+        cfg = self.cfg
+        x = frames.astype(cfg.compute_dtype)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+
+        def body(x, gp):
+            x = batch_hint(x)
+            for b, spec in enumerate(self.enc_group):
+                x, _, _ = block_fwd(gp[b], spec, cfg, x, positions, self.freqs,
+                                    causal=False)
+            return x, None
+        bodyf = jax.checkpoint(body) if (train and cfg.remat) else body
+        x, _ = jax.lax.scan(bodyf, x, params["enc_groups"])
+        return rms_norm(params["enc_norm"], x)
+
+    def decode(self, params, tokens, enc_out, caches=None, train: bool = False):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        B, S = x.shape[:2]
+        base = 0 if caches is None else _first_cache_pos(caches)
+        positions = base + jnp.arange(S)[None, :].astype(jnp.int32)
+        positions = jnp.broadcast_to(positions, (B, S))
+
+        def body(x, scanned):
+            gp, gc = scanned
+            x = batch_hint(x)
+            new_cs = []
+            for b, spec in enumerate(self.dec_group):
+                c = None if gc is None else gc[b]
+                x, c, _ = block_fwd(gp[b], spec, cfg, x, positions, self.freqs,
+                                    cache=c, enc_out=enc_out)
+                new_cs.append(c)
+            return x, (tuple(new_cs) if gc is not None else None)
+
+        bodyf = jax.checkpoint(body) if (train and cfg.remat) else body
+        gcaches = None if caches is None else caches["groups"]
+        x, new_gc = jax.lax.scan(bodyf, x, (params["dec_groups"], gcaches))
+        x = batch_hint(rms_norm(params["final_norm"], x))
+        logits = dense(params["lm_head"], x)
+        logits = shard_hint(logits, BATCH_AXES, None, "model")
+        return logits, (None if caches is None else {"groups": new_gc})
+
+    def loss(self, params, batch, train: bool = True):
+        enc = self.encode(params, batch["frames"], train=train)
+        logits, _ = self.decode(params, batch["tokens"], enc, train=train)
+        return cross_entropy(logits[:, :-1], batch["targets"][:, 1:],
+                             batch["mask"][:, 1:].astype(jnp.float32))
+
+
+def build_model(cfg):
+    return EncDecLM(cfg) if cfg.encdec else CausalLM(cfg)

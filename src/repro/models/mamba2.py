@@ -1,0 +1,190 @@
+"""Mamba-2 (state-space duality) block: chunked SSD for train/prefill and
+the exact recurrent update for decode.  [arXiv:2405.21060]
+
+Layout follows the reference implementation with n_groups = 1:
+  in_proj -> [z (d_inner), x (d_inner), B (d_state), C (d_state), dt (heads)]
+  causal conv1d(k=4) over the (x, B, C) channels
+  SSD over heads: h' = exp(dt*A) h + dt * B outer x ;  y = C . h + D x
+  gated RMSNorm(y * silu(z)) -> out_proj
+
+The chunked SSD computes the same recurrence with matmuls (MXU-friendly):
+intra-chunk quadratic attention-like term + inter-chunk state passing —
+this is the paper's "state-space dual" form.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import init_dense, dense, init_rms, rms_norm
+
+__all__ = ["init_mamba2", "mamba2_fwd", "Mamba2Cache", "init_mamba2_cache"]
+
+D_CONV = 4
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Mamba2Cache:
+    conv: jnp.ndarray    # (B, D_CONV-1, conv_channels) rolling conv window
+    ssm: jnp.ndarray     # (B, heads, headdim, d_state)
+
+
+def init_mamba2_cache(batch: int, d_inner: int, d_state: int, heads: int,
+                      headdim: int, dtype=jnp.bfloat16) -> Mamba2Cache:
+    conv_ch = d_inner + 2 * d_state
+    return Mamba2Cache(
+        conv=jnp.zeros((batch, D_CONV - 1, conv_ch), dtype),
+        ssm=jnp.zeros((batch, heads, headdim, d_state), jnp.float32))
+
+
+def init_mamba2(key, d_model: int, d_state: int, headdim: int = 64,
+                expand: int = 2, dtype=jnp.float32):
+    d_inner = expand * d_model
+    heads = d_inner // headdim
+    conv_ch = d_inner + 2 * d_state
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * d_inner + 2 * d_state + heads
+    rng = np.random.default_rng(42)
+    dt = np.exp(rng.uniform(np.log(1e-3), np.log(0.1), heads))
+    dt_bias = dt + np.log(-np.expm1(-dt))   # inverse softplus
+    return {
+        "in_proj": init_dense(ks[0], d_model, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (D_CONV, conv_ch), jnp.float32)
+                   * (1.0 / np.sqrt(D_CONV))).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.asarray(np.log(rng.uniform(1, 16, heads)), jnp.float32),
+        "D": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.asarray(dt_bias, jnp.float32),
+        "norm": init_rms(d_inner, dtype),
+        "out_proj": init_dense(ks[4], d_inner, d_model, dtype,
+                               scale=1.0 / np.sqrt(d_inner)),
+    }
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{k in (j, i]} x[..., k]."""
+    T = x.shape[-1]
+    x = jnp.repeat(x[..., None], T, axis=-1)
+    mask = jnp.tril(jnp.ones((T, T), bool), -1)
+    x = jnp.where(mask, x, 0)
+    x_seg = jnp.cumsum(x, axis=-2)
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, x_seg, -jnp.inf)
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    """x (b,l,h,p), dt (b,l,h) post-softplus, A (h,) negative, B/C (b,l,n).
+
+    Returns y (b,l,h,p), final_state (b,h,p,n).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    L = x.shape[1]
+    nc = L // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = Bv = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+    dA = dtc * A                                       # (b,nc,c,h)
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # 1. intra-chunk (diagonal block) output
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))   # (b,nc,h,c,c)
+    scores = jnp.einsum("bzin,bzjn,bzhij,bzjh->bzhij", Cc, Bc, Lmat, dtc)
+    y_diag = jnp.einsum("bzhij,bzjhp->bzihp", scores, xc)
+
+    # 2. chunk-final states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (b,nc,c,h)
+    states = jnp.einsum("bzch,bzcn,bzchp->bzhpn",
+                        decay_states * dtc, Bc, xc)      # (b,nc,h,p,n)
+
+    # 3. inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])            # (b,nc,h)
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                 # emit PRE-chunk state
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (b,nc,h,p,n)
+
+    # 4. state -> output within chunk
+    state_decay = jnp.exp(dA_cs)                          # (b,nc,c,h)
+    y_off = jnp.einsum("bzcn,bzhpn,bzch->bzchp",
+                       Cc, prev_states.astype(x.dtype), state_decay)
+    y = (y_diag.reshape(b, L, h, p) + y_off.reshape(b, L, h, p))
+    return y[:, :l], final
+
+
+def mamba2_fwd(p, x, *, d_state: int, headdim: int = 64, expand: int = 2,
+               chunk: int = 128, cache: Optional[Mamba2Cache] = None
+               ) -> Tuple[jnp.ndarray, Optional[Mamba2Cache]]:
+    """x (B, S, D) -> (y, new_cache).  cache given + S small => decode path
+    (exact recurrence); otherwise chunked SSD."""
+    Bsz, S, D = x.shape
+    d_inner = expand * D
+    heads = d_inner // headdim
+    zxbcdt = dense(p["in_proj"], x)
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + d_state,
+                 2 * d_inner + 2 * d_state], axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)      # (B,S,conv_ch)
+
+    new_cache = None
+    if cache is not None:
+        full = jnp.concatenate([cache.conv.astype(conv_in.dtype), conv_in],
+                               axis=1)                      # (B, S+3, ch)
+        new_conv = full[:, -(D_CONV - 1):]
+        conv = sum(full[:, i:i + S] * p["conv_w"].astype(conv_in.dtype)[i]
+                   for i in range(D_CONV)) + p["conv_b"].astype(conv_in.dtype)
+    else:
+        padded = jnp.pad(conv_in, ((0, 0), (D_CONV - 1, 0), (0, 0)))
+        conv = sum(padded[:, i:i + S] * p["conv_w"].astype(conv_in.dtype)[i]
+                   for i in range(D_CONV)) + p["conv_b"].astype(conv_in.dtype)
+    conv = jax.nn.silu(conv)
+    xs, Bs, Cs = jnp.split(conv, [d_inner, d_inner + d_state], axis=-1)
+    xs = xs.reshape(Bsz, S, heads, headdim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,h)
+    A = -jnp.exp(p["A_log"])                                      # (h,)
+
+    if cache is not None and S == 1:
+        # exact recurrent step
+        st = cache.ssm                                            # (B,h,p,n)
+        dA = jnp.exp(dt[:, 0] * A)                                # (B,h)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0],
+                         Bs[:, 0].astype(jnp.float32),
+                         xs[:, 0].astype(jnp.float32))
+        st = st * dA[:, :, None, None] + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Cs[:, 0].astype(jnp.float32), st)
+        y = y + p["D"][None, :, None] * xs[:, 0].astype(jnp.float32)
+        y = y[:, None].astype(x.dtype)                            # (B,1,h,p)
+        new_cache = Mamba2Cache(conv=new_conv, ssm=st)
+    else:
+        y, final = _ssd_chunked(xs, dt, A, Bs.astype(jnp.float32),
+                                Cs.astype(jnp.float32), chunk)
+        y = y + p["D"][None, None, :, None] * xs
+        y = y.astype(x.dtype)
+        if cache is not None:
+            new_cache = Mamba2Cache(conv=new_conv, ssm=final)
+
+    y = y.reshape(Bsz, S, d_inner)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z))
+    return dense(p["out_proj"], y), new_cache

@@ -1,0 +1,189 @@
+"""Sharding rules: logical tensor roles -> mesh PartitionSpecs.
+
+Axes: 'model' = tensor parallel, 'data' (+ 'pod' when present) = batch /
+FSDP.  Rules, per tensor role (leading n_groups scan dim gets None):
+
+  embed (V, D)            V->model (vocab padded to 128), D->data if fsdp
+  lm_head (D, V)          V->model, D->data if fsdp
+  attn wq/wk/wv (D, HDh)  dim1->model, dim0->data if fsdp (column parallel)
+  attn wo (HDh, D)        dim0->model, dim1->data if fsdp (row parallel)
+  mlp wi/wg (D, F)        F->model, D fsdp;  mlp wo (F, D) F->model, D fsdp
+  moe wi/wg (E, D, F)     F->model, D fsdp;  moe wo (E, F, D) same
+  moe router              replicated
+  mamba in/out proj       fsdp over D only (model axis idle in SSM blocks —
+                          head-parallel Mamba is a recorded §Perf candidate)
+  norms / scalar vectors  replicated
+
+Activations: batch dims -> ('pod','data'); KV caches: batch->data,
+kv-length->model (flash-decoding-style split-KV — what makes 32k/500k decode
+fit and parallelize); Mamba states: batch->data.
+
+Every dim is sharded only if divisible by the axis size (else replicated on
+that axis), so one rule set serves all 10 archs and any mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import KVCache
+from repro.models.mamba2 import Mamba2Cache
+
+__all__ = ["batch_axes", "params_shardings", "batch_shardings",
+           "cache_shardings", "opt_shardings", "train_state_shardings",
+           "spec_to_sharding"]
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _div(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    sizes = np.prod([mesh.shape[a] for a in
+                     ((axis,) if isinstance(axis, str) else axis)])
+    return dim % int(sizes) == 0
+
+
+def _maybe(dim, mesh, axis):
+    return axis if _div(dim, mesh, axis) else None
+
+
+def _param_spec(pathstr: str, shape: Tuple[int, ...], mesh: Mesh,
+                fsdp: bool, n_lead: int) -> P:
+    """n_lead = number of stacked scan dims to leave unsharded."""
+    lead = (None,) * n_lead
+    core = shape[n_lead:]
+    dax = "data" if fsdp else None
+
+    def sp(*axes_for_core):
+        fixed = tuple(_maybe(core[i], mesh, a)
+                      for i, a in enumerate(axes_for_core))
+        return P(*(lead + fixed))
+
+    if "embed" in pathstr:
+        return sp("model", dax)
+    if "lm_head" in pathstr:
+        return sp(dax, "model")
+    if any(k in pathstr for k in ("'wq'", "'wk'", "'wv'")):
+        return sp(dax, "model")
+    if "'wo'" in pathstr and "attn" in pathstr:
+        return sp("model", dax)
+    if "moe" in pathstr and "shared" not in pathstr:
+        if "router" in pathstr:
+            return P(*(lead + (None,) * len(core)))
+        if any(k in pathstr for k in ("'wi'", "'wg'")):
+            return sp(None, dax, "model")     # (E, D, F)
+        if "'wo'" in pathstr:
+            return sp(None, "model", dax)     # (E, F, D)
+    if any(k in pathstr for k in ("'wi'", "'wg'")):   # dense mlp (D, F)
+        return sp(dax, "model")
+    if "'wo'" in pathstr:                              # dense mlp (F, D)
+        return sp("model", dax)
+    if "mamba" in pathstr and any(k in pathstr for k in
+                                  ("in_proj", "out_proj")):
+        return sp(dax, None)
+    # norms, conv, A_log, dt_bias, router etc: replicate
+    return P(*(lead + (None,) * len(core)))
+
+
+def _n_lead_for(pathstr: str) -> int:
+    return 1 if ("groups" in pathstr) else 0
+
+
+def params_shardings(params: Any, mesh: Mesh, fsdp: bool):
+    def one(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        spec = _param_spec(ps, leaf.shape, mesh, fsdp, _n_lead_for(ps))
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_shardings(batch_tree: Any, mesh: Mesh):
+    baxes = batch_axes(mesh)
+
+    def one(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        if "positions3" in ps:
+            spec = P(None, _maybe(leaf.shape[1], mesh, baxes))
+        else:
+            spec = P(_maybe(leaf.shape[0], mesh, baxes))
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_shardings(caches: Any, mesh: Mesh):
+    """KV k/v (B, Hkv, S, Dh): B->data, S->model (split-KV decode).
+    Mamba conv (B, w, ch) / ssm (B, h, p, n): B->data.
+    Stacked group caches carry a leading n_groups dim."""
+
+    def one(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        n_lead = 1 if ".groups" in ps or "groups'" in ps else 0
+        lead = (None,) * n_lead
+        shape = leaf.shape[n_lead:]
+        if ".pos" in ps or leaf.ndim == n_lead:
+            return NamedSharding(mesh, P(*lead) if lead else P())
+        b_ax = _maybe(shape[0], mesh, "data")
+        if ".k" in ps or ".v" in ps:
+            s_ax = _maybe(shape[2], mesh, "model")
+            return NamedSharding(mesh, P(*(lead + (b_ax, None, s_ax, None))))
+        rest = (None,) * (len(shape) - 1)
+        return NamedSharding(mesh, P(*(lead + (b_ax,) + rest)))
+
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def _norm_spec(sh: NamedSharding, ndim: int):
+    spec = tuple(sh.spec) + (None,) * (ndim - len(sh.spec))
+    return spec[:ndim]
+
+
+def opt_shardings(opt_state: Any, param_sharding_tree: Any, mesh: Mesh,
+                  int8: bool):
+    """m/v shard like their parameter; int8 codes (..., L/128, 128) and
+    scales (..., L/128) inherit the param spec — the last param-dim spec
+    entry lands on the block-count dim (divisibility permitting)."""
+    import dataclasses as _dc
+    repl = NamedSharding(mesh, P())
+    if not int8:
+        return _dc.replace(
+            opt_state, step=repl,
+            m=param_sharding_tree, v=param_sharding_tree,
+            m_scale=None, v_scale=None)
+
+    def codes(sh, leaf):
+        spec = _norm_spec(sh, leaf.ndim - 1)
+        spec = tuple(a if _div(leaf.shape[i], mesh, a) else None
+                     for i, a in enumerate(spec))
+        return NamedSharding(mesh, P(*(spec + (None,))))
+
+    def scales(sh, leaf):
+        spec = _norm_spec(sh, leaf.ndim)
+        spec = tuple(a if _div(leaf.shape[i], mesh, a) else None
+                     for i, a in enumerate(spec))
+        return NamedSharding(mesh, P(*spec))
+
+    return _dc.replace(
+        opt_state, step=repl,
+        m=jax.tree.map(codes, param_sharding_tree, opt_state.m),
+        v=jax.tree.map(codes, param_sharding_tree, opt_state.v),
+        m_scale=jax.tree.map(scales, param_sharding_tree, opt_state.m_scale),
+        v_scale=jax.tree.map(scales, param_sharding_tree, opt_state.v_scale))
+
+
+def train_state_shardings(state, mesh: Mesh, fsdp: bool, int8: bool):
+    import dataclasses as _dc
+    pss = params_shardings(state.params, mesh, fsdp)
+    oss = opt_shardings(state.opt, pss, mesh, int8)
+    return _dc.replace(state, params=pss, opt=oss)
+
+
+def spec_to_sharding(mesh, tree_of_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,110 @@
+"""Fault-tolerant checkpointing with elastic resharding.
+
+- Atomic: write to a temp dir, fsync, rename; a crash mid-save never
+  corrupts the latest checkpoint.
+- Elastic: arrays are saved in GLOBAL layout (gathered host-side), restore
+  re-shards onto whatever mesh the restarted job brings up — a 512-chip run
+  can resume on 256 chips and vice versa (node-failure recovery path).
+- Async: ``save(..., blocking=False)`` snapshots to host then writes on a
+  background thread, overlapping I/O with the next training steps.
+- Retention: keeps the newest ``keep`` checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "wait_pending"]
+
+_pending: list = []
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        items[key] = leaf
+    return items, treedef
+
+
+def save(path: str, step: int, tree: Any, meta: Optional[dict] = None,
+         keep: int = 3, blocking: bool = True):
+    """Save a pytree of arrays under path/step_<N>/ atomically."""
+    items, _ = _flatten(tree)
+    host = {k: np.asarray(v) for k, v in items.items()}   # gather to host
+
+    def write():
+        final = os.path.join(path, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        manifest = {"step": int(step), "keys": sorted(host.keys()),
+                    "meta": meta or {}}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        _gc(path, keep)
+
+    if blocking:
+        write()
+    else:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        _pending.append(t)
+
+
+def wait_pending():
+    while _pending:
+        _pending.pop().join()
+
+
+def _gc(path: str, keep: int):
+    steps = sorted(d for d in os.listdir(path)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(path, d), ignore_errors=True)
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(path)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(path: str, template: Any, step: Optional[int] = None,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``template``; if ``shardings`` is a
+    pytree (or prefix) of NamedShardings, arrays are placed onto the new
+    mesh (elastic restart)."""
+    step = latest_step(path) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {path}")
+    d = os.path.join(path, f"step_{step:010d}")
+    data = np.load(os.path.join(d, "arrays.npz"))
+    items, treedef = _flatten(template)
+    leaves = []
+    for key, tmpl in items.items():
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {tmpl.shape}")
+        leaves.append(arr.astype(tmpl.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree

@@ -1,0 +1,74 @@
+"""Int8 error-feedback gradient all-reduce (beyond-paper distributed trick).
+
+Mirrors the paper's thesis — stochastic iterative optimization tolerates
+low-precision/stale communication — on the training side: gradients are
+blockwise-int8 quantized before crossing links, and the quantization error
+is fed back into the next step (EF-SGD), which preserves convergence.
+
+Wire format per tensor: int8 codes + one f32 scale per 128 block = ~26% of
+f32 traffic.  The collective is an all-gather of the quantized shards
+followed by a local dequant-sum (overflow-safe; bytes counted in §Roofline).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import q8_encode, q8_decode
+
+__all__ = ["ef_init", "ef_compressed_psum", "make_ef_allreduce"]
+
+
+def ef_init(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _compressed_mean_block(x, axis_name):
+    """Inside shard_map: per-device x -> mean over axis via int8 wire."""
+    q, s = q8_encode(x)
+    qg = jax.lax.all_gather(q, axis_name)            # (K, ..., blocks, 128)
+    sg = jax.lax.all_gather(s, axis_name)            # (K, ..., blocks)
+    dec = qg.astype(jnp.float32) * sg[..., None]
+    mean_blocks = dec.mean(axis=0)                   # (..., blocks, 128)
+    *lead, L = x.shape
+    return mean_blocks.reshape(*lead, -1)[..., :L]
+
+
+def ef_compressed_psum(grads, err, axis_name):
+    """(grads, err) -> (averaged grads, new err); call inside shard_map."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = q8_encode(g32)
+        local_dec = q8_decode(q, s, g32.shape)
+        new_e = g32 - local_dec                       # error feedback
+        avg = _compressed_mean_block(g32, axis_name)  # wire = int8 + scales
+        return avg, new_e
+    outer = jax.tree.structure(grads)
+    inner = jax.tree.structure((0, 1))
+    out = jax.tree.map(one, grads, err)
+    return jax.tree.transpose(outer, inner, out)
+
+
+def make_ef_allreduce(mesh, axis_name: str = "data"):
+    """jit-able compressed data-parallel gradient mean over ``axis_name``.
+
+    Takes replica-sharded (leading axis) grads + error state; returns the
+    averaged grads (replicated content, still leading-axis laid out) and the
+    per-replica error state.
+    """
+    from jax.sharding import PartitionSpec as P
+    rspec = P(axis_name)
+
+    def block(grads, err):
+        g1 = jax.tree.map(lambda x: x[0], grads)     # squeeze replica dim
+        e1 = jax.tree.map(lambda x: x[0], err)
+        avg, new_e = ef_compressed_psum(g1, e1, axis_name)
+        return (jax.tree.map(lambda x: x[None], avg),
+                jax.tree.map(lambda x: x[None], new_e))
+
+    return jax.jit(jax.shard_map(
+        block, mesh=mesh, in_specs=(rspec, rspec),
+        out_specs=(rspec, rspec), check_vma=False))

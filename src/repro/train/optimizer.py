@@ -1,0 +1,140 @@
+"""AdamW with fp32 or int8 block-quantized moments (no optax dependency).
+
+The int8 variant stores m and v as int8 with per-128-block absmax scales
+(8-bit-Adam style) — 2.5 bytes/param of optimizer state instead of 8, which
+is what lets grok-1-314b's train_4k cell fit 16 GB/chip on a single pod.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["AdamW", "OptState", "q8_encode", "q8_decode",
+           "clip_by_global_norm"]
+
+_BLOCK = 128
+
+
+def _pad_len(n: int) -> int:
+    return ((n + _BLOCK - 1) // _BLOCK) * _BLOCK
+
+
+def q8_encode(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(..., L) f32 -> codes (..., ceil(L/128), 128) int8 + scales
+    (..., ceil(L/128)) f32.  Blocking only the last dim preserves the
+    leading structure, so quantized optimizer state shards with the same
+    PartitionSpec as its parameter (see sharding.rules.opt_shardings)."""
+    *lead, L = x.shape
+    pad = _pad_len(L) - L
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)])
+    blocks = x.reshape(*lead, -1, _BLOCK)
+    scale = jnp.abs(blocks).max(axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0]
+
+
+def q8_decode(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    dec = q.astype(jnp.float32) * scale[..., None]
+    *lead, L = shape
+    return dec.reshape(*lead, -1)[..., :L].reshape(shape)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    step: jnp.ndarray
+    m: Any
+    v: Any
+    m_scale: Any   # None (fp32 mode) or per-block scales
+    v_scale: Any
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum((g.astype(jnp.float32) ** 2).sum() for g in leaves))
+    factor = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * factor), grads), gn
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    int8_state: bool = False
+    warmup: int = 100
+
+    def init(self, params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        if not self.int8_state:
+            return OptState(step=jnp.zeros((), jnp.int32),
+                            m=jax.tree.map(zeros, params),
+                            v=jax.tree.map(zeros, params),
+                            m_scale=None, v_scale=None)
+        enc = lambda p: q8_encode(jnp.zeros(p.shape, jnp.float32))
+        mq = jax.tree.map(lambda p: enc(p)[0], params)
+        ms = jax.tree.map(lambda p: enc(p)[1], params)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        m=mq, v=jax.tree.map(lambda p: q8_encode(
+                            jnp.zeros(p.shape, jnp.float32))[0], params),
+                        m_scale=ms,
+                        v_scale=jax.tree.map(lambda p: q8_encode(
+                            jnp.zeros(p.shape, jnp.float32))[1], params))
+
+    def _schedule(self, step):
+        warm = jnp.minimum(step.astype(jnp.float32) / max(self.warmup, 1), 1.0)
+        return self.lr * warm
+
+    def update(self, grads, state: OptState, params):
+        step = state.step + 1
+        lr = self._schedule(step)
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - self.b1 ** t
+        bc2 = 1.0 - self.b2 ** t
+
+        def upd(g, p, m, v, msc, vsc):
+            g = g.astype(jnp.float32)
+            if self.int8_state:
+                m = q8_decode(m, msc, g.shape)
+                # v is stored in sqrt domain (better resolution near 0 —
+                # linear int8 lets v flush to 0 in blocks m doesn't, which
+                # explodes m/sqrt(v))
+                v = q8_decode(v, vsc, g.shape) ** 2
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            mh = m / bc1
+            vh = v / bc2
+            dp = mh / (jnp.sqrt(vh) + self.eps)
+            if self.int8_state:
+                # guard residual quantization-flush outliers
+                dp = jnp.clip(dp, -10.0, 10.0)
+            dp = dp + self.weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * dp).astype(p.dtype)
+            if self.int8_state:
+                mq, ms = q8_encode(m)
+                vq, vs = q8_encode(jnp.sqrt(v))
+                return newp, mq, vq, ms, vs
+            return newp, m, v
+
+        outer = jax.tree.structure(grads)
+        if self.int8_state:
+            inner = jax.tree.structure(tuple(range(5)))
+            out = jax.tree.map(upd, grads, params, state.m, state.v,
+                               state.m_scale, state.v_scale)
+            newp, m, v, ms, vs = jax.tree.transpose(outer, inner, out)
+            return newp, OptState(step=step, m=m, v=v, m_scale=ms, v_scale=vs)
+        inner = jax.tree.structure(tuple(range(3)))
+        out = jax.tree.map(
+            lambda g, p, m, v: upd(g, p, m, v, None, None),
+            grads, params, state.m, state.v)
+        newp, m, v = jax.tree.transpose(outer, inner, out)
+        return newp, OptState(step=step, m=m, v=v, m_scale=None, v_scale=None)

@@ -1,0 +1,139 @@
+"""Train-step builders: standard SPMD step, microbatched accumulation, and
+the eta-style periodic-sync local-SGD step (the paper's staleness rule as a
+training feature — see DESIGN.md §4)."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamW, OptState, clip_by_global_norm
+
+__all__ = ["TrainState", "make_train_step", "make_local_sgd_step",
+           "sync_budget"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: OptState
+
+
+def make_train_step(model, opt: AdamW, grad_accum: int = 1,
+                    clip: float = 1.0):
+    """Standard SPMD data-parallel step (gradient all-reduce every step is
+    inserted by the partitioner from the batch/param shardings).
+
+    grad_accum > 1: the batch must arrive PRE-SPLIT with a leading
+    (grad_accum,) dim and the batch sharding on dim 1 — splitting inside jit
+    loses the data sharding through the reshape (observed: 256->(4,64)
+    resharded the microbatch only 4-ways)."""
+
+    def step(state: TrainState, batch):
+        def loss_fn(p, b):
+            return model.loss(p, b, train=True)
+
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        else:
+            def acc_body(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(state.params, mb)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros((), jnp.float32)), batch)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        params, opt2 = opt.update(grads, state.opt, state.params)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": opt2.step}
+        return TrainState(params=params, opt=opt2), metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# eta-style local SGD (paper technique -> training)
+# ---------------------------------------------------------------------------
+
+
+def make_local_sgd_step(model, opt: AdamW, mesh, replica_axis: str = "data",
+                        sync_every: int = 1, clip: float = 1.0):
+    """Replicas (one per device along ``replica_axis``) take ``sync_every``
+    local optimizer steps between parameter-averaging rounds — the direct
+    analog of S local sweeps between boundary exchanges in the DSIM, with
+    the same throughput/staleness trade governed by one ratio.
+
+    State arrays carry a leading replica dimension sharded over the axis.
+    Returns (outer_step, replicate_fn) where outer_step does sync_every local
+    steps + one averaging round, and batch has leading dims
+    (replicas, sync_every, local_batch, ...).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    R = mesh.shape[replica_axis]
+    rspec = P(replica_axis)
+
+    def local_steps(state: TrainState, batches):
+        # strip the leading replica dim the sharding leaves on the block
+        state = jax.tree.map(lambda x: x[0], state)
+        batches = jax.tree.map(lambda x: x[0], batches)
+
+        def loss_fn(p, b):
+            return model.loss(p, b, train=True)
+
+        def one(st, b):
+            loss, grads = jax.value_and_grad(loss_fn)(st.params, b)
+            grads, gn = clip_by_global_norm(grads, clip)
+            params, opt2 = opt.update(grads, st.opt, st.params)
+            return TrainState(params, opt2), loss
+
+        st, losses = jax.lax.scan(one, state, batches)
+        # parameter averaging = the boundary exchange
+        avg = jax.tree.map(
+            lambda x: jax.lax.pmean(x, replica_axis), st.params)
+        out = TrainState(avg, st.opt)
+        return (jax.tree.map(lambda x: x[None], out),
+                jax.lax.pmean(losses.mean(), replica_axis))
+
+    smapped = jax.shard_map(
+        local_steps, mesh=mesh,
+        in_specs=(rspec, rspec), out_specs=(rspec, P()),
+        check_vma=False)
+
+    @jax.jit
+    def outer_step(state, batches):
+        st, loss = smapped(state, batches)
+        return st, {"loss": loss}
+
+    def replicate(state: TrainState) -> TrainState:
+        dup = jax.tree.map(
+            lambda x: jax.device_put(
+                jnp.broadcast_to(x[None], (R,) + x.shape),
+                NamedSharding(mesh, P(replica_axis))), state)
+        return dup
+
+    return outer_step, replicate
+
+
+def sync_budget(param_bytes: float, step_time_s: float, link_bw_Bps: float,
+                overlap: float = 0.0) -> int:
+    """Minimum sync period S so averaging traffic fits the link budget —
+    the Eq.-2 design rule transcribed to training:
+
+      paper:    f_p-bit <= f_comm / (2 N_color C_max)
+      here:     step rate <= link_bw / (2 * param_bytes * (1-overlap)) * S
+
+    i.e. S >= 2 * param_bytes * (1-overlap) / (link_bw * step_time).
+    """
+    s = 2.0 * param_bytes * (1.0 - overlap) / (link_bw_Bps * step_time_s)
+    return max(1, int(jnp.ceil(s)))

@@ -1,0 +1,67 @@
+"""Analysis utilities: power-law fits, bootstrap, time-to-target."""
+
+import numpy as np
+import pytest
+
+from repro.core.analysis import (fit_kappa, bootstrap_ci, bootstrap_kappa,
+                                 time_to_target, eta_from_sync)
+
+
+def test_fit_kappa_recovers_exponent():
+    t = np.geomspace(1, 1e5, 60)
+    for kappa in (0.1, 0.27, 0.5):
+        rho = 2.0 * t ** -kappa
+        f = fit_kappa(t, rho)
+        assert abs(f.kappa - kappa) < 1e-6
+        assert f.r2 > 0.999999
+
+
+def test_fit_kappa_window_and_noise():
+    rng = np.random.default_rng(0)
+    t = np.geomspace(1, 1e5, 80)
+    rho = 3.0 * t ** -0.27 * np.exp(rng.normal(0, 0.05, 80))
+    f = fit_kappa(t, rho, window=(10, 1e5))
+    assert abs(f.kappa - 0.27) < 0.03
+
+
+def test_fit_kappa_handles_zeros():
+    t = np.asarray([1, 10, 100, 1000])
+    rho = np.asarray([1.0, 0.1, 0.0, 0.0])
+    f = fit_kappa(t, rho)
+    assert np.isfinite(f.kappa)
+
+
+def test_bootstrap_ci_covers_mean():
+    rng = np.random.default_rng(1)
+    x = rng.normal(5.0, 1.0, size=200)
+    point, lo, hi = bootstrap_ci(x, seed=0)
+    assert lo < 5.0 < hi
+    assert hi - lo < 0.6
+
+
+def test_bootstrap_kappa():
+    rng = np.random.default_rng(2)
+    t = np.geomspace(1, 1e4, 40)
+    runs = np.stack([2.0 * t ** -0.25 * np.exp(rng.normal(0, 0.05, 40))
+                     for _ in range(20)])
+    point, lo, hi = bootstrap_kappa(t, runs, seed=0)
+    assert lo < 0.25 < hi
+    assert abs(point - 0.25) < 0.02
+
+
+def test_time_to_target_interpolation():
+    t = np.geomspace(1, 1e6, 100)
+    rho = 1.0 * t ** -0.5
+    # rho = 0.01 at t = 1e4
+    ttt = time_to_target(t, rho, 0.01)
+    assert abs(np.log10(ttt) - 4) < 0.05
+    assert time_to_target(t, rho, 1e-9) == float("inf")
+
+
+def test_eta_from_sync_ordering():
+    """More frequent exchange => larger eta; threshold at S=1."""
+    thr = 2 * 3 * 50.8
+    assert eta_from_sync(1, 3, 50.8) == pytest.approx(thr)
+    assert eta_from_sync("phase", 3, 50.8) > eta_from_sync(1, 3, 50.8)
+    assert eta_from_sync(10, 3, 50.8) < eta_from_sync(1, 3, 50.8)
+    assert eta_from_sync(None, 3, 50.8) == 0.0

@@ -1,0 +1,169 @@
+"""Core Ising library: graphs, coloring, energies, monolithic Gibbs."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.graph import (ea3d, toroidal_grid, random_regular, from_edges,
+                              edges_from_ell)
+from repro.core.coloring import (lattice3d_coloring, greedy_coloring,
+                                 validate_coloring)
+from repro.core.energy import energy, local_fields, residual_energy
+from repro.core.gibbs import GibbsEngine, chunk_plan
+from repro.core.annealing import ea_schedule, sat_schedule, Schedule
+from repro.core.pbit import (FixedPoint, quantize, pbit_update, lfsr_init,
+                             lfsr_next, lfsr_uniform, S41)
+
+
+def test_ea3d_structure():
+    L = 6
+    g = ea3d(L, seed=0)
+    assert g.n == L ** 3
+    # interior degree 6; open x/y boundaries reduce it
+    deg = (np.asarray(g.w) != 0).sum(axis=1)
+    assert deg.max() == 6
+    assert deg.min() == 4
+    # periodic z: every site has both z neighbors
+    assert g.num_edges == 3 * L ** 3 - 2 * L * L  # 2 open faces x,y
+
+    ei, ej, ew = edges_from_ell(g)
+    assert set(np.unique(ew)) <= {-1.0, 1.0}
+    # rebuild and compare energies on a random config
+    g2 = from_edges(g.n, ei, ej, ew)
+    m = jnp.asarray(np.random.default_rng(0).choice([-1, 1], g.n), jnp.int8)
+    assert float(energy(g, m)) == float(energy(g2, m))
+
+
+def test_ea3d_deterministic_by_seed():
+    a, b = ea3d(5, seed=3), ea3d(5, seed=3)
+    c = ea3d(5, seed=4)
+    assert (np.asarray(a.w) == np.asarray(b.w)).all()
+    assert not (np.asarray(a.w) == np.asarray(c.w)).all()
+
+
+@pytest.mark.parametrize("L,expected", [(4, 2), (6, 2), (5, 3), (7, 3)])
+def test_lattice_coloring(L, expected):
+    g = ea3d(L, seed=0)
+    col = lattice3d_coloring(L)
+    assert col.n_colors == expected
+    assert validate_coloring(np.asarray(g.idx), np.asarray(g.w), col.colors)
+    assert sum(len(grp) for grp in col.groups) == L ** 3
+
+
+def test_greedy_coloring_valid():
+    g = random_regular(120, 4, seed=1)
+    col = greedy_coloring(np.asarray(g.idx), np.asarray(g.w))
+    assert validate_coloring(np.asarray(g.idx), np.asarray(g.w), col.colors)
+    assert col.n_colors <= 5  # greedy <= max_degree + 1
+
+
+def test_energy_matches_brute_force():
+    g = random_regular(10, 3, seed=0)
+    ei, ej, ew = edges_from_ell(g)
+    rng = np.random.default_rng(1)
+    for _ in range(5):
+        m = rng.choice([-1, 1], g.n).astype(np.int8)
+        brute = -(ew * m[ei] * m[ej]).sum()
+        assert abs(float(energy(g, jnp.asarray(m))) - brute) < 1e-5
+
+
+def test_local_fields_definition():
+    g = random_regular(12, 3, seed=2)
+    m = jnp.ones((g.n,), jnp.int8)
+    f = np.asarray(local_fields(g, m))
+    # all spins up: field_i = sum_j J_ij
+    expect = np.asarray(g.w).sum(axis=1)
+    np.testing.assert_allclose(f, expect, atol=1e-6)
+
+
+def test_fixed_point_quantize():
+    fmt = FixedPoint(4, 1)
+    x = jnp.asarray([0.24, 0.26, -20.0, 20.0, 3.3])
+    q = np.asarray(quantize(x, fmt))
+    assert q[0] == 0.0 and q[1] == 0.5
+    assert q[2] == fmt.lo and q[3] == fmt.hi
+    assert q[4] == 3.5
+    # idempotent
+    assert (np.asarray(quantize(jnp.asarray(q), fmt)) == q).all()
+
+
+def test_pbit_update_limits():
+    # beta -> inf: deterministic sign of field
+    field = jnp.asarray([3.0, -3.0])
+    r = jnp.asarray([0.3, -0.3])
+    out = pbit_update(field, 100.0, r)
+    assert list(np.asarray(out)) == [1, -1]
+    # beta = 0: sign of r
+    out = pbit_update(field, 0.0, r)
+    assert list(np.asarray(out)) == [1, -1]
+
+
+def test_lfsr_period_and_range():
+    s = lfsr_init(64, seed=0)
+    seen = set()
+    x = s
+    for _ in range(100):
+        x = lfsr_next(x)
+        u = np.asarray(lfsr_uniform(x))
+        assert (u > -1).all() and (u < 1).all()
+        seen.add(int(np.asarray(x)[0]))
+    assert len(seen) == 100  # no short cycles
+    assert (np.asarray(x) != 0).all()
+
+
+def test_gibbs_energy_tracking_exact():
+    g = ea3d(5, seed=2)
+    eng = GibbsEngine(g, lattice3d_coloring(5), rng="philox", fmt=S41)
+    st = eng.init_state(seed=0)
+    st, _ = eng.run_dense(st, ea_schedule(128).beta_array())
+    assert abs(float(st.E) - float(eng.direct_energy(st))) < 1e-3
+
+
+def test_gibbs_anneals_to_low_energy():
+    g = ea3d(6, seed=1)
+    eng = GibbsEngine(g, lattice3d_coloring(6))
+    st = eng.init_state(seed=0)
+    E0 = float(st.E)
+    st, (Etr, flips) = eng.run_dense(st, ea_schedule(400).beta_array())
+    assert float(Etr[-1]) < 0.6 * E0 if E0 < 0 else float(Etr[-1]) < E0
+    # a sweep updates every p-bit once: attempted-update count = N per sweep
+    assert np.asarray(flips).max() <= g.n
+
+
+def test_gibbs_lfsr_vs_philox_statistics():
+    """Paper: LFSR and Philox give slightly different but comparable
+    dynamics; final energies should agree within a few percent."""
+    g = ea3d(6, seed=5)
+    col = lattice3d_coloring(6)
+    outs = {}
+    for kind in ("philox", "lfsr"):
+        vals = []
+        for s in range(3):
+            eng = GibbsEngine(g, col, rng=kind)
+            st = eng.init_state(seed=s)
+            st, (Etr, _) = eng.run_dense(st, ea_schedule(300).beta_array())
+            vals.append(float(Etr[-1]))
+        outs[kind] = np.mean(vals)
+    assert abs(outs["philox"] - outs["lfsr"]) / abs(outs["philox"]) < 0.1
+
+
+def test_chunk_plan():
+    pts = [1, 2, 4, 8, 100]
+    plan = chunk_plan(pts)
+    acc, seen = 0, []
+    for c in plan:
+        assert c & (c - 1) == 0  # power of two
+        acc += c
+        seen.append(acc)
+    for p in pts:
+        assert p in seen
+
+
+def test_schedules():
+    s = ea_schedule(1000)
+    arr = s.beta_array()
+    assert arr[0] == 0.5 and arr[-1] == 5.0 and len(arr) == 1000
+    assert float(s.beta_at(0)) == 0.5
+    s2 = sat_schedule(77)
+    assert s2.betas[-1] == 10.0

@@ -1,0 +1,175 @@
+"""Problem suite: EA grounds, Max-Cut, 3SAT encoding, planting, APT+ICM."""
+
+import os
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.graph import ea3d
+from repro.core.coloring import lattice3d_coloring, greedy_coloring
+from repro.core.gibbs import GibbsEngine
+from repro.core.annealing import ea_schedule, sat_schedule, Schedule
+from repro.core.energy import energy
+from repro.core.apt_icm import APTICM, adapt_ladder
+from repro.problems.ea3d import instance_set, GroundStore, establish_grounds
+from repro.problems.maxcut import (parse_gset, gset_like_toroidal,
+                                   maxcut_to_ising, cut_of, spins_to_hex,
+                                   hex_to_spins)
+from repro.problems.sat import (random_3sat, encode_3sat, decode_assignment,
+                                count_satisfied)
+from repro.problems.planting import plant_frustrated_loops
+
+
+def test_instance_set_protocol():
+    graphs = instance_set(4, n_instances=3)
+    assert len(graphs) == 3
+    seeds = [g.meta["seed"] for g in graphs]
+    assert len(set(seeds)) == 3
+
+
+def test_ground_store(tmp_path):
+    store = GroundStore(str(tmp_path / "g.json"))
+    assert store.get(5, 1) is None
+    assert store.update(5, 1, -100.0) == -100.0
+    assert store.update(5, 1, -90.0) == -100.0   # min-merge
+    assert store.update(5, 1, -120.0) == -120.0
+    store2 = GroundStore(str(tmp_path / "g.json"))
+    assert store2.get(5, 1) == -120.0
+
+
+def test_establish_grounds(tmp_path):
+    graphs = instance_set(4, n_instances=2)
+    store = GroundStore(str(tmp_path / "g.json"))
+    grounds = establish_grounds(graphs, store, sweeps=200, runs=1)
+    assert len(grounds) == 2
+    assert all(g < 0 for g in grounds)
+
+
+def test_gset_parser():
+    text = "3 2\n1 2 1\n2 3 -1\n"
+    g = parse_gset(text)
+    assert g.n == 3 and g.num_edges == 2
+    m = jnp.asarray([1, -1, -1], jnp.int8)
+    assert cut_of(g, m) == 1.0  # edge (1,2) cut w=+1; (2,3) uncut
+
+
+def test_maxcut_mapping_consistency():
+    g = gset_like_toroidal(6, 8, seed=0)
+    gi = maxcut_to_ising(g)
+    rng = np.random.default_rng(0)
+    W = float(np.asarray(g.w).sum()) / 2
+    for _ in range(4):
+        m = jnp.asarray(rng.choice([-1, 1], g.n).astype(np.int8))
+        # with J = -w:  E_ising = -sum J m m = +sum w m m, so
+        # cut = (W_tot - sum w m m) / 2 = (W_tot - E_ising) / 2
+        cut = cut_of(g, m)
+        E = float(energy(gi, m))
+        assert abs(cut - (W - E) / 2) < 1e-3
+
+
+def test_hex_roundtrip():
+    rng = np.random.default_rng(1)
+    m = rng.choice([-1, 1], 101).astype(np.int8)
+    assert (hex_to_spins(spins_to_hex(m), 101) == m).all()
+
+
+def test_sat_encoding_ground_states():
+    """Satisfying assignments of the formula must be ground states of the
+    Ising encoding (gate Hamiltonian correctness)."""
+    clauses = np.array([[1, 2, 3], [-1, 2, -3], [1, -2, 3]])
+    enc = encode_3sat(clauses, 3, max_fanout=10)
+    g = enc.graph
+
+    def clause_energy(assign):
+        # brute-force the auxiliary spins for given variable assignment
+        best = np.inf
+        n_aux = enc.n_aux
+        for mask in range(2 ** n_aux):
+            full = np.ones(g.n, dtype=np.int8)
+            for v in range(3):
+                full[enc.copies_of[v]] = assign[v]
+            for a in range(n_aux):
+                full[g.n - n_aux + a] = 1 if (mask >> a) & 1 else -1
+            best = min(best, float(energy(g, jnp.asarray(full))))
+        return best
+
+    energies = {}
+    for bits in range(8):
+        assign = np.asarray([(bits >> i) & 1 for i in range(3)]) * 2 - 1
+        nsat = count_satisfied(clauses, assign)
+        energies.setdefault(nsat, []).append(clause_energy(assign))
+    # all-satisfying assignments reach the global minimum
+    emin = min(min(v) for v in energies.values())
+    assert min(energies[3]) == emin
+    assert min(energies[2]) > emin - 1e-6
+
+
+def test_sat_pipeline_end_to_end():
+    clauses = random_3sat(25, 100, seed=3)
+    enc = encode_3sat(clauses, 25)
+    col = greedy_coloring(np.asarray(enc.graph.idx), np.asarray(enc.graph.w))
+    eng = GibbsEngine(enc.graph, col)
+    st = eng.init_state(seed=0)
+    st, _ = eng.run_dense(st, sat_schedule(2500).beta_array())
+    assign = decode_assignment(enc, np.asarray(st.m))
+    assert count_satisfied(clauses, assign) >= 95  # >= 95% on easy-ish alpha=4
+
+
+def test_copy_chain_fanout():
+    clauses = random_3sat(10, 80, seed=0)
+    enc = encode_3sat(clauses, 10, max_fanout=4)
+    # high-occupancy variables got split
+    occ = np.zeros(10)
+    for c in clauses:
+        for lit in c:
+            occ[abs(lit) - 1] += 1
+    for v in range(10):
+        assert len(enc.copies_of[v]) == max(1, int(np.ceil(occ[v] / 4)))
+
+
+def test_planted_instance():
+    host = ea3d(5, seed=2)
+    inst = plant_frustrated_loops(host, n_loops=40, seed=1)
+    E_check = float(energy(inst.graph, jnp.asarray(inst.ground_state)))
+    assert abs(E_check - inst.ground_energy) < 1e-4
+    # annealing reaches the planted ground energy (paper S11 protocol)
+    col = greedy_coloring(np.asarray(inst.graph.idx), np.asarray(inst.graph.w))
+    eng = GibbsEngine(inst.graph, col)
+    st = eng.init_state(seed=0)
+    st, (Etr, _) = eng.run_dense(
+        st, Schedule(np.arange(0.5, 5.01, 0.5), 1500).beta_array())
+    assert float(np.asarray(Etr).min()) <= inst.ground_energy + 1e-4
+
+
+def test_apt_icm_invariants():
+    g = ea3d(5, seed=1)
+    col = lattice3d_coloring(5)
+    betas = adapt_ladder(g, col, 0.3, 3.0, 5, pilot_sweeps=50)
+    assert (np.diff(betas) > 0).all()
+    apt = APTICM(g, col, betas, chains=2)
+    st = apt.init_state(seed=0)
+    st2, (ts, best) = apt.run(st, 40, icm_every=5, record_every=10)
+    # incremental energies stay exact through swaps + ICM
+    Edir = jax.vmap(jax.vmap(lambda mm: energy(g, mm)))(st2.m)
+    assert float(jnp.abs(Edir - st2.E).max()) == 0.0
+    assert int(st2.swaps) > 0
+    # ICM preserves the pair-sum exactly
+    m, E, key, icms = apt._icm(st2.m, st2.E, st2.key, st2.icms)
+    before = np.asarray(st2.E)[0] + np.asarray(st2.E)[1]
+    after = np.asarray(E)[0] + np.asarray(E)[1]
+    np.testing.assert_allclose(before, after, atol=1e-3)
+
+
+def test_apt_beats_plain_annealing_on_hard_instance():
+    g = ea3d(5, seed=9)
+    col = lattice3d_coloring(5)
+    betas = np.linspace(0.5, 4.0, 6)
+    apt = APTICM(g, col, betas, chains=2)
+    st = apt.init_state(seed=0)
+    st, (ts, best) = apt.run(st, 150, icm_every=10, record_every=50)
+    _, E_apt = apt.best_config(st)
+    eng = GibbsEngine(g, col)
+    s2 = eng.init_state(seed=0)
+    s2, (Etr, _) = eng.run_dense(s2, ea_schedule(150).beta_array())
+    assert E_apt <= float(np.asarray(Etr).min()) + 4.0

@@ -1,0 +1,155 @@
+"""Training substrate: optimizer (fp32+int8), checkpointing, data, serve."""
+
+import os
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models.lm import build_model
+from repro.train.optimizer import (AdamW, q8_encode, q8_decode,
+                                   clip_by_global_norm)
+from repro.train.train_step import TrainState, make_train_step, sync_budget
+from repro.train.data import MarkovLM, prefetch
+from repro.train import checkpoint as ckpt
+from repro.serve.serve_step import greedy_generate, cache_len_for
+
+
+def test_q8_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    for shape in [(130,), (4, 257), (3, 5, 128)]:
+        x = jnp.asarray(rng.normal(0, 2.0, shape).astype(np.float32))
+        q, s = q8_encode(x)
+        y = q8_decode(q, s, shape)
+        blockmax = np.abs(np.asarray(x)).max()
+        assert float(jnp.abs(y - x).max()) <= blockmax / 127.0 + 1e-6
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((10,)) * 3.0}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert abs(float(gn) - 3.0 * np.sqrt(10)) < 1e-4
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-4
+
+
+@pytest.mark.parametrize("int8", [False, True])
+def test_adamw_converges_quadratic(int8):
+    opt = AdamW(lr=0.1, warmup=1, weight_decay=0.0, int8_state=int8)
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    st = opt.init(params)
+    for _ in range(150):
+        grads = {"w": params["w"]}          # d/dw (w^2/2)
+        params, st = opt.update(grads, st, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_train_loss_decreases_both_optimizers():
+    cfg = get_config("deepseek-7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    for int8 in (False, True):
+        opt = AdamW(lr=3e-3, warmup=5, int8_state=int8)
+        st = TrainState(params=params, opt=opt.init(params))
+        step = jax.jit(make_train_step(model, opt))
+        data = MarkovLM(cfg.vocab, seed=1)
+        losses = []
+        for i, b in zip(range(25), data.batches(8, 32)):
+            st, m = step(st, {k: jnp.asarray(v) for k, v in b.items()})
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 0.2, (int8, losses[0], losses[-1])
+
+
+def test_grad_accum_equivalence():
+    """Pre-split microbatch accumulation == single-batch gradients."""
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=1e-3, warmup=1)
+    data = MarkovLM(cfg.vocab, seed=2)
+    toks = data.sample(8, 32)
+    b1 = {"tokens": jnp.asarray(toks), "targets": jnp.asarray(toks),
+          "mask": jnp.ones((8, 32), jnp.int32)}
+    b2 = jax.tree.map(lambda x: x.reshape(2, 4, 32), b1)
+    s1 = TrainState(params=params, opt=opt.init(params))
+    s2 = TrainState(params=params, opt=opt.init(params))
+    s1, m1 = jax.jit(make_train_step(model, opt, grad_accum=1))(s1, b1)
+    s2, m2 = jax.jit(make_train_step(model, opt, grad_accum=2))(s2, b2)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    d = max(float(jnp.abs(a - b).max()) for a, b in
+            zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)))
+    assert d < 1e-5
+
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    cfg = get_config("mamba2-370m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW()
+    st = TrainState(params=params, opt=opt.init(params))
+    for step in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), step, st, keep=2)
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    dirs = sorted(os.listdir(tmp_path))
+    assert len([d for d in dirs if d.startswith("step_")]) == 2  # retention
+    st2 = ckpt.restore(str(tmp_path), st)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st2)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    st = {"w": jnp.zeros((4,))}
+    ckpt.save(str(tmp_path), 1, st)
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), {"w": jnp.zeros((5,))})
+
+
+def test_markov_data_learnable_structure():
+    data = MarkovLM(64, seed=0)
+    toks = data.sample(4, 256, seed=1)
+    assert toks.shape == (4, 256) and toks.max() < 64
+    # order-1 structure: conditional entropy < unigram entropy
+    uni = np.bincount(toks.ravel(), minlength=64) + 1e-9
+    uni = uni / uni.sum()
+    H_uni = -(uni * np.log(uni)).sum()
+    pair = np.zeros((64, 64)) + 1e-9
+    for row in toks:
+        np.add.at(pair, (row[:-1], row[1:]), 1)
+    cond = pair / pair.sum(axis=1, keepdims=True)
+    H_cond = -(pair / pair.sum() * np.log(cond)).sum()
+    assert H_cond < H_uni - 0.3
+
+
+def test_prefetch_order():
+    it = prefetch(iter(range(10)), depth=3)
+    assert list(it) == list(range(10))
+
+
+def test_sync_budget_design_rule():
+    # tiny model, fast link: sync every step; huge model, slow link: rarely
+    assert sync_budget(1e6, 0.1, 50e9) == 1
+    assert sync_budget(2 * 314e9, 0.5, 50e9) > 10
+
+
+def test_serve_greedy_generate_all_cache_kinds():
+    for name in ("h2o-danube-1.8b", "mamba2-370m", "jamba-v0.1-52b",
+                 "seamless-m4t-medium"):
+        cfg = get_config(name).reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        if cfg.encdec:
+            batch = {"frames": jnp.ones((2, 8, cfg.d_model), jnp.float32),
+                     "tokens": jnp.zeros((2, 4), jnp.int32)}
+        else:
+            batch = {"tokens": jnp.zeros((2, 8), jnp.int32)}
+        out = greedy_generate(model, cfg, params, batch, max_new=4)
+        assert out.shape == (2, 4)
+        assert (np.asarray(out) >= 0).all()
+        assert (np.asarray(out) < cfg.vocab_padded).all()
+
+
+def test_cache_len_for_swa():
+    cfg = get_config("h2o-danube-1.8b")
+    assert cache_len_for(cfg, 524288) == 4096      # rolling window
+    cfg2 = get_config("deepseek-7b")
+    assert cache_len_for(cfg2, 32768) == 32768

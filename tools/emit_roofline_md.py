@@ -1,0 +1,42 @@
+"""Emit the EXPERIMENTS.md roofline/dry-run tables from reports/dryrun."""
+import json, glob, sys
+
+rows = [json.load(open(f)) for f in sorted(glob.glob("reports/dryrun/*.json"))]
+single = [r for r in rows if r["mesh"] == "single_pod_16x16"]
+multi = [r for r in rows if r["mesh"] != "single_pod_16x16"]
+
+def fmt(x, nd=2):
+    if x is None: return "—"
+    return f"{x:.{nd}e}" if (x and (abs(x) >= 1e4 or abs(x) < 1e-3)) else f"{x:.{nd}f}"
+
+print("### Single-pod (16x16 = 256 chips) baseline roofline, per chip per step\n")
+print("| arch | shape | HLO FLOPs | HLO bytes | wire bytes | t_comp s | t_mem s | t_coll s | bottleneck | 6ND/HLO | grad_acc |")
+print("|---|---|---|---|---|---|---|---|---|---|---|")
+for r in single:
+    rf = r["roofline"]
+    u = rf.get("useful_ratio")
+    ga = r.get("extras", {}).get("grad_accum", "")
+    print(f"| {r['arch']} | {r['shape']} | {fmt(rf['flops'])} | {fmt(rf['bytes_accessed'])} "
+          f"| {fmt(rf['wire_bytes'])} | {fmt(rf['t_compute'],3)} | {fmt(rf['t_memory'],3)} "
+          f"| {fmt(rf['t_collective'],3)} | {rf['bottleneck']} | {fmt(u,3) if u else '—'} | {ga} |")
+
+print("\n### Multi-pod (2x16x16 = 512 chips) dry-run: compile + collective check\n")
+print("| arch | shape | compile s | wire bytes/chip | per-kind |")
+print("|---|---|---|---|---|")
+for r in multi:
+    rf = r["roofline"]
+    pk = ", ".join(f"{k.split('-')[-1]}={fmt(v)}" for k, v in sorted(rf["per_kind"].items()))
+    print(f"| {r['arch']} | {r['shape']} | {r['compile_s']:.1f} | {fmt(rf['wire_bytes'])} | {pk or '—'} |")
+
+print("\n### Memory fit (single-pod, per device)\n")
+print("| arch | shape | args B | temp B | state B/dev | cache B/dev | fits 16GB |")
+print("|---|---|---|---|---|---|---|")
+for r in single:
+    m = r["memory_analysis"]; ex = r.get("extras", {})
+    arg = m.get("argument_size_in_bytes") or 0
+    tmp = m.get("temp_size_in_bytes") or 0
+    stt = ex.get("state_bytes_per_dev") or ex.get("param_bytes_per_dev") or 0
+    cch = ex.get("cache_bytes_per_dev") or 0
+    tot = (stt + cch + tmp)
+    print(f"| {r['arch']} | {r['shape']} | {fmt(arg)} | {fmt(tmp)} | {fmt(stt)} | {fmt(cch) if cch else '—'} | "
+          f"{'YES' if tot < 16e9 else 'NO (' + fmt(tot) + ')'} |")

@@ -2,71 +2,155 @@
 
 The paper's flip rate = N p-bits updated per local clock (all N flip
 attempts per sweep), measured with on-chip counters.  Here: measured
-sweeps/s x N for the monolithic engine, the partitioned engine, and the
-structured-lattice engine with the Pallas-oracle kernel."""
+sweeps/s x N x R for every registry engine at equal problem size, with the
+lattice path measured both through the fused multi-phase kernel (one launch
+per ``sync_every`` sweeps — the production dispatch) and through the seed's
+per-phase reference dispatch (one launch per color phase).
+
+Writes the usual reports/bench/flip_rate.json detail plus BENCH_flip_rate.json
+at the repo root recording the fused-vs-per-phase speedup against the seed
+lattice path.
+"""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
-import jax
 
+from repro.engines import make_engine
 from repro.core.graph import ea3d
 from repro.core.coloring import lattice3d_coloring
 from repro.core.partition import slab_partition
-from repro.core.gibbs import GibbsEngine
-from repro.core.dsim import build_partitioned, DSIMEngine
-from repro.core.lattice import build_ea3d_lattice
-from repro.core.lattice_dsim import LatticeDSIM
 from repro.core.annealing import constant_schedule
 
 from .common import save_detail, row
 
-
-def _rate(run_fn, sweeps):
-    run_fn(max(sweeps // 8, 1))          # compile + warm
-    t0 = time.perf_counter()
-    run_fn(sweeps)
-    return sweeps / (time.perf_counter() - t0)
+ROOT_BENCH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_flip_rate.json")
+SYNC = 8          # the seed benchmark's boundary-exchange period
 
 
-def run(quick: bool = True):
+def _rate(handle, sweeps: int, sync, reps: int = 9) -> float:
+    """Best-of-N sweeps/s: on a contended host every disturbance only slows
+    a rep down, so the max over reps is the least-biased throughput
+    estimate (medians swing ~2x under this container's scheduler)."""
+    sch = constant_schedule(3.0, 8 * sweeps)
+    warm = handle.init_state(seed=0)
+    handle.run_recorded(warm, sch, [sweeps], sync_every=sync)  # compile
+    vals = []
+    for _ in range(reps):
+        st = handle.init_state(seed=0)
+        t0 = time.perf_counter()
+        handle.run_recorded(st, sch, [sweeps], sync_every=sync)
+        vals.append(sweeps / (time.perf_counter() - t0))
+    return float(np.max(vals))
+
+
+def run(quick: bool = True, engine: str = None, replicas: int = 1):
     L = 8 if quick else 16
-    sweeps = 2048 if quick else 8192
+    sweeps = 1024 if quick else 8192
+    R = max(int(replicas), 1)
     g = ea3d(L, seed=0)
     col = lattice3d_coloring(L)
-    sch = constant_schedule(3.0, 8 * sweeps)
-    out = {}
 
-    eng = GibbsEngine(g, col, rng="lfsr")
-
-    def run_mono(n):
-        st = eng.init_state(seed=0)
-        eng.run_recorded(st, sch, [n])
-    out["monolithic"] = _rate(run_mono, sweeps)
-
-    prob = build_partitioned(g, col, slab_partition(L, 4), 4)
-    deng = DSIMEngine(prob, rng="lfsr")
-
-    def run_dsim(n):
-        st = deng.init_state(seed=0)
-        deng.run_recorded(st, sch, [n], sync_every=8)
-    out["dsim_stacked"] = _rate(run_dsim, sweeps)
-
-    lat = build_ea3d_lattice(L, seed=0)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
-    leng = LatticeDSIM(lat, mesh, dim_axes=("data", None, None), impl="ref")
-
-    def run_lat(n):
-        st = leng.init_state(seed=0)
-        leng.run_recorded(st, sch, [n], sync_every=8)
-    out["lattice_kernel"] = _rate(run_lat, sweeps)
+    # lazy handle thunks: only the paths that survive the --engine filter
+    # are ever constructed (lattice builds are seconds at --full size)
+    thunks = {
+        "monolithic": lambda: make_engine("gibbs", g, coloring=col,
+                                          rng="lfsr", replicas=R),
+        "dsim_stacked": lambda: make_engine("dsim", g, coloring=col,
+                                            rng="lfsr", K=4,
+                                            labels=slab_partition(L, 4),
+                                            replicas=R),
+        "lattice_kernel": lambda: make_engine("lattice", L=L, seed=0,
+                                              impl="ref", fused=True,
+                                              replicas=R),
+        "lattice_per_phase": lambda: make_engine("lattice", L=L, seed=0,
+                                                 impl="ref", fused=False,
+                                                 replicas=R),
+    }
+    if engine == "dsim_dist":
+        # single-device shard_map path (K=1): measures the distributed
+        # backend's per-chunk overhead without needing a forced device count
+        thunks = {"dsim_dist_k1": lambda: make_engine(
+            "dsim_dist", g, coloring=col, K=1,
+            labels=np.zeros(g.n, np.int32), rng="lfsr", replicas=R)}
+    elif engine is not None:
+        keep = {"gibbs": ["monolithic"], "dsim": ["dsim_stacked"],
+                "lattice": ["lattice_kernel", "lattice_per_phase"]}
+        names = keep.get(engine, [engine])
+        thunks = {k: v for k, v in thunks.items() if k in names}
+        if not thunks:
+            raise ValueError(f"no flip-rate path for engine {engine!r}")
+    handles = {k: mk() for k, mk in thunks.items()}
 
     n = g.n
-    detail = {"L": L, "N": n, "sweeps_per_s": out,
-              "flips_per_s": {k: v * n for k, v in out.items()}}
+    out, sync_used, rep_of = {}, {}, {}
+    for name, h in handles.items():
+        sync = SYNC if "lattice" in name or "dsim" in name else 1
+        sync_used[name] = sync
+        rep_of[name] = R
+        out[name] = _rate(h, sweeps, sync)
+
+    # the replica-parallel production path: one fused call drives R_BATCH
+    # independent chains of the SAME instance (the paper's many-anneals-per-
+    # machine operating point); the seed had neither fusion nor replicas
+    if engine in (None, "lattice"):
+        R_BATCH = max(R, 8)
+        hb = make_engine("lattice", L=L, seed=0, impl="ref", fused=True,
+                         replicas=R_BATCH)
+        name = f"lattice_fused_R{R_BATCH}"
+        sync_used[name] = SYNC
+        rep_of[name] = R_BATCH
+        out[name] = _rate(hb, sweeps, SYNC)
+
+    flips = {k: v * n * rep_of[k] for k, v in out.items()}
+    detail = {"L": L, "N": n, "replicas": rep_of, "sync_every": sync_used,
+              "sweeps_per_s": out, "flips_per_s": flips}
+    if "lattice_kernel" in flips and "lattice_per_phase" in flips:
+        detail["fused_speedup_vs_per_phase"] = (
+            flips["lattice_kernel"] / flips["lattice_per_phase"])
     save_detail("flip_rate", detail)
-    return [row("flip_rate", 1e6 / max(out["monolithic"], 1e-9),
-                " ".join(f"{k}={v * n:.3e}f/s" for k, v in out.items()))]
+
+    # the seed-comparison record is only meaningful for the canonical R=1
+    # run (its baseline key is the seed's single-chain dispatch)
+    if R == 1 and "lattice_kernel" in flips and "lattice_per_phase" in flips:
+        batch_keys = [k for k in flips if k.startswith("lattice_fused_R")]
+        best_batch = max((flips[k] for k in batch_keys),
+                         default=flips["lattice_kernel"])
+        bench = {
+            "mode": "quick" if quick else "full",
+            "problem": {"L": L, "N": n, "sync_every": SYNC},
+            "seed_lattice_flips_per_s": None,
+            "seed_note": ("the seed's lattice flip-rate path cannot run on "
+                          "this jax install (jax.shard_map / "
+                          "jax.make_mesh(axis_types=...) unsupported — the "
+                          "benchmark and engine both crash); "
+                          "'lattice_per_phase_R1' below runs the seed's "
+                          "exact per-phase single-chain dispatch through "
+                          "the restored engine and stands in as the seed "
+                          "baseline at equal problem size"),
+            "lattice_per_phase_R1_flips_per_s": flips["lattice_per_phase"],
+            "lattice_fused_R1_flips_per_s": flips["lattice_kernel"],
+            "lattice_path_flips_per_s": {k: flips[k] for k in flips
+                                         if k.startswith("lattice")},
+            # two separately-labeled speedups: kernel fusion alone at equal
+            # R=1, and the full new operating point (fusion + replica
+            # batch); the latter is aggregate chain-flips, not a per-chain
+            # kernel speedup
+            "speedup_fused_R1_vs_seed_dispatch":
+                flips["lattice_kernel"] / flips["lattice_per_phase"],
+            "speedup_fused_replica_batch_vs_seed_dispatch":
+                best_batch / flips["lattice_per_phase"],
+            "all_paths_flips_per_s": flips,
+        }
+        with open(ROOT_BENCH, "w") as f:
+            json.dump(bench, f, indent=1, default=float)
+
+    return [row("flip_rate", 1e6 / max(out.get("monolithic",
+                                               next(iter(out.values()))),
+                                       1e-9),
+                " ".join(f"{k}={v:.3e}f/s" for k, v in flips.items()))]

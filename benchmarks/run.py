@@ -1,5 +1,6 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -24,6 +25,13 @@ def main() -> None:
     ap.add_argument("--only", nargs="*", default=None)
     ap.add_argument("--full", action="store_true",
                     help="larger lattices / budgets (hours on CPU)")
+    ap.add_argument("--engine", default=None,
+                    choices=["gibbs", "dsim", "dsim_dist", "lattice"],
+                    help="restrict engine-aware benchmarks to one registry "
+                         "backend")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replica batch (R independent chains per call) for "
+                         "engine-aware benchmarks")
     args = ap.parse_args()
 
     mods = args.only if args.only else MODULES
@@ -32,7 +40,15 @@ def main() -> None:
     for name in mods:
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            for r in mod.run(quick=not args.full):
+            kw = {"quick": not args.full}
+            # engine/replicas forwarded to every benchmark whose run()
+            # accepts them (the registry-migrated ones)
+            params = inspect.signature(mod.run).parameters
+            if "engine" in params and args.engine is not None:
+                kw["engine"] = args.engine
+            if "replicas" in params:
+                kw["replicas"] = args.replicas
+            for r in mod.run(**kw):
                 print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
             sys.stdout.flush()
         except Exception as e:

@@ -20,15 +20,24 @@ from repro.core.gibbs import GibbsEngine
 
 
 def trace(eng_fn, g, Eg, sch, pts, sync, runs=3):
-    rhos = []
+    """Mean residual-energy trace; returns (record times, rho).
+
+    The DSIM engines quantize record points to multiples of S (collapsing
+    duplicates), so the fit must use the times they actually recorded at —
+    returned in the RunRecord.  The monolithic engine records at ``pts``
+    verbatim and returns the energy trace directly."""
+    rhos, times = [], np.asarray(pts)
     for r in range(runs):
         eng = eng_fn()
         st = eng.init_state(seed=r)
         st, out = eng.run_recorded(st, sch, pts, sync_every=sync) \
             if sync != "mono" else eng.run_recorded(st, sch, pts)
-        Es = out[1] if isinstance(out, tuple) else out
+        if hasattr(out, "energies"):
+            times, Es = np.asarray(out.times), out.energies
+        else:
+            Es = out
         rhos.append((np.asarray(Es) - Eg) / g.n)
-    return np.mean(rhos, axis=0)
+    return times, np.mean(rhos, axis=0)
 
 
 def main():
@@ -47,17 +56,16 @@ def main():
     print(f"L={L} K={K}, putative ground {Eg:.0f}\n")
     print(f"{'S':>6s} {'kappa_DSIM':>11s} {'kappa_CMFT':>11s}")
 
-    rho = trace(lambda: GibbsEngine(g, col), g, Eg, sch, pts, "mono")
-    k_mono = fit_kappa(np.asarray(pts), rho, window=(8, budget)).kappa
+    ts, rho = trace(lambda: GibbsEngine(g, col), g, Eg, sch, pts, "mono")
+    k_mono = fit_kappa(ts, rho, window=(8, budget)).kappa
     print(f"{'mono':>6s} {k_mono:11.3f} {'—':>11s}")
 
     for S in (1, 8, 64, 256):
         ks = {}
         for mode in ("dsim", "cmft"):
-            rho = trace(lambda: DSIMEngine(prob, rng="lfsr", mode=mode),
-                        g, Eg, sch, pts, S)
-            ks[mode] = fit_kappa(np.asarray(pts), rho,
-                                 window=(8, budget)).kappa
+            ts, rho = trace(lambda: DSIMEngine(prob, rng="lfsr", mode=mode),
+                            g, Eg, sch, pts, S)
+            ks[mode] = fit_kappa(ts, rho, window=(8, budget)).kappa
         print(f"{S:6d} {ks['dsim']:11.3f} {ks['cmft']:11.3f}")
 
     print("\nBoth columns degrade together as S grows (eta shrinks):")

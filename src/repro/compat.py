@@ -1,0 +1,119 @@
+"""Version tolerance for the jax sharding API surface.
+
+The repo targets the modern API (``jax.shard_map``, ``jax.make_mesh(...,
+axis_types=...)``, ``jax.sharding.set_mesh``); older installations (such as
+the 0.4.x line) expose the same functionality under different names or not
+at all.  Everything sharding-adjacent goes through this module so the rest
+of the codebase is written once against one surface:
+
+  shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=False)
+  make_mesh(shape, axes, axis_types=None, devices=None)
+  set_mesh(mesh)          -- context manager
+  ambient_mesh()          -- abstract mesh if set, else the physical one
+  mesh_is_auto(mesh)      -- True iff every axis is Auto (or untyped)
+  AxisType                -- enum with .Auto (polyfilled when absent)
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["shard_map", "make_mesh", "set_mesh", "ambient_mesh",
+           "mesh_is_auto", "AxisType", "HAS_NEW_SHARDING"]
+
+HAS_NEW_SHARDING = hasattr(jax, "shard_map")
+
+
+if hasattr(jax.sharding, "AxisType"):
+    AxisType = jax.sharding.AxisType
+else:
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` with a fallback to the experimental implementation.
+
+    ``check_vma`` maps onto the legacy ``check_rep`` flag (both gate the
+    replication/varying-manual-axes checker).
+    """
+    if HAS_NEW_SHARDING:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              axis_types=None, devices=None) -> Mesh:
+    """``jax.make_mesh`` accepting (and dropping, when unsupported) axis_types."""
+    if axis_types is not None:
+        try:
+            return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                                 axis_types=tuple(axis_types),
+                                 devices=devices)
+        except TypeError:
+            pass
+    try:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             devices=devices)
+    except (TypeError, AttributeError):
+        devs = list(jax.devices()) if devices is None else list(devices)
+        n = int(np.prod(tuple(axis_shapes)))
+        return Mesh(np.asarray(devs[:n]).reshape(tuple(axis_shapes)),
+                    tuple(axis_names))
+
+
+def auto_axes(n: int):
+    """n Auto axis types (for forwarding into make_mesh)."""
+    return (AxisType.Auto,) * n
+
+
+def set_mesh(mesh: Mesh):
+    """Ambient-mesh scope: ``jax.sharding.set_mesh`` or the legacy
+    ``with mesh:`` thread-resources context (which serves the same role for
+    PartitionSpec-based ``with_sharding_constraint``)."""
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh  # Mesh is a context manager on older jax
+
+
+def ambient_mesh() -> Optional[Mesh]:
+    """The mesh of the enclosing set_mesh scope, or None."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        try:
+            m = jax.sharding.get_abstract_mesh()
+        except Exception:
+            return None
+        if m is None or not getattr(m, "axis_names", ()):
+            return None
+        return m
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+    except Exception:
+        return None
+    if m is None or m.empty:
+        return None
+    return m
+
+
+def mesh_is_auto(mesh) -> bool:
+    """True iff no axis of ``mesh`` is Manual/Explicit (untyped counts as
+    Auto — the legacy mesh has no axis types at all)."""
+    try:
+        return all(t == AxisType.Auto
+                   for t in getattr(mesh, "axis_types", ()))
+    except Exception:
+        return False
+
+

@@ -1,5 +1,10 @@
 """The paper's primary contribution as a composable JAX library.
 
+All four engines are constructible by name through the unified layer in
+:mod:`repro.engines` (``make_engine("gibbs" | "dsim" | "dsim_dist" |
+"lattice", ...)``), run R independent replicas per call, and record through
+one shared chunk-planning driver — see DESIGN.md.
+
 Engines (all share the p-bit update rule and the chromatic schedule):
   gibbs.GibbsEngine        — monolithic reference (the paper's GPU role)
   dsim.DSIMEngine          — partitioned, shadow weights, stale 1-bit

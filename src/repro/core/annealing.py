@@ -11,7 +11,7 @@ import numpy as np
 import jax.numpy as jnp
 
 __all__ = ["Schedule", "ea_schedule", "sat_schedule", "geometric_schedule",
-           "constant_schedule"]
+           "constant_schedule", "replica_beta_arrays"]
 
 
 class Schedule:
@@ -41,6 +41,28 @@ class Schedule:
 
     def rescale(self, total_sweeps: int) -> "Schedule":
         return Schedule(self.betas, total_sweeps)
+
+
+def replica_beta_arrays(schedule: Schedule, replicas: int,
+                        spread: float = 0.0) -> np.ndarray:
+    """Per-replica beta staircases, shape (total_sweeps, R).
+
+    ``spread=0`` replicates the schedule verbatim — R independent chains on
+    identical trajectories (restart averaging).  ``spread>0`` scales replica
+    r's betas by a geometric factor in [1-spread, 1+spread], so one batched
+    call covers a fan of annealing rates (APT-style temperature diversity
+    without exchange moves).  Feed the result to the engines' per-replica
+    beta path (e.g. ``GibbsEngine.run_recorded_full(betas_R=...)``).
+    """
+    if replicas < 1:
+        raise ValueError("replicas must be >= 1")
+    if not 0.0 <= spread < 1.0:
+        raise ValueError("spread must be in [0, 1)")
+    base = schedule.beta_array()
+    if spread == 0.0:
+        return np.tile(base[:, None], (1, replicas)).astype(np.float32)
+    factors = np.geomspace(1.0 - spread, 1.0 + spread, replicas)
+    return (base[:, None] * factors[None, :]).astype(np.float32)
 
 
 def ea_schedule(total_sweeps: int) -> Schedule:

@@ -26,6 +26,7 @@ import numpy as np
 
 from .graph import IsingGraph
 from .coloring import Coloring
+from .gibbs import color_fields
 from .pbit import FixedPoint, quantize
 from .energy import energy as direct_energy
 
@@ -72,14 +73,16 @@ class APTICM:
         return APTState(m=m, E=E, key=key, sweep=zero, swaps=zero, icms=zero)
 
     # -- one replica-sweep over all (P, T) -----------------------------------------
+    # The (P, T) chain/temperature grid IS a replica axis: every color phase
+    # rides the same shared gather path as the engine layer's batched chains
+    # (repro.core.gibbs.color_fields), with a per-replica beta.
 
     def _gibbs_sweep(self, m, E, key):
         beta = self.betas[None, :, None]                     # (1, T, 1)
         for c in range(len(self._nodes)):
             nodes, idx, w, h = (self._nodes[c], self._idx[c],
                                 self._w[c], self._h[c])
-            nbr = m[:, :, idx].astype(w.dtype)               # (P, T, nc, D)
-            field = h + (w * nbr).sum(axis=-1)               # (P, T, nc)
+            field = color_fields(m, idx, w, h)               # (P, T, nc)
             key, sub = jax.random.split(key)
             r = jax.random.uniform(sub, field.shape, minval=-1.0, maxval=1.0)
             act = quantize(beta * field, self.fmt)

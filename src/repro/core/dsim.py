@@ -41,7 +41,8 @@ from .graph import IsingGraph
 from .coloring import Coloring
 from .pbit import FixedPoint, quantize, lfsr_init, lfsr_next, lfsr_uniform
 from .energy import energy as direct_energy
-from .gibbs import chunk_plan
+from repro.engines.base import (run_recorded_driver, spawn_seeds,
+                                stack_states)
 
 __all__ = ["PartitionedProblem", "build_partitioned", "DSIMEngine", "DSIMState"]
 
@@ -180,12 +181,13 @@ def build_partitioned(g: IsingGraph, coloring: Coloring,
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class DSIMState:
-    m: jnp.ndarray        # (K, n_max) int8 local spins
+    m: jnp.ndarray        # (K, n_max) int8 local spins — (R, K, n_max) batched
     ghosts: jnp.ndarray   # (K, g_max) f32 (instantaneous +-1 or CMFT means)
     macc: jnp.ndarray     # (K, n_max) f32 window accumulator (CMFT)
     rng: jnp.ndarray      # philox key | (K, n_max) uint32 LFSR states
     sweep: jnp.ndarray    # scalar int32
-    flips: jnp.ndarray    # scalar int32
+    flips: jnp.ndarray    # scalar int32 modular odometer (exact total is
+                          # accumulated host-side by the recording driver)
 
 
 SyncSpec = Union[int, str, None]
@@ -210,7 +212,13 @@ class DSIMEngine:
 
     # -- state -----------------------------------------------------------------
 
-    def init_state(self, seed: int = 0, m0: Optional[np.ndarray] = None) -> DSIMState:
+    def init_state(self, seed: int = 0, m0: Optional[np.ndarray] = None,
+                   replicas: Optional[int] = None) -> DSIMState:
+        """Fresh state; ``replicas=R`` stacks R independent chains along a
+        new leading axis (independent RNG streams from spawned seeds)."""
+        if replicas is not None:
+            return stack_states([self.init_state(s, m0=m0)
+                                 for s in spawn_seeds(seed, replicas)])
         p = self.p
         key = jax.random.PRNGKey(seed)
         if m0 is None:
@@ -310,57 +318,72 @@ class DSIMEngine:
         return DSIMState(m=m, ghosts=ghosts, macc=macc, rng=rng,
                          sweep=state.sweep + S, flips=flips)
 
-    def _run_chunk(self, iters: int, S: int, sync: SyncSpec):
-        key = (iters, S, sync)
+    @staticmethod
+    def is_batched(state: DSIMState) -> bool:
+        return state.m.ndim == 3
+
+    def _run_chunk(self, iters: int, S: int, sync: SyncSpec,
+                   batched: bool = False):
+        key = (iters, S, sync, batched)
         if key not in self._chunk_cache:
+            it = (lambda st, b: self._iteration(st, b, sync)) if not batched \
+                else jax.vmap(lambda st, b: self._iteration(st, b, sync),
+                              in_axes=(0, None))
+
             @jax.jit
             def f(state, betas):  # betas (iters, S)
                 def body(st, b):
-                    return self._iteration(st, b, sync), None
+                    return it(st, b), None
                 st, _ = jax.lax.scan(body, state, betas)
                 return st
             self._chunk_cache[key] = f
         return self._chunk_cache[key]
 
+    def run_recorded_full(self, state: DSIMState, schedule,
+                          record_points: Sequence[int],
+                          sync_every: SyncSpec = 1):
+        """Shared-driver runner; returns (state, RunRecord)."""
+        sync = sync_every if sync_every in ("phase", None) else int(sync_every)
+        batched = self.is_batched(state)
+        R = state.m.shape[0] if batched else 1
+
+        def chunk(st, betas2d, iters, S):
+            return self._run_chunk(iters, S, sync, batched)(st, betas2d)
+
+        return run_recorded_driver(
+            state=state, schedule=schedule, record_points=record_points,
+            chunk_fn=chunk, record_fn=self.energy, sync_every=sync_every,
+            flips_of=lambda st: st.flips, flips_per_sweep=self.p.n * R)
+
     def run_recorded(self, state: DSIMState, schedule,
                      record_points: Sequence[int],
                      sync_every: SyncSpec = 1):
-        """Run to each record point; returns (state, energies at points).
+        """Run to each record point; returns (state, (times, energies)).
 
         ``sync_every``: int S (exchange every S sweeps), 'phase', or None.
         Record points are quantized to multiples of S.
         """
-        S = 1 if sync_every in ("phase", None) else int(sync_every)
-        sync = sync_every if sync_every in ("phase", None) else int(sync_every)
-        pts = sorted(set(max(S, int(round(pp / S)) * S) for pp in record_points))
-        betas = schedule.beta_array()
-        total = pts[-1]
-        if len(betas) < total:
-            raise ValueError("schedule shorter than last record point")
-        out, times = [], []
-        pos = 0
-        plan = chunk_plan([pp // S for pp in pts])
-        targets = set(pts)
-        for c in plan:
-            nsw = c * S
-            chunk_betas = jnp.asarray(betas[pos:pos + nsw]).reshape(c, S)
-            state = self._run_chunk(c, S, sync)(state, chunk_betas)
-            pos += nsw
-            if pos in targets:
-                out.append(self.energy(state))
-                times.append(pos)
-        return state, (np.asarray(times), jnp.stack(out))
+        return self.run_recorded_full(state, schedule, record_points,
+                                      sync_every=sync_every)
 
     # -- observables ----------------------------------------------------------------
 
     def global_spins(self, state: DSIMState) -> jnp.ndarray:
+        if self.is_batched(state):
+            return jax.vmap(self._global_spins_impl)(state.m)
+        return self._global_spins_impl(state.m)
+
+    def _global_spins_impl(self, m: jnp.ndarray) -> jnp.ndarray:
         p = self.p
         buf = jnp.ones((p.n + 1,), dtype=jnp.int8)
-        buf = buf.at[p.global_ids.reshape(-1)].set(state.m.reshape(-1))
+        buf = buf.at[p.global_ids.reshape(-1)].set(m.reshape(-1))
         return buf[: p.n]
 
     def _energy_impl(self, state: DSIMState) -> jnp.ndarray:
-        return direct_energy(self.p.graph, self.global_spins(state))
+        spins = self.global_spins(state)
+        if self.is_batched(state):
+            return jax.vmap(lambda m: direct_energy(self.p.graph, m))(spins)
+        return direct_energy(self.p.graph, spins)
 
     def energy(self, state: DSIMState) -> jnp.ndarray:
         """True global energy of the current configuration."""

@@ -9,6 +9,12 @@ boundary-state exchange — an all-gather of 1-bit-packed boundary spins, every
 Semantics are identical to the stacked backend in :mod:`repro.core.dsim`
 (verified in tests with a multi-device subprocess); the same
 :class:`PartitionedProblem` feeds both.
+
+Replicas: the engine runs R independent chains per call (fixed at
+construction).  The replica axis sits between the partition axis and the
+site axis — (K, R, n_max) — so the partition axis stays the sharded leading
+dim and all R boundary payloads of one exchange travel in a single
+all-gather.  R=1 states are bitwise identical to the legacy layout.
 """
 
 from __future__ import annotations
@@ -26,7 +32,8 @@ from .dsim import PartitionedProblem, DSIMState
 from .pbit import FixedPoint, quantize, lfsr_init, lfsr_next, lfsr_uniform
 from .packing import pack_pm1, unpack_pm1, pad_to_multiple
 from .energy import energy as direct_energy
-from .gibbs import chunk_plan
+from repro.compat import shard_map
+from repro.engines.base import run_recorded_driver
 
 __all__ = ["DistDSIMEngine"]
 
@@ -39,25 +46,31 @@ class DistDSIMEngine:
     def __init__(self, prob: PartitionedProblem, mesh: Mesh,
                  axis: Union[str, tuple] = "data",
                  rng: str = "philox", fmt: Optional[FixedPoint] = None,
-                 mode: str = "dsim", bitpack: bool = True):
+                 mode: str = "dsim", bitpack: bool = True,
+                 replicas: int = 1):
         axis_tuple = (axis,) if isinstance(axis, str) else tuple(axis)
         ndev = int(np.prod([mesh.shape[a] for a in axis_tuple]))
         if ndev != prob.K:
             raise ValueError(f"mesh axis size {ndev} != K={prob.K}")
         if mode not in ("dsim", "cmft"):
             raise ValueError(mode)
+        if replicas < 1:
+            raise ValueError("replicas must be >= 1")
         self.p = prob
         self.mesh = mesh
         self.axis = axis_tuple if len(axis_tuple) > 1 else axis_tuple[0]
         self.rng_kind = rng
         self.fmt = fmt
         self.mode = mode
+        self.replicas = int(replicas)
+        self.n_sites = prob.n
         # bit-packing needs b_max % 8 == 0; re-pad the packed pool coords
         self.b_pad = pad_to_multiple(prob.b_max, 8)
         self.bitpack = bitpack and mode == "dsim"
         self._shard = NamedSharding(mesh, P(self.axis))
         self._repl = NamedSharding(mesh, P())
         self._chunk_cache = {}
+        self._energy = jax.jit(self._energy_impl)
 
         bs = np.asarray(prob.bnd_slots)
         pad = np.zeros((prob.K, self.b_pad - prob.b_max), dtype=bs.dtype)
@@ -75,20 +88,21 @@ class DistDSIMEngine:
     # -- state ------------------------------------------------------------------
 
     def init_state(self, seed: int = 0) -> DSIMState:
-        p = self.p
+        p, R = self.p, self.replicas
         key = jax.random.PRNGKey(seed)
         key, sub = jax.random.split(key)
-        m = jnp.where(jax.random.bernoulli(sub, 0.5, (p.K, p.n_max)), 1, -1)
+        m = jnp.where(jax.random.bernoulli(sub, 0.5, (p.K, R, p.n_max)), 1, -1)
         m = m.astype(jnp.int8)
         if self.rng_kind == "philox":
-            rng = jax.random.split(key, p.K)        # (K,) typed keys
+            rng = jax.random.split(key, p.K * R).reshape(p.K, R)
         else:
-            rng = lfsr_init(p.K * p.n_max, seed).reshape(p.K, p.n_max)
+            rng = lfsr_init(p.K * R * p.n_max, seed).reshape(p.K, R, p.n_max)
         ghosts = self._exchange_host(m)
         zero = jnp.zeros((), dtype=jnp.int32)
         st = DSIMState(m=m, ghosts=ghosts,
-                       macc=jnp.zeros((p.K, p.n_max), jnp.float32),
-                       rng=rng, sweep=zero, flips=zero)
+                       macc=jnp.zeros((p.K, R, p.n_max), jnp.float32),
+                       rng=rng, sweep=zero,
+                       flips=jnp.zeros((R,), jnp.int32))
         return self.shard_state(st)
 
     def shard_state(self, st: DSIMState) -> DSIMState:
@@ -99,52 +113,63 @@ class DistDSIMEngine:
                          flips=jax.device_put(st.flips, self._repl))
 
     def _exchange_host(self, m) -> jnp.ndarray:
-        flat = m.reshape(-1).astype(jnp.float32)
-        return flat[self.p.ghost_src]
+        # m (K, R, n_max): ghost_src indexes the flat (K * n_max) pool per
+        # replica — gather per replica on the replica-transposed view
+        R = self.replicas
+        flat = m.transpose(1, 0, 2).reshape(R, -1).astype(jnp.float32)
+        ghosts = flat[:, self.p.ghost_src]            # (R, K, g_max)
+        return ghosts.transpose(1, 0, 2)              # (K, R, g_max)
 
     # -- device-local block functions (run inside shard_map) -----------------------
+    # All block arrays have their partition dim squeezed away: m (R, n_max),
+    # ghosts (R, g_max), rng (R,) keys | (R, n_max) LFSR, consts rows (…).
 
     def _exchange_block(self, m, macc, S, consts):
         """Publish boundary states, all-gather, gather this device's ghosts."""
+        R = self.replicas
+        bnd_slots = consts["bnd_slots"]                       # (b_pad,)
         if self.mode == "cmft":
-            vals = jnp.take_along_axis(macc / jnp.float32(S),
-                                       consts["bnd_slots"], axis=1)
-            pool = jax.lax.all_gather(vals[0], self.axis, tiled=True)
+            vals = (macc / jnp.float32(S))[:, bnd_slots]      # (R, b_pad)
+            pool = jax.lax.all_gather(vals, self.axis, tiled=True)
         elif self.bitpack:
-            bnd = jnp.take_along_axis(m, consts["bnd_slots"], axis=1)   # (1, b_pad)
-            packed = pack_pm1(bnd[0])
+            bnd = m[:, bnd_slots]                             # (R, b_pad)
+            packed = pack_pm1(bnd)                            # (R, b_pad/8)
             pool_p = jax.lax.all_gather(packed, self.axis, tiled=True)
-            pool = unpack_pm1(pool_p, self.p.K * self.b_pad).astype(jnp.float32)
+            pool = unpack_pm1(pool_p, self.b_pad).astype(jnp.float32)
         else:
-            bnd = jnp.take_along_axis(m, consts["bnd_slots"], axis=1)
-            pool = jax.lax.all_gather(bnd[0], self.axis,
+            bnd = m[:, bnd_slots]
+            pool = jax.lax.all_gather(bnd, self.axis,
                                       tiled=True).astype(jnp.float32)
-        pool = pool.reshape(-1)
-        return pool[consts["ghost_src_pool"]]                 # (1, g_max)
+        # pool (K*R, b_pad) device-order-major -> (R, K*b_pad) per replica
+        pool = pool.reshape(self.p.K, R, self.b_pad)
+        pool = pool.transpose(1, 0, 2).reshape(R, -1)
+        return pool[:, consts["ghost_src_pool"]]              # (R, g_max)
 
     def _phase_block(self, c, m, ghosts, rng, beta, consts):
-        slots, mask = consts["color_slots"][c], consts["color_mask"][c]
+        slots, mask = consts["color_slots"][c], consts["color_mask"][c]  # (nc,)
         mext = jnp.concatenate([m.astype(jnp.float32), ghosts], axis=1)
-        idx_c = jnp.take_along_axis(consts["local_idx"], slots[:, :, None], axis=1)
-        w_c = jnp.take_along_axis(consts["local_w"], slots[:, :, None], axis=1)
-        h_c = jnp.take_along_axis(consts["local_h"], slots, axis=1)
-        nbr = jax.vmap(lambda row, ii: row[ii])(mext, idx_c)
-        field = h_c + (w_c * nbr).sum(axis=-1)
+        idx_c = consts["local_idx"][slots]                    # (nc, D)
+        w_c = consts["local_w"][slots]
+        h_c = consts["local_h"][slots]
+        nbr = jnp.take(mext, idx_c, axis=1)                   # (R, nc, D)
+        field = h_c + (w_c * nbr).sum(axis=-1)                # (R, nc)
         if self.rng_kind == "philox":
-            k0, sub = jax.random.split(rng[0])
-            rng = rng.at[0].set(k0)
-            r = jax.random.uniform(sub, field.shape, minval=-1.0, maxval=1.0)
+            ks = jax.vmap(jax.random.split)(rng)              # (R, 2) keys
+            rng = ks[:, 0]
+            nc = field.shape[1]
+            r = jax.vmap(lambda k: jax.random.uniform(
+                k, (nc,), minval=-1.0, maxval=1.0))(ks[:, 1])
         else:
-            s = jnp.take_along_axis(rng, slots, axis=1)
+            s = rng[:, slots]
             s = lfsr_next(s)
             r = lfsr_uniform(s)
-            rng = rng.at[jnp.zeros_like(slots), slots].set(s)
+            rng = rng.at[:, slots].set(s)
         act = quantize(beta * field, self.fmt)
-        old = jnp.take_along_axis(m, slots, axis=1)
+        old = m[:, slots]
         new = jnp.where(jnp.tanh(act) + r >= 0, 1, -1).astype(jnp.int8)
         new = jnp.where(mask, new, old)
-        flips = (new != old).sum().astype(jnp.int32)
-        m = m.at[jnp.zeros_like(slots), slots].set(new)
+        flips = (new != old).sum(axis=1).astype(jnp.int32)    # (R,)
+        m = m.at[:, slots].set(new)
         return m, rng, flips
 
     def _iteration_block(self, m, ghosts, macc, rng, flips, betas_S, sync, consts):
@@ -184,7 +209,10 @@ class DistDSIMEngine:
         )
 
         def block(m, ghosts, macc, rng, flips_in, betas, consts):
-            local = jnp.zeros((), jnp.int32)
+            # squeeze the device-local partition dim from state and consts
+            m, ghosts, macc, rng = m[0], ghosts[0], macc[0], rng[0]
+            consts = jax.tree.map(lambda x: x[0], consts)
+            local = jnp.zeros_like(flips_in)
 
             def it(carry, b):
                 m, ghosts, macc, rng, fl = carry
@@ -194,9 +222,9 @@ class DistDSIMEngine:
             (m, ghosts, macc, rng, local), _ = jax.lax.scan(
                 it, (m, ghosts, macc, rng, local), betas)
             flips = flips_in + jax.lax.psum(local, self.axis)
-            return m, ghosts, macc, rng, flips
+            return m[None], ghosts[None], macc[None], rng[None], flips
 
-        smapped = jax.shard_map(
+        smapped = shard_map(
             block, mesh=self.mesh,
             in_specs=(spec_m, spec_m, spec_m, rng_spec, P(), P(), cspec),
             out_specs=(spec_m, spec_m, spec_m, rng_spec, P()),
@@ -215,57 +243,72 @@ class DistDSIMEngine:
         self._chunk_cache[key] = run
         return run
 
+    def run_recorded_full(self, state: DSIMState, schedule,
+                          record_points: Sequence[int],
+                          sync_every: SyncSpec = 1):
+        """Shared-driver runner; returns (state, RunRecord)."""
+        sync = sync_every if sync_every in ("phase", None) else int(sync_every)
+
+        def chunk(st, betas2d, iters, S):
+            return self._run_chunk(iters, S, sync)(st, betas2d, self._consts)
+
+        return run_recorded_driver(
+            state=state, schedule=schedule, record_points=record_points,
+            chunk_fn=chunk, record_fn=self.energy, sync_every=sync_every,
+            flips_of=lambda st: st.flips,
+            flips_per_sweep=self.p.n * self.replicas)
+
     def run_recorded(self, state: DSIMState, schedule,
                      record_points: Sequence[int], sync_every: SyncSpec = 1):
-        S = 1 if sync_every in ("phase", None) else int(sync_every)
-        sync = sync_every if sync_every in ("phase", None) else int(sync_every)
-        pts = sorted(set(max(S, int(round(pp / S)) * S) for pp in record_points))
-        betas = schedule.beta_array()
-        if len(betas) < pts[-1]:
-            raise ValueError("schedule shorter than last record point")
-        out, times, pos = [], [], 0
-        for c in chunk_plan([pp // S for pp in pts]):
-            nsw = c * S
-            bchunk = jnp.asarray(betas[pos:pos + nsw]).reshape(c, S)
-            state = self._run_chunk(c, S, sync)(state, bchunk, self._consts)
-            pos += nsw
-            if pos in set(pts):
-                out.append(self.energy(state))
-                times.append(pos)
-        return state, (np.asarray(times), jnp.stack(out))
+        """Run to each record point; returns (state, (times, energies))."""
+        return self.run_recorded_full(state, schedule, record_points,
+                                      sync_every=sync_every)
 
     # -- observables -------------------------------------------------------------------
 
     def global_spins(self, state: DSIMState) -> jnp.ndarray:
-        p = self.p
-        buf = jnp.ones((p.n + 1,), dtype=jnp.int8)
-        buf = buf.at[p.global_ids.reshape(-1)].set(state.m.reshape(-1))
-        return buf[: p.n]
+        """(R, N) global spins; squeezed to (N,) when replicas == 1."""
+        p, R = self.p, self.replicas
+
+        def one(m_r):                                     # (K, n_max)
+            buf = jnp.ones((p.n + 1,), dtype=jnp.int8)
+            buf = buf.at[p.global_ids.reshape(-1)].set(m_r.reshape(-1))
+            return buf[: p.n]
+
+        spins = jax.vmap(one)(state.m.transpose(1, 0, 2))
+        return spins[0] if R == 1 else spins
+
+    def _energy_impl(self, state: DSIMState) -> jnp.ndarray:
+        spins = self.global_spins(state)
+        if self.replicas == 1:
+            return direct_energy(self.p.graph, spins)
+        return jax.vmap(lambda m: direct_energy(self.p.graph, m))(spins)
 
     def energy(self, state: DSIMState) -> jnp.ndarray:
-        return direct_energy(self.p.graph, self.global_spins(state))
+        """(R,) true global energies (scalar when replicas == 1)."""
+        return self._energy(state)
 
     # -- dry-run hook --------------------------------------------------------------------
 
     def lower_chunk(self, iters: int = 4, S: int = 4, sync: SyncSpec = 4):
         """Lower (not run) one sampling chunk — used by the launch dry-run."""
         run = self._run_chunk(iters, S, sync)
-        p = self.p
+        p, R = self.p, self.replicas
 
         def sds(x, shard):
             return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=shard)
 
-        rng_t = jax.random.split(jax.random.PRNGKey(0), p.K) \
+        rng_t = jax.random.split(jax.random.PRNGKey(0), p.K * R).reshape(p.K, R) \
             if self.rng_kind == "philox" else \
-            jnp.zeros((p.K, p.n_max), jnp.uint32)
+            jnp.zeros((p.K, R, p.n_max), jnp.uint32)
         zero = jnp.zeros((), jnp.int32)
         st = DSIMState(
-            m=jax.ShapeDtypeStruct((p.K, p.n_max), jnp.int8, sharding=self._shard),
-            ghosts=jax.ShapeDtypeStruct((p.K, p.g_max), jnp.float32, sharding=self._shard),
-            macc=jax.ShapeDtypeStruct((p.K, p.n_max), jnp.float32, sharding=self._shard),
+            m=jax.ShapeDtypeStruct((p.K, R, p.n_max), jnp.int8, sharding=self._shard),
+            ghosts=jax.ShapeDtypeStruct((p.K, R, p.g_max), jnp.float32, sharding=self._shard),
+            macc=jax.ShapeDtypeStruct((p.K, R, p.n_max), jnp.float32, sharding=self._shard),
             rng=sds(rng_t, self._shard),
             sweep=sds(zero, self._repl),
-            flips=sds(zero, self._repl),
+            flips=sds(jnp.zeros((R,), jnp.int32), self._repl),
         )
         betas = jax.ShapeDtypeStruct((iters, S), jnp.float32, sharding=self._repl)
         consts = jax.tree.map(lambda x: sds(x, self._shard), self._consts)

@@ -7,6 +7,12 @@ exactly; tests check against the direct energy.
 
 ``rng='philox'`` (jax.random, the paper's GPU baseline RNG) or ``rng='lfsr'``
 (vectorized xorshift32, the paper's hardware RNG).
+
+Replicas: ``init_state(..., replicas=R)`` returns a batched state whose
+leaves carry a leading R axis — R independent chains (independent RNG
+streams via spawned seeds) advanced together by one vmapped sweep, the
+software analogue of the paper running many anneals on one machine.
+Unbatched states remain first-class and bitwise-stable.
 """
 
 from __future__ import annotations
@@ -23,41 +29,35 @@ from .graph import IsingGraph
 from .coloring import Coloring
 from .pbit import FixedPoint, pbit_update, lfsr_init, lfsr_next, lfsr_uniform
 from .energy import energy as direct_energy
+from repro.engines.base import (run_recorded_driver, spawn_seeds,
+                                stack_states)
+from repro.engines.base import chunk_plan  # noqa: F401  (legacy import path)
 
-__all__ = ["GibbsEngine", "GibbsState", "chunk_plan"]
+__all__ = ["GibbsEngine", "GibbsState", "chunk_plan", "color_fields"]
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class GibbsState:
-    m: jnp.ndarray          # (N,) int8 spins
+    m: jnp.ndarray          # (N,) int8 spins — or (R, N) batched
     rng: jnp.ndarray        # philox: PRNG key; lfsr: (N,) uint32 states
     E: jnp.ndarray          # scalar f32, incrementally tracked energy
     sweep: jnp.ndarray      # scalar int32
-    flips: jnp.ndarray      # scalar int32 (wraps on very long runs; use the
-                            # per-sweep trace from run_dense for exact totals)
+    flips: jnp.ndarray      # scalar int32 modular odometer; the recording
+                            # driver accumulates the exact (>= int64) total
+                            # host-side from per-chunk deltas
 
 
-def chunk_plan(points: Sequence[int]) -> List[Tuple[int, int]]:
-    """Decompose gaps between record points into power-of-two chunks.
+def color_fields(m: jnp.ndarray, idx: jnp.ndarray, w: jnp.ndarray,
+                 h: jnp.ndarray) -> jnp.ndarray:
+    """Local fields of one color group.
 
-    Returns [(chunk_len, times)...] flattened as a list of (len, point?) —
-    concretely a list of chunk lengths whose cumsum passes through every
-    point, using only power-of-two lengths so at most log2(max_gap) distinct
-    jit signatures are compiled.
+    m (..., N) spins; idx/w (nc, D) the group's ELL rows; h (nc,).
+    Returns (..., nc).  Shared by the Gibbs engine and APT-ICM so both ride
+    the same gather/accumulate path (and the same batching semantics).
     """
-    plan = []
-    prev = 0
-    for p in points:
-        gap = int(p) - prev
-        if gap < 0:
-            raise ValueError("record points must be nondecreasing")
-        while gap > 0:
-            c = 1 << (gap.bit_length() - 1)
-            plan.append(c)
-            gap -= c
-        prev = int(p)
-    return plan
+    nbr = jnp.take(m, idx, axis=-1).astype(w.dtype)      # (..., nc, D)
+    return h + (w * nbr).sum(axis=-1)
 
 
 class GibbsEngine:
@@ -81,7 +81,13 @@ class GibbsEngine:
 
     # -- state ---------------------------------------------------------------
 
-    def init_state(self, seed: int = 0, m0: Optional[np.ndarray] = None) -> GibbsState:
+    def init_state(self, seed: int = 0, m0: Optional[np.ndarray] = None,
+                   replicas: Optional[int] = None) -> GibbsState:
+        """Fresh state; ``replicas=R`` stacks R independent chains (leading
+        replica axis, per-replica RNG streams from spawned seeds)."""
+        if replicas is not None:
+            return stack_states([self.init_state(s, m0=m0)
+                                 for s in spawn_seeds(seed, replicas)])
         key = jax.random.PRNGKey(seed)
         if m0 is None:
             key, sub = jax.random.split(key)
@@ -94,13 +100,16 @@ class GibbsEngine:
         zero = jnp.zeros((), dtype=jnp.int32)
         return GibbsState(m=m, rng=rng, E=E, sweep=zero, flips=zero)
 
+    @staticmethod
+    def is_batched(state: GibbsState) -> bool:
+        return state.m.ndim == 2
+
     # -- single sweep ---------------------------------------------------------
 
     def _phase(self, c: int, m, rng, beta):
         """Update color group c; returns (m, rng, dE, flips)."""
         nodes, idx, w, h = self._nodes[c], self._idx[c], self._w[c], self._h[c]
-        nbr = jnp.take(m, idx, axis=0).astype(w.dtype)
-        field = h + (w * nbr).sum(axis=-1)
+        field = color_fields(m, idx, w, h)
         if self.rng_kind == "philox":
             rng, sub = jax.random.split(rng)
             r = jax.random.uniform(sub, field.shape, minval=-1.0, maxval=1.0)
@@ -125,12 +134,20 @@ class GibbsEngine:
             flips = flips + f.astype(jnp.int32)
         return GibbsState(m=m, rng=rng, E=E, sweep=state.sweep + 1, flips=flips)
 
+    def _sweep_maybe_batched(self, batched: bool, per_replica_beta: bool):
+        if not batched:
+            return self.sweep
+        return jax.vmap(self.sweep, in_axes=(0, 0 if per_replica_beta else None))
+
     # -- runners ---------------------------------------------------------------
 
-    @functools.partial(jax.jit, static_argnums=0)
-    def _run_dense(self, state: GibbsState, betas: jnp.ndarray):
+    @functools.partial(jax.jit, static_argnums=(0, 3))
+    def _run_dense(self, state: GibbsState, betas: jnp.ndarray,
+                   batched: bool = False):
+        step = self._sweep_maybe_batched(batched, per_replica_beta=False)
+
         def body(st, beta):
-            st2 = self.sweep(st, beta)
+            st2 = step(st, beta)
             return st2, (st2.E, st2.flips - st.flips)
 
         return jax.lax.scan(body, state, betas)
@@ -138,36 +155,73 @@ class GibbsEngine:
     def run_dense(self, state: GibbsState, betas: np.ndarray):
         """Run len(betas) sweeps.
 
-        Returns (state, (per-sweep energy trace, per-sweep flip counts)).
+        Returns (state, (per-sweep energy trace, per-sweep flip counts));
+        for batched states the traces carry a trailing replica axis.
         """
-        return self._run_dense(state, jnp.asarray(betas, dtype=jnp.float32))
+        return self._run_dense(state, jnp.asarray(betas, dtype=jnp.float32),
+                               self.is_batched(state))
 
-    def _run_chunk(self, n: int):
-        if n not in self._run_chunk_cache:
+    def _run_chunk(self, n: int, batched: bool = False,
+                   per_replica_beta: bool = False):
+        key = (n, batched, per_replica_beta)
+        if key not in self._run_chunk_cache:
+            step = self._sweep_maybe_batched(batched, per_replica_beta)
+
             @jax.jit
             def f(state, betas):
                 def body(st, beta):
-                    return self.sweep(st, beta), None
+                    return step(st, beta), None
                 st, _ = jax.lax.scan(body, state, betas)
                 return st
-            self._run_chunk_cache[n] = f
-        return self._run_chunk_cache[n]
+            self._run_chunk_cache[key] = f
+        return self._run_chunk_cache[key]
 
-    def run_recorded(self, state: GibbsState, schedule, record_points: Sequence[int]):
-        """Run to each record point (power-of-2 chunking); returns (state, E at points)."""
-        betas = schedule.beta_array()
-        out = []
-        pos = 0
-        plan = chunk_plan(record_points)
-        targets = set(int(p) for p in record_points)
-        for c in plan:
-            state = self._run_chunk(c)(state, jnp.asarray(betas[pos:pos + c]))
-            pos += c
-            if pos in targets:
-                out.append(state.E)
-        return state, jnp.stack(out)
+    def run_recorded_full(self, state: GibbsState, schedule,
+                          record_points: Sequence[int], sync_every=1,
+                          betas_R: Optional[np.ndarray] = None):
+        """Shared-driver runner; returns (state, RunRecord).
+
+        ``sync_every`` is accepted (and ignored — the monolithic engine has
+        no boundaries) so every engine exposes one signature.
+        ``betas_R`` (total_sweeps, R) optionally gives each replica its own
+        staircase (replica-aware annealing)."""
+        batched = self.is_batched(state)
+        per_rep = betas_R is not None
+        if per_rep and not batched:
+            raise ValueError("per-replica betas need a batched state")
+        sched = schedule if not per_rep else _ArraySchedule(betas_R)
+
+        def chunk(st, betas2d, iters, S):
+            flat = betas2d.reshape((iters * S,) + betas2d.shape[2:])
+            return self._run_chunk(iters * S, batched, per_rep)(st, flat)
+
+        R = state.m.shape[0] if batched else 1
+        return run_recorded_driver(
+            state=state, schedule=sched, record_points=record_points,
+            chunk_fn=chunk, record_fn=lambda st: st.E, sync_every=1,
+            flips_of=lambda st: st.flips, flips_per_sweep=self.n * R)
+
+    def run_recorded(self, state: GibbsState, schedule,
+                     record_points: Sequence[int]):
+        """Run to each record point (power-of-2 chunking); returns
+        (state, E at points) — the legacy signature."""
+        state, rec = self.run_recorded_full(state, schedule, record_points)
+        return state, rec.energies
 
     # -- checks ---------------------------------------------------------------
 
     def direct_energy(self, state: GibbsState) -> jnp.ndarray:
+        if self.is_batched(state):
+            return jax.vmap(lambda m: direct_energy(self.g, m))(state.m)
         return direct_energy(self.g, state.m)
+
+
+class _ArraySchedule:
+    """Adapter presenting a precomputed (T,) or (T, R) beta array as a
+    Schedule to the recording driver."""
+
+    def __init__(self, betas):
+        self._betas = np.asarray(betas, dtype=np.float32)
+
+    def beta_array(self):
+        return self._betas

@@ -1,11 +1,19 @@
 """Brick-partitioned lattice DSIM on a device mesh (the production engine).
 
 The global lattice arrays are sharded directly over mesh axes — one brick
-per device.  Inside ``shard_map`` each device runs the fused Pallas color
-update on its brick; the ONLY collectives during sampling are the halo
-``ppermute``s of 1-byte boundary spin planes, every ``sync_every`` sweeps
-(x/y open chains, z a periodic ring — exactly the paper's boundary traffic,
-with ppermute as the source-synchronous link).
+per device.  Inside ``shard_map`` each device runs the fused multi-phase
+Pallas sweep on its brick: one kernel launch executes the full color cycle
+for up to ``sync_every`` sweeps (the per-phase kernel is kept as the
+reference path, selected with ``fused=False``).  The ONLY collectives
+during sampling are the halo ``ppermute``s of 1-byte boundary spin planes,
+every ``sync_every`` sweeps (x/y open chains, z a periodic ring — exactly
+the paper's boundary traffic, with ppermute as the source-synchronous link).
+
+Replicas: states always carry a leading replica axis R (default 1).  The
+R chains share the brick layout — the replica axis is a plain leading data
+dim on every sharded array, so halo ppermutes ship all R planes in one
+collective and the update kernel runs per replica (vmapped for the jnp
+reference path, an in-block loop for the Pallas paths).
 
 This is the path the 1M-p-bit production config (`ea3d_1m`) lowers through
 in the multi-pod dry-run.
@@ -24,8 +32,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from .lattice import LatticeProblem
 from .packing import pack_pm1, unpack_pm1, pad_to_multiple
 from .pbit import FixedPoint, lfsr_init
-from .gibbs import chunk_plan
-from repro.kernels.ops import pbit_update_op, brick_energy_op
+from repro.compat import shard_map
+from repro.engines.base import run_recorded_driver, spawn_seeds
+from repro.kernels.ops import pbit_update_op, pbit_sweep_op, brick_energy_op
 
 __all__ = ["LatticeDSIM", "LatticeState"]
 
@@ -33,11 +42,16 @@ __all__ = ["LatticeDSIM", "LatticeState"]
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class LatticeState:
-    m: jnp.ndarray        # (X, Y, Z) int8
-    s: jnp.ndarray        # (X, Y, Z) uint32 LFSR states
-    halos: tuple          # 6 halo-plane arrays (see _halo_shapes)
-    sweep: jnp.ndarray
-    flips: jnp.ndarray
+    m: jnp.ndarray        # (R, X, Y, Z) int8
+    s: jnp.ndarray        # (R, X, Y, Z) uint32 LFSR states
+    halos: tuple          # 6 halo-plane arrays, each (R, ...) (see _halo_shapes)
+    sweep: jnp.ndarray    # scalar int32
+    flips: jnp.ndarray    # (R,) int32 modular odometers (exact totals are
+                          # accumulated host-side by the recording driver)
+
+    @property
+    def replicas(self) -> int:
+        return int(self.m.shape[0])
 
 
 class LatticeDSIM:
@@ -45,12 +59,17 @@ class LatticeDSIM:
 
     ``bitpack_halos``: ship halo planes as 1-bit bitmaps over the ppermute
     links (8x less wire than int8 — the paper's exact 1-bit-per-boundary-
-    p-bit traffic; §Perf H8)."""
+    p-bit traffic; §Perf H8).
+
+    ``fused``: run the multi-phase fused sweep kernel (one launch per
+    ``sync_every`` sweeps); ``fused=False`` keeps the per-phase reference
+    dispatch (one launch per color phase), bitwise identical."""
 
     def __init__(self, prob: LatticeProblem, mesh: Mesh,
                  dim_axes: Tuple[Optional[str], Optional[str], Optional[str]],
                  fmt: Optional[FixedPoint] = None, impl: str = "auto",
-                 kernel_bx: Optional[int] = None, bitpack_halos: bool = True):
+                 kernel_bx: Optional[int] = None, bitpack_halos: bool = True,
+                 fused: bool = True, replicas: int = 1):
         self.p = prob
         self.mesh = mesh
         self.dim_axes = dim_axes
@@ -58,6 +77,11 @@ class LatticeDSIM:
         self.impl = impl
         self.kernel_bx = kernel_bx
         self.bitpack_halos = bitpack_halos
+        self.fused = fused and kernel_bx is None  # x-tiling forces per-phase
+        self.replicas = int(replicas)
+        if self.replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        self.n_sites = prob.n_active
         X, Y, Z = prob.dims
         self.nb = tuple(1 if a is None else mesh.shape[a] for a in dim_axes)
         for d, (ext, k) in enumerate(zip(prob.dims, self.nb)):
@@ -65,13 +89,12 @@ class LatticeDSIM:
                 raise ValueError(f"dim {d} extent {ext} not divisible by mesh factor {k}")
         self.brick = tuple(e // k for e, k in zip(prob.dims, self.nb))
         ax, ay, az = dim_axes
-        self.spec_m = P(ax, ay, az)
+        self.spec_m = P(None, ax, ay, az)        # leading replica axis
+        self.spec_flat = P(ax, ay, az)           # problem constants (no R)
         self.spec_masks = P(None, ax, ay, az)
-        # halo plane specs: (nbx, Y, Z), (nbx, Y, Z), (X, nby, Z), ... each
-        # sharded so every device holds exactly its (1-plane) halo slice
-        self.halo_specs = (P(ax, ay, az), P(ax, ay, az),
-                           P(ax, ay, az), P(ax, ay, az),
-                           P(ax, ay, az), P(ax, ay, az))
+        # halo plane specs: (R, nbx, Y, Z), ... each sharded so every device
+        # holds exactly its (1-plane) halo slice for all replicas
+        self.halo_specs = tuple(P(None, ax, ay, az) for _ in range(6))
         self._shard = lambda spec: NamedSharding(mesh, spec)
         self._chunk_cache = {}
         self._energy_fn = None
@@ -80,14 +103,16 @@ class LatticeDSIM:
 
     def _halo_shapes(self):
         (X, Y, Z), (kx, ky, kz) = self.p.dims, self.nb
-        return [(kx, Y, Z), (kx, Y, Z), (X, ky, Z), (X, ky, Z), (X, Y, kz), (X, Y, kz)]
+        R = self.replicas
+        return [(R, kx, Y, Z), (R, kx, Y, Z), (R, X, ky, Z), (R, X, ky, Z),
+                (R, X, Y, kz), (R, X, Y, kz)]
 
     def _exchange_block(self, m):
         """Refresh the six halo planes of this brick via neighbor ppermute.
 
-        Halo planes cross links 1-bit packed (pack -> permute -> unpack),
-        exactly the paper's boundary traffic; padding spins in the packed
-        tail are inert (their couplings are zero)."""
+        ``m`` is (R, bx, by, bz); all R planes of one face cross the link in
+        one (1-bit packed) ppermute.  Padding spins in the packed tail are
+        inert (their couplings are zero)."""
         ax, ay, az = self.dim_axes
         kx, ky, kz = self.nb
 
@@ -114,33 +139,58 @@ class LatticeDSIM:
             packed = jax.lax.ppermute(packed, axis_name, perm)
             return unpack_pm1(packed, n).reshape(shape)
 
-        xlo = shift(m[-1:, :, :], ax, kx, True, False)[0]
-        xhi = shift(m[:1, :, :], ax, kx, False, False)[0]
-        ylo = shift(m[:, -1:, :], ay, ky, True, False)[:, 0, :]
-        yhi = shift(m[:, :1, :], ay, ky, False, False)[:, 0, :]
-        zlo = shift(m[:, :, -1:], az, kz, True, True)[:, :, 0]
-        zhi = shift(m[:, :, :1], az, kz, False, True)[:, :, 0]
+        xlo = shift(m[:, -1:, :, :], ax, kx, True, False)[:, 0]
+        xhi = shift(m[:, :1, :, :], ax, kx, False, False)[:, 0]
+        ylo = shift(m[:, :, -1:, :], ay, ky, True, False)[:, :, 0, :]
+        yhi = shift(m[:, :, :1, :], ay, ky, False, False)[:, :, 0, :]
+        zlo = shift(m[:, :, :, -1:], az, kz, True, True)[:, :, :, 0]
+        zhi = shift(m[:, :, :, :1], az, kz, False, True)[:, :, :, 0]
         return (xlo, xhi, ylo, yhi, zlo, zhi)
 
     # -- block step -------------------------------------------------------------------
 
-    def _sweep_block(self, m, s, halos, beta, masks, h, w6):
-        flips = jnp.zeros((), jnp.int32)
-        for c in range(self.p.n_colors):
-            m2, s = pbit_update_op(m, s, beta, masks[c], h, w6, halos,
-                                   fmt=self.fmt, bx=self.kernel_bx,
-                                   impl=self.impl)
-            flips = flips + (m2 != m).sum().astype(jnp.int32)
-            m = m2
-        return m, s, flips
-
-    def _iteration_block(self, m, s, halos, betas_S, masks, h, w6):
+    def _sweep_phases_block(self, m, s, halos, betas_S, masks, h, w6):
+        """S sweeps of one replica's brick via per-phase dispatch (the
+        reference path).  m/s (bx, by, bz)."""
         def body(carry, beta):
             m, s, fl = carry
-            m, s, f = self._sweep_block(m, s, halos, beta, masks, h, w6)
-            return (m, s, fl + f), None
-        (m, s, fl), _ = jax.lax.scan(body, (m, s, jnp.zeros((), jnp.int32)),
-                                     betas_S)
+            for c in range(self.p.n_colors):
+                m2, s = pbit_update_op(m, s, beta, masks[c], h, w6, halos,
+                                       fmt=self.fmt, bx=self.kernel_bx,
+                                       impl=self.impl)
+                fl = fl + (m2 != m).sum().astype(jnp.int32)
+                m = m2
+            return (m, s, fl), None
+        (m, s, fl), _ = jax.lax.scan(
+            body, (m, s, jnp.zeros((), jnp.int32)), betas_S)
+        return m, s, fl
+
+    def _sweep_fused_block(self, m, s, halos, betas_S, masks, h, w6):
+        """S sweeps of one replica's brick in ONE fused kernel launch."""
+        return pbit_sweep_op(m, s, betas_S, masks, h, w6, halos,
+                             fmt=self.fmt, impl=self.impl)
+
+    def _iteration_block(self, m, s, halos, betas_S, masks, h, w6):
+        """S sweeps for all R replicas, then one halo exchange.
+
+        m/s (R, bx, by, bz); halos 6 x (R, plane)."""
+        one = self._sweep_fused_block if self.fused else \
+            self._sweep_phases_block
+        from repro.kernels.ops import default_impl
+        resolved = self.impl if self.impl != "auto" else default_impl()
+        if resolved == "ref":
+            # pure-jnp path: replicas vmap cleanly
+            m, s, fl = jax.vmap(
+                lambda mr, sr, hr: one(mr, sr, hr, betas_S, masks, h, w6),
+                in_axes=(0, 0, 0))(m, s, halos)
+        else:
+            # pallas paths: unrolled replica loop (no pallas_call batching)
+            outs = [one(m[r], s[r], jax.tree.map(lambda x: x[r], halos),
+                        betas_S, masks, h, w6)
+                    for r in range(m.shape[0])]
+            m = jnp.stack([o[0] for o in outs])
+            s = jnp.stack([o[1] for o in outs])
+            fl = jnp.stack([o[2] for o in outs])
         halos = self._exchange_block(m)
         return m, s, halos, fl
 
@@ -154,15 +204,17 @@ class LatticeDSIM:
         if key in self._chunk_cache:
             return self._chunk_cache[key]
         spec_m, spec_masks = self.spec_m, self.spec_masks
+        spec_flat = self.spec_flat
         hspecs = self.halo_specs
         axes_all = self._axes_all()
+        R = self.replicas
 
         def block(m, s, halos, betas, masks, h, w6):
-            # halos arrive as (k?, ...) plane stacks; squeeze the brick dims
+            # halos arrive as (R, k?, ...) plane stacks; squeeze the brick dims
             xlo, xhi, ylo, yhi, zlo, zhi = halos
-            halos = (xlo[0], xhi[0], ylo[:, 0, :], yhi[:, 0, :],
-                     zlo[:, :, 0], zhi[:, :, 0])
-            local = jnp.zeros((), jnp.int32)
+            halos = (xlo[:, 0], xhi[:, 0], ylo[:, :, 0, :], yhi[:, :, 0, :],
+                     zlo[:, :, :, 0], zhi[:, :, :, 0])
+            local = jnp.zeros((R,), jnp.int32)
 
             def it(carry, b):
                 m, s, halos, fl = carry
@@ -173,14 +225,15 @@ class LatticeDSIM:
                 it, (m, s, halos, local), betas)
             flips = jax.lax.psum(local, axes_all) if axes_all else local
             xlo, xhi, ylo, yhi, zlo, zhi = halos
-            halos = (xlo[None], xhi[None], ylo[:, None, :], yhi[:, None, :],
-                     zlo[:, :, None], zhi[:, :, None])
+            halos = (xlo[:, None], xhi[:, None],
+                     ylo[:, :, None, :], yhi[:, :, None, :],
+                     zlo[:, :, :, None], zhi[:, :, :, None])
             return m, s, halos, flips
 
-        smapped = jax.shard_map(
+        smapped = shard_map(
             block, mesh=self.mesh,
-            in_specs=(spec_m, spec_m, hspecs, P(), spec_masks, spec_m,
-                      tuple(spec_m for _ in range(6))),
+            in_specs=(spec_m, spec_m, hspecs, P(), spec_masks, spec_flat,
+                      tuple(spec_flat for _ in range(6))),
             out_specs=(spec_m, spec_m, hspecs, P()),
             check_vma=False,
         )
@@ -200,13 +253,19 @@ class LatticeDSIM:
     def init_state(self, seed: int = 0) -> LatticeState:
         p = self.p
         X, Y, Z = p.dims
-        rng = np.random.default_rng(seed)
-        m = jnp.asarray(rng.choice(np.array([-1, 1], np.int8), size=(X, Y, Z)))
-        s = lfsr_init(X * Y * Z, seed).reshape(X, Y, Z)
+        R = self.replicas
+        seeds = [seed] if R == 1 else spawn_seeds(seed, R)
+        ms, ss = [], []
+        for sd in seeds:
+            rng = np.random.default_rng(sd)
+            ms.append(rng.choice(np.array([-1, 1], np.int8), size=(X, Y, Z)))
+            ss.append(np.asarray(lfsr_init(X * Y * Z, sd)).reshape(X, Y, Z))
+        m = jnp.asarray(np.stack(ms))
+        s = jnp.asarray(np.stack(ss))
         halos = tuple(jnp.zeros(sh, jnp.int8) for sh in self._halo_shapes())
         st = LatticeState(m=m, s=s, halos=halos,
                           sweep=jnp.zeros((), jnp.int32),
-                          flips=jnp.zeros((), jnp.int32))
+                          flips=jnp.zeros((R,), jnp.int32))
         st = self.shard_state(st)
         # one synchronizing exchange so the first sweeps see real halos
         return self._refresh_halos(st)
@@ -224,51 +283,65 @@ class LatticeDSIM:
     def _refresh_halos(self, st: LatticeState) -> LatticeState:
         def block(m):
             xlo, xhi, ylo, yhi, zlo, zhi = self._exchange_block(m)
-            return (xlo[None], xhi[None], ylo[:, None, :], yhi[:, None, :],
-                    zlo[:, :, None], zhi[:, :, None])
-        halos = jax.jit(jax.shard_map(
+            return (xlo[:, None], xhi[:, None],
+                    ylo[:, :, None, :], yhi[:, :, None, :],
+                    zlo[:, :, :, None], zhi[:, :, :, None])
+        halos = jax.jit(shard_map(
             block, mesh=self.mesh, in_specs=(self.spec_m,),
             out_specs=self.halo_specs, check_vma=False))(st.m)
         return dataclasses.replace(st, halos=halos)
 
+    def run_recorded_full(self, state: LatticeState, schedule,
+                          record_points: Sequence[int], sync_every: int = 1):
+        """Shared-driver runner; returns (state, RunRecord)."""
+        def chunk(st, betas2d, iters, S):
+            return self._run_chunk(iters, S)(st, betas2d, self.p.masks,
+                                             self.p.h, self.p.w6)
+
+        return run_recorded_driver(
+            state=state, schedule=schedule, record_points=record_points,
+            chunk_fn=chunk, record_fn=self.energy, sync_every=int(sync_every),
+            flips_of=lambda st: st.flips,
+            flips_per_sweep=self.n_sites * self.replicas)
+
     def run_recorded(self, state: LatticeState, schedule,
                      record_points: Sequence[int], sync_every: int = 1):
-        S = int(sync_every)
-        pts = sorted(set(max(S, int(round(pp / S)) * S) for pp in record_points))
-        betas = schedule.beta_array()
-        if len(betas) < pts[-1]:
-            raise ValueError("schedule shorter than last record point")
-        out, times, pos = [], [], 0
-        for c in chunk_plan([pp // S for pp in pts]):
-            nsw = c * S
-            bchunk = jnp.asarray(betas[pos:pos + nsw]).reshape(c, S)
-            state = self._run_chunk(c, S)(state, bchunk, self.p.masks,
-                                          self.p.h, self.p.w6)
-            pos += nsw
-            if pos in set(pts):
-                out.append(self.energy(state))
-                times.append(pos)
-        return state, (np.asarray(times), jnp.stack(out))
+        """Run to each record point; returns (state, (times, energies))."""
+        return self.run_recorded_full(state, schedule, record_points,
+                                      sync_every=sync_every)
 
     # -- observables -----------------------------------------------------------------------
 
     def energy(self, state: LatticeState) -> jnp.ndarray:
-        """True global energy (halos refreshed for the readout)."""
+        """True global energies, one per replica (halos refreshed for the
+        readout).  Returns (R,) — or a scalar when replicas == 1, keeping
+        the legacy contract."""
         if self._energy_fn is None:
             axes_all = self._axes_all()
 
             def block(m, active, h, w6):
                 halos = self._exchange_block(m)
-                e = brick_energy_op(m, active, h, w6, halos,
-                                    bx=self.kernel_bx, impl=self.impl)
+                e = jax.vmap(
+                    lambda mr, hr: brick_energy_op(mr, active, h, w6, hr,
+                                                   bx=self.kernel_bx,
+                                                   impl=self.impl),
+                    in_axes=(0, 0))(m, halos)
                 return jax.lax.psum(e, axes_all) if axes_all else e
 
-            self._energy_fn = jax.jit(jax.shard_map(
+            self._energy_fn = jax.jit(shard_map(
                 block, mesh=self.mesh,
-                in_specs=(self.spec_m, self.spec_m, self.spec_m,
-                          tuple(self.spec_m for _ in range(6))),
+                in_specs=(self.spec_m, self.spec_flat, self.spec_flat,
+                          tuple(self.spec_flat for _ in range(6))),
                 out_specs=P(), check_vma=False))
-        return self._energy_fn(state.m, self.p.active, self.p.h, self.p.w6)
+        e = self._energy_fn(state.m, self.p.active, self.p.h, self.p.w6)
+        return e[0] if self.replicas == 1 else e
+
+    def global_spins(self, state: LatticeState) -> jnp.ndarray:
+        """(R, L^3) active-site spins in ea3d node order ((L,L,L) row-major);
+        squeezed to (L^3,) when replicas == 1."""
+        L = self.p.L
+        spins = state.m[:, :L, :L, :L].reshape(self.replicas, L ** 3)
+        return spins[0] if self.replicas == 1 else spins
 
     # -- dry-run hook -----------------------------------------------------------------------
 
@@ -280,20 +353,22 @@ class LatticeDSIM:
                                         sharding=self._shard(spec))
         p = self.p
         X, Y, Z = p.dims
+        R = self.replicas
         st = LatticeState(
-            m=jax.ShapeDtypeStruct((X, Y, Z), jnp.int8,
+            m=jax.ShapeDtypeStruct((R, X, Y, Z), jnp.int8,
                                    sharding=self._shard(self.spec_m)),
-            s=jax.ShapeDtypeStruct((X, Y, Z), jnp.uint32,
+            s=jax.ShapeDtypeStruct((R, X, Y, Z), jnp.uint32,
                                    sharding=self._shard(self.spec_m)),
             halos=tuple(jax.ShapeDtypeStruct(tuple(sh), jnp.int8,
                                              sharding=self._shard(sp))
                         for sh, sp in zip(self._halo_shapes(), self.halo_specs)),
             sweep=jax.ShapeDtypeStruct((), jnp.int32, sharding=self._shard(P())),
-            flips=jax.ShapeDtypeStruct((), jnp.int32, sharding=self._shard(P())),
+            flips=jax.ShapeDtypeStruct((R,), jnp.int32,
+                                       sharding=self._shard(P())),
         )
         betas = jax.ShapeDtypeStruct((iters, S), jnp.float32,
                                      sharding=self._shard(P()))
         masks = sds(p.masks, self.spec_masks)
-        h = sds(p.h, self.spec_m)
-        w6 = tuple(sds(w, self.spec_m) for w in p.w6)
+        h = sds(p.h, self.spec_flat)
+        w6 = tuple(sds(w, self.spec_flat) for w in p.w6)
         return run.lower(st, betas, masks, h, w6)

@@ -1,0 +1,35 @@
+"""Unified engine layer.
+
+Every sampling backend — monolithic Gibbs, partitioned DSIM (stacked and
+device-mesh), structured-lattice DSIM — is reachable through one protocol
+(:class:`Engine`) and one string-keyed factory (:func:`make_engine`), runs
+R independent replicas per call, and records trajectories through one shared
+chunk-planning driver (:func:`run_recorded_driver`).
+
+  from repro.engines import make_engine
+  eng = make_engine("lattice", graph=None, L=8, seed=0, replicas=4)
+  st = eng.init_state(seed=0)
+  st, rec = eng.run_recorded(st, ea_schedule(512), [64, 512], sync_every=4)
+  rec.energies      # (points, R) per-replica traces
+  rec.flips         # exact total flips (host int, no int32 wraparound)
+"""
+
+from .base import (Engine, RunRecord, chunk_plan, run_recorded_driver,
+                   spawn_seeds, stack_states)
+
+__all__ = ["Engine", "RunRecord", "chunk_plan", "run_recorded_driver",
+           "spawn_seeds", "stack_states", "ENGINE_NAMES", "make_engine"]
+
+
+def make_engine(name, *args, **kwargs):
+    # lazy: registry imports the core engines, which import engines.base —
+    # resolving at call time keeps the package import acyclic
+    from .registry import make_engine as _make
+    return _make(name, *args, **kwargs)
+
+
+def __getattr__(name):
+    if name == "ENGINE_NAMES":        # canonical copy lives in the registry
+        from .registry import ENGINE_NAMES
+        return ENGINE_NAMES
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,223 @@
+"""Engine protocol, chunk planning, and the shared recording driver.
+
+Before this layer, every backend hand-rolled the same ``run_recorded`` loop
+(quantize record points to exchange boundaries, decompose the gaps into
+power-of-two chunks, jit one runner per chunk length, read an observable at
+each record point).  The four near-duplicates now all call
+:func:`run_recorded_driver`; a backend only supplies its chunk runner and
+its observable.
+
+Flip accounting: device-side counters are int32 (TPU-native), which wraps
+after ~2.1e9 flips — minutes of runtime at the paper's 1e12 flips/s.  The
+driver therefore treats the device counter as a modular odometer: it reads
+it once per chunk, takes the delta mod 2**32, and accumulates the exact
+total in a host-side Python int (arbitrary precision, so >= int64 by
+construction).  ``chunk_plan(max_chunk=...)`` bounds the per-chunk delta
+below 2**31 so the modular delta is unambiguous.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Protocol, Sequence, Union, runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Engine", "RunRecord", "SyncSpec", "chunk_plan",
+           "run_recorded_driver", "spawn_seeds", "stack_states",
+           "flips_chunk_cap"]
+
+SyncSpec = Union[int, str, None]
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """What every sampling backend exposes to callers.
+
+    ``replicas`` (R) is fixed at construction; states carry a leading
+    replica axis and all traces are per-replica.
+    """
+
+    replicas: int
+    n_sites: int
+
+    def init_state(self, seed: int = 0) -> Any:
+        """Fresh replicated sampler state (R independent RNG streams)."""
+
+    def run_recorded(self, state, schedule, record_points: Sequence[int],
+                     sync_every: SyncSpec = 1):
+        """Run to each record point; returns (state, RunRecord)."""
+
+    def energy(self, state) -> jnp.ndarray:
+        """(R,) true global energies of the current configurations."""
+
+    def global_spins(self, state) -> jnp.ndarray:
+        """(R, N) spins in the original problem's node order."""
+
+    def lower_chunk(self, iters: int = 2, S: int = 4):
+        """Lower (not run) one sampling chunk — dry-run/roofline hook."""
+
+
+@dataclasses.dataclass
+class RunRecord:
+    """Recorded trajectory: unpacks like the legacy ``(times, energies)``
+    pair; ``flips`` rides along as the exact host-side total."""
+
+    times: np.ndarray          # (P,) sweep indices of the record points
+    energies: jnp.ndarray      # (P,) or (P, R) energies at those points
+    flips: int = 0             # exact accepted-flip total (Python int)
+
+    def __iter__(self):
+        return iter((self.times, self.energies))
+
+    def __len__(self):
+        return 2
+
+    def __getitem__(self, i):
+        return (self.times, self.energies)[i]
+
+
+def chunk_plan(points: Sequence[int],
+               max_chunk: Optional[int] = None) -> List[int]:
+    """Decompose gaps between record points into power-of-two chunks.
+
+    Returns a list of chunk lengths whose cumsum passes through every point,
+    using only power-of-two lengths so at most log2(max_gap) distinct jit
+    signatures are compiled.  ``max_chunk`` (a power of two) additionally
+    caps each chunk — used to bound per-chunk flip counts below 2**31.
+    """
+    if max_chunk is not None:
+        if max_chunk < 1 or max_chunk & (max_chunk - 1):
+            raise ValueError(f"max_chunk must be a power of two, got {max_chunk}")
+    plan: List[int] = []
+    prev = 0
+    for p in points:
+        gap = int(p) - prev
+        if gap < 0:
+            raise ValueError("record points must be nondecreasing")
+        while gap > 0:
+            c = 1 << (gap.bit_length() - 1)
+            if max_chunk is not None:
+                c = min(c, max_chunk)
+            plan.append(c)
+            gap -= c
+        prev = int(p)
+    return plan
+
+
+def flips_chunk_cap(flips_per_sweep: int, sweeps_per_iter: int = 1) -> int:
+    """Largest power-of-two iteration chunk whose worst-case flip count
+    stays below 2**31 (so int32 deltas are exact)."""
+    per_iter = max(int(flips_per_sweep), 1) * max(int(sweeps_per_iter), 1)
+    cap = max((1 << 30) // per_iter, 1)
+    return 1 << (cap.bit_length() - 1)
+
+
+def quantize_record_points(record_points: Sequence[int], S: int) -> List[int]:
+    """Record points snapped to multiples of the exchange period S."""
+    return sorted(set(max(S, int(round(p / S)) * S) for p in record_points))
+
+
+def _flips_read(value) -> np.ndarray:
+    return np.atleast_1d(np.asarray(value)).astype(np.int64) % (1 << 32)
+
+
+def run_recorded_driver(*, state, schedule, record_points: Sequence[int],
+                        chunk_fn: Callable,
+                        record_fn: Callable,
+                        sync_every: SyncSpec = 1,
+                        flips_of: Optional[Callable] = None,
+                        flips_per_sweep: Optional[int] = None):
+    """The shared recording loop.
+
+    Args:
+      state: engine state (any pytree).
+      schedule: a ``repro.core.annealing.Schedule``.
+      record_points: sweep indices at which to record.
+      chunk_fn: ``(state, betas_2d, iters, S) -> state`` runs ``iters``
+        iterations of ``S`` sweeps; betas_2d has shape (iters, S).
+      record_fn: ``state -> observable`` read at each record point.
+      sync_every: int S (exchange every S sweeps), 'phase', or None —
+        engines that don't exchange just ignore it in their chunk_fn.
+      flips_of: optional ``state -> int32 array`` cumulative device flip
+        counter(s); when given, the driver accumulates the exact total.
+      flips_per_sweep: worst-case flips per sweep (usually N sites times
+        replicas); bounds chunk sizes so int32 deltas never alias.
+
+    Returns (state, RunRecord).
+    """
+    S = 1 if sync_every in ("phase", None) else int(sync_every)
+    pts = quantize_record_points(record_points, S)
+    betas = schedule.beta_array()
+    if len(betas) < pts[-1]:
+        raise ValueError("schedule shorter than last record point")
+    max_chunk = None
+    if flips_per_sweep is not None:
+        max_chunk = flips_chunk_cap(flips_per_sweep, S)
+    plan = chunk_plan([p // S for p in pts], max_chunk=max_chunk)
+    targets = set(pts)
+
+    # The device counter is read lazily: at record points (which synchronize
+    # anyway for the observable) and just before the worst-case flips since
+    # the last read could reach 2**31 (keeping the modular delta
+    # unambiguous).  Chunks never end with a gratuitous host sync.
+    flips_total = 0
+    prev = _flips_read(flips_of(state)) if flips_of is not None else None
+    pending = 0                      # worst-case flips since `prev` was read
+    LIMIT = 1 << 31
+
+    def read_flips():
+        nonlocal flips_total, prev, pending
+        cur = _flips_read(flips_of(state))
+        flips_total += int(((cur - prev) % (1 << 32)).sum())
+        prev = cur
+        pending = 0
+
+    out, times, pos = [], [], 0
+    betas = np.asarray(betas)
+    for c in plan:
+        nsw = c * S
+        worst = nsw * (flips_per_sweep or 0)
+        if flips_of is not None and flips_per_sweep and \
+                pending + worst >= LIMIT:
+            read_flips()
+        # trailing dims (e.g. a per-replica axis) ride along untouched
+        bchunk = jnp.asarray(betas[pos:pos + nsw]).reshape(
+            (c, S) + betas.shape[1:])
+        state = chunk_fn(state, bchunk, c, S)
+        pos += nsw
+        pending += worst
+        if flips_of is not None and flips_per_sweep is None:
+            read_flips()             # unknown bound: stay exact per chunk
+        if pos in targets:
+            out.append(record_fn(state))
+            times.append(pos)
+            if flips_of is not None:
+                read_flips()
+    if flips_of is not None and pending:
+        read_flips()
+    return state, RunRecord(np.asarray(times), jnp.stack(out), flips_total)
+
+
+# ---------------------------------------------------------------------------
+# replica helpers
+# ---------------------------------------------------------------------------
+
+def spawn_seeds(seed: int, replicas: int) -> List[int]:
+    """R independent 31-bit seeds derived from one master seed.
+
+    Uses numpy's SeedSequence spawning, so replica streams are statistically
+    independent and replica r of (seed, R) equals replica r of (seed, R')
+    for r < min(R, R') — growing the replica batch never reshuffles the
+    existing chains.
+    """
+    ss = np.random.SeedSequence(seed)
+    return [int(child.generate_state(1)[0] & 0x7FFFFFFF)
+            for child in ss.spawn(replicas)]
+
+
+def stack_states(states: Sequence[Any]):
+    """Stack per-replica state pytrees along a new leading replica axis."""
+    import jax
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *states)

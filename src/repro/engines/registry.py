@@ -1,0 +1,220 @@
+"""String-keyed engine factory and the uniform adapters behind it.
+
+``make_engine(name, ...)`` builds any of the four sampling backends from a
+problem description and returns a handle satisfying the :class:`Engine`
+protocol: replicated ``init_state``, driver-backed ``run_recorded`` with
+(P, R) per-replica energy traces and exact flip totals, ``energy``,
+``global_spins``, and ``lower_chunk``.
+
+At replicas=1 every handle is bitwise identical to its legacy class driven
+directly (same seeds, same RNG streams) — the adapters only normalize
+shapes, never dynamics.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import IsingGraph
+from repro.core.coloring import Coloring, greedy_coloring
+from repro.core.gibbs import GibbsEngine
+from repro.core.dsim import PartitionedProblem, build_partitioned, DSIMEngine
+from repro.core.dsim_dist import DistDSIMEngine
+from repro.core.lattice import LatticeProblem, build_ea3d_lattice
+from repro.core.lattice_dsim import LatticeDSIM
+from repro.compat import make_mesh, auto_axes
+from .base import RunRecord, SyncSpec
+
+__all__ = ["ENGINE_NAMES", "make_engine"]
+
+ENGINE_NAMES = ("gibbs", "dsim", "dsim_dist", "lattice")
+
+
+def _as_2d(energies: jnp.ndarray) -> jnp.ndarray:
+    """(P,) single-replica trace -> (P, 1); (P, R) passes through."""
+    return energies[:, None] if energies.ndim == 1 else energies
+
+
+def _as_1d(x) -> jnp.ndarray:
+    return jnp.atleast_1d(jnp.asarray(x))
+
+
+class _Handle:
+    """Shared adapter plumbing over a legacy engine instance.
+
+    The default methods cover the engines whose replicas are fixed at
+    construction (dist, lattice); the batched-state engines (gibbs, dsim)
+    override ``init_state`` to thread the replica count, and gibbs alone
+    overrides ``run_recorded`` (it has no boundaries, so no sync_every)."""
+
+    name: str = ""
+
+    def __init__(self, eng, replicas: int, n_sites: int):
+        self.eng = eng
+        self.replicas = int(replicas)
+        self.n_sites = int(n_sites)
+
+    def init_state(self, seed: int = 0):
+        return self.eng.init_state(seed)
+
+    def run_recorded(self, state, schedule, record_points: Sequence[int],
+                     sync_every: SyncSpec = 1):
+        state, rec = self.eng.run_recorded_full(state, schedule,
+                                                record_points,
+                                                sync_every=sync_every)
+        return state, RunRecord(rec.times, _as_2d(rec.energies), rec.flips)
+
+    def energy(self, state) -> jnp.ndarray:
+        return _as_1d(self.eng.energy(state))
+
+    def global_spins(self, state) -> jnp.ndarray:
+        return jnp.atleast_2d(self.eng.global_spins(state))
+
+    def lower_chunk(self, iters: int = 2, S: int = 4):
+        return self.eng.lower_chunk(iters=iters, S=S)
+
+    def __repr__(self):
+        return (f"<engine {self.name!r} n={self.n_sites} "
+                f"R={self.replicas}>")
+
+
+class _BatchedStateHandle(_Handle):
+    """gibbs/dsim: the replica axis lives on the state, not the engine."""
+
+    def init_state(self, seed: int = 0):
+        # R=1 keeps the legacy unbatched state (bitwise-stable trajectories)
+        return self.eng.init_state(
+            seed, replicas=None if self.replicas == 1 else self.replicas)
+
+
+class _GibbsHandle(_BatchedStateHandle):
+    name = "gibbs"
+
+    def run_recorded(self, state, schedule, record_points: Sequence[int],
+                     sync_every: SyncSpec = 1):
+        state, rec = self.eng.run_recorded_full(state, schedule,
+                                                record_points)
+        return state, RunRecord(rec.times, _as_2d(rec.energies), rec.flips)
+
+    def energy(self, state) -> jnp.ndarray:
+        return _as_1d(self.eng.direct_energy(state))
+
+    def global_spins(self, state) -> jnp.ndarray:
+        return jnp.atleast_2d(state.m)
+
+    def lower_chunk(self, iters: int = 2, S: int = 4):
+        st = self.init_state(seed=0)
+        batched = self.eng.is_batched(st)
+        betas = jnp.zeros((iters * S,), jnp.float32)
+        return self.eng._run_chunk(iters * S, batched).lower(st, betas)
+
+
+class _DSIMHandle(_BatchedStateHandle):
+    name = "dsim"
+
+    def lower_chunk(self, iters: int = 2, S: int = 4):
+        st = self.init_state(seed=0)
+        batched = self.eng.is_batched(st)
+        betas = jnp.zeros((iters, S), jnp.float32)
+        return self.eng._run_chunk(iters, S, S, batched).lower(st, betas)
+
+
+class _DistHandle(_Handle):
+    name = "dsim_dist"
+
+
+class _LatticeHandle(_Handle):
+    name = "lattice"
+
+
+def _default_coloring(g: IsingGraph, coloring: Optional[Coloring]) -> Coloring:
+    if coloring is not None:
+        return coloring
+    return greedy_coloring(np.asarray(g.idx), np.asarray(g.w))
+
+
+def _default_partitioned(graph, coloring, K, labels) -> PartitionedProblem:
+    if isinstance(graph, PartitionedProblem):
+        return graph
+    g = graph
+    col = _default_coloring(g, coloring)
+    K = 4 if K is None else int(K)
+    if labels is None:
+        from repro.core.partition import greedy_partition
+        labels = greedy_partition(np.asarray(g.idx), np.asarray(g.w), K,
+                                  seed=0)
+    return build_partitioned(g, col, np.asarray(labels, np.int32), K)
+
+
+def make_engine(name: str, graph=None, *, coloring: Optional[Coloring] = None,
+                replicas: int = 1, rng: str = "philox", fmt=None,
+                K: Optional[int] = None, labels=None, mode: str = "dsim",
+                mesh=None, axis: str = "data", dim_axes=None,
+                lattice: Optional[LatticeProblem] = None,
+                L: Optional[int] = None, seed: int = 0,
+                impl: str = "auto", bitpack: bool = True,
+                fused: bool = True, kernel_bx: Optional[int] = None,
+                bitpack_halos: bool = True):
+    """Build a sampling engine by name.
+
+      "gibbs"     — monolithic chromatic Gibbs; needs ``graph`` (+coloring).
+      "dsim"      — partitioned, stacked on one device; ``graph`` (or a
+                    prebuilt PartitionedProblem) + K/labels.
+      "dsim_dist" — the same semantics across a device mesh; K must equal
+                    the mesh axis size (defaults to a mesh over all local
+                    devices).
+      "lattice"   — brick-partitioned structured EA3D lattice (the fused-
+                    kernel production path); pass ``lattice=`` a
+                    LatticeProblem or ``L=`` to build one from ``seed``.
+
+    ``replicas=R`` makes every handle run R independent chains per call.
+    """
+    if name not in ENGINE_NAMES:
+        raise ValueError(f"unknown engine {name!r}; choose from {ENGINE_NAMES}")
+    if replicas < 1:
+        raise ValueError("replicas must be >= 1")
+
+    if name == "gibbs":
+        if not isinstance(graph, IsingGraph):
+            raise ValueError("gibbs engine needs an IsingGraph")
+        eng = GibbsEngine(graph, _default_coloring(graph, coloring),
+                          rng=rng, fmt=fmt)
+        return _GibbsHandle(eng, replicas, graph.n)
+
+    if name == "dsim":
+        prob = _default_partitioned(graph, coloring, K, labels)
+        eng = DSIMEngine(prob, rng=rng, fmt=fmt, mode=mode)
+        return _DSIMHandle(eng, replicas, prob.n)
+
+    if name == "dsim_dist":
+        prob = _default_partitioned(graph, coloring, K, labels)
+        if mesh is None:
+            import jax
+            ndev = len(jax.devices())
+            if ndev != prob.K:
+                raise ValueError(
+                    f"dsim_dist needs a mesh with K={prob.K} devices along "
+                    f"{axis!r} (have {ndev}); pass mesh= explicitly")
+            mesh = make_mesh((prob.K,), (axis,), axis_types=auto_axes(1))
+        eng = DistDSIMEngine(prob, mesh, axis=axis, rng=rng, fmt=fmt,
+                             mode=mode, bitpack=bitpack, replicas=replicas)
+        return _DistHandle(eng, replicas, prob.n)
+
+    # name == "lattice"
+    prob = lattice
+    if prob is None:
+        if L is None:
+            raise ValueError("lattice engine needs lattice= or L=")
+        prob = build_ea3d_lattice(int(L), seed=seed)
+    if mesh is None:
+        mesh = make_mesh((1,), (axis,), axis_types=auto_axes(1))
+        dim_axes = (axis, None, None) if dim_axes is None else dim_axes
+    elif dim_axes is None:
+        raise ValueError("pass dim_axes when passing a mesh")
+    eng = LatticeDSIM(prob, mesh, dim_axes=dim_axes, fmt=fmt, impl=impl,
+                      kernel_bx=kernel_bx, bitpack_halos=bitpack_halos,
+                      fused=fused, replicas=replicas)
+    return _LatticeHandle(eng, replicas, prob.n_active)

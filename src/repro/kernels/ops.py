@@ -16,7 +16,8 @@ import jax
 from repro.core.pbit import FixedPoint
 from . import pbit_lattice, lattice_energy, ref as _ref
 
-__all__ = ["pbit_update_op", "brick_energy_op", "default_impl"]
+__all__ = ["pbit_update_op", "pbit_sweep_op", "brick_energy_op",
+           "default_impl"]
 
 
 def default_impl() -> str:
@@ -35,6 +36,19 @@ def pbit_update_op(m, s, beta, parity_mask, h, w6, halos,
         return _ref.pbit_brick_update_ref(m, s, beta, parity_mask, h, w6, halos, fmt)
     return pbit_lattice.pbit_brick_update(
         m, s, beta, parity_mask, h, w6, halos, fmt=fmt, bx=bx,
+        interpret=(impl == "interpret"))
+
+
+def pbit_sweep_op(m, s, betas, masks, h, w6, halos,
+                  fmt: Optional[FixedPoint] = None, impl: str = "auto"):
+    """Fused multi-phase sweep: len(betas) full color cycles in one kernel
+    launch (halos fixed).  Returns (m, s, flips:int32)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.pbit_brick_sweep_ref(m, s, betas, masks, h, w6, halos,
+                                         fmt)
+    return pbit_lattice.pbit_brick_sweep(
+        m, s, betas, masks, h, w6, halos, fmt=fmt,
         interpret=(impl == "interpret"))
 
 

@@ -32,7 +32,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.pbit import FixedPoint
 
-__all__ = ["pbit_brick_update"]
+__all__ = ["pbit_brick_update", "pbit_brick_sweep"]
 
 
 def _kernel(parity_ref, beta_ref,
@@ -80,6 +80,136 @@ def _kernel(parity_ref, beta_ref,
     mask = parity_ref[...] != 0
     m_out_ref[...] = jnp.where(mask, upd, mc_raw)
     s_out_ref[...] = s
+
+
+# ---------------------------------------------------------------------------
+# fused multi-phase sweep kernel
+# ---------------------------------------------------------------------------
+#
+# One pallas_call runs the ENTIRE color cycle — and up to ``sweeps_per_call``
+# sweeps between halo exchanges — against halos held fixed: the analogue of
+# the FPGA retiring one color group per clock with no host round-trips.  The
+# whole brick is a single block (no x tiling): later phases must read the
+# spins earlier phases just wrote, which grid steps cannot do.  The LFSR
+# column is read from VMEM once, advanced in registers through every phase,
+# and written back once.
+#
+# VMEM working set for a (Bx, By, Bz) brick:
+#   7 f32 weight/bias arrays            28 * B bytes
+#   n_colors int8 parity masks     n_c * 1 * B
+#   in/out spins (int8) + LFSR (u32)    10 * B
+#   6 int8 halo planes                  ~6 * B^(2/3)
+# ~= (38 + n_colors) * Bx*By*Bz bytes — a 32^3 brick with 3 colors is
+# ~1.3 MiB, comfortably inside a 16 MiB VMEM budget; 48^3 (~4.5 MiB) still
+# fits.  Larger bricks must fall back to the per-phase kernel, which tiles x.
+
+
+def _sweep_kernel(betas_ref, masks_ref,
+                  h_ref, wxm_ref, wxp_ref, wym_ref, wyp_ref, wzm_ref, wzp_ref,
+                  m_ref,
+                  xlo_ref, xhi_ref, ylo_ref, yhi_ref, zlo_ref, zhi_ref,
+                  s_ref,
+                  m_out_ref, s_out_ref, flips_ref,
+                  *, fmt: Optional[FixedPoint], n_colors: int, n_sweeps: int):
+    f32 = jnp.float32
+    m = m_ref[...]
+    s = s_ref[...]
+    h = h_ref[...]
+    wxm, wxp = wxm_ref[...], wxp_ref[...]
+    wym, wyp = wym_ref[...], wyp_ref[...]
+    wzm, wzp = wzm_ref[...], wzp_ref[...]
+    xlo = xlo_ref[...].astype(f32)[None]
+    xhi = xhi_ref[...].astype(f32)[None]
+    ylo = ylo_ref[...].astype(f32)[:, None, :]
+    yhi = yhi_ref[...].astype(f32)[:, None, :]
+    zlo = zlo_ref[...].astype(f32)[:, :, None]
+    zhi = zhi_ref[...].astype(f32)[:, :, None]
+    flips = jnp.zeros((), jnp.int32)
+
+    for t in range(n_sweeps):                     # static unroll: S is small
+        beta = betas_ref[t, 0]   # (S, 1) layout, like the per-phase kernel's
+                                 # (1, 1) scalar convention (2-D lowers
+                                 # cleanly through Mosaic; 1-D scalars don't)
+        for c in range(n_colors):
+            mc = m.astype(f32)
+            xm = jnp.concatenate([xlo, mc[:-1]], axis=0)
+            xp = jnp.concatenate([mc[1:], xhi], axis=0)
+            ym = jnp.concatenate([ylo, mc[:, :-1]], axis=1)
+            yp = jnp.concatenate([mc[:, 1:], yhi], axis=1)
+            zm = jnp.concatenate([zlo, mc[:, :, :-1]], axis=2)
+            zp = jnp.concatenate([mc[:, :, 1:], zhi], axis=2)
+            field = (h + wxm * xm + wxp * xp + wym * ym + wyp * yp
+                     + wzm * zm + wzp * zp)
+            s = s ^ (s << jnp.uint32(13))
+            s = s ^ (s >> jnp.uint32(17))
+            s = s ^ (s << jnp.uint32(5))
+            r = (s >> jnp.uint32(8)).astype(f32) * f32(2.0 / 16777216.0) \
+                - f32(1.0)
+            act = beta * field
+            if fmt is not None:
+                act = jnp.clip(jnp.round(act / fmt.step) * fmt.step,
+                               fmt.lo, fmt.hi)
+            upd = jnp.where(jnp.tanh(act) + r >= 0, 1, -1).astype(jnp.int8)
+            new = jnp.where(masks_ref[c] != 0, upd, m)
+            flips = flips + (new != m).sum().astype(jnp.int32)
+            m = new
+
+    m_out_ref[...] = m
+    s_out_ref[...] = s
+    flips_ref[0, 0] = flips
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "interpret"))
+def pbit_brick_sweep(m, s, betas, masks, h, w6, halos,
+                     fmt: Optional[FixedPoint] = None,
+                     interpret: bool = True):
+    """``len(betas)`` fused full sweeps (all color phases) of one brick.
+
+    Args match :func:`pbit_brick_update` except:
+      betas: (S,) f32 — one inverse temperature per sweep; the whole batch
+        runs between two halo exchanges, so halos stay fixed throughout.
+      masks: (n_colors, Bx, By, Bz) int8 color parity masks, updated in
+        index order each sweep.
+
+    Returns (m_new, s_new, flips) — flips is the int32 number of accepted
+    spin changes over all S * n_colors phases, counted in-kernel.
+
+    Bitwise-identical to S * n_colors chained :func:`pbit_brick_update`
+    calls (the per-phase reference path, kept for exactly that comparison).
+    """
+    Bx, By, Bz = m.shape
+    n_colors, S = int(masks.shape[0]), int(betas.shape[0])
+    wxm, wxp, wym, wyp, wzm, wzp = w6
+    xlo, xhi, ylo, yhi, zlo, zhi = halos
+    betas = jnp.asarray(betas, jnp.float32).reshape(S, 1)
+
+    whole = pl.BlockSpec((Bx, By, Bz), lambda: (0, 0, 0))
+    full = lambda *sh: pl.BlockSpec(sh, lambda: (0,) * len(sh))
+
+    m_new, s_new, flips = pl.pallas_call(
+        functools.partial(_sweep_kernel, fmt=fmt, n_colors=n_colors,
+                          n_sweeps=S),
+        grid=(),
+        in_specs=[
+            full(S, 1),                           # betas
+            full(n_colors, Bx, By, Bz),           # masks
+            whole, whole, whole, whole, whole, whole, whole,  # h + 6 weights
+            whole,                                # m
+            full(By, Bz), full(By, Bz),           # xlo, xhi
+            full(Bx, Bz), full(Bx, Bz),           # ylo, yhi
+            full(Bx, By), full(Bx, By),           # zlo, zhi
+            whole,                                # lfsr state
+        ],
+        out_specs=[whole, whole, full(1, 1)],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bx, By, Bz), jnp.int8),
+            jax.ShapeDtypeStruct((Bx, By, Bz), jnp.uint32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(betas, masks, h, wxm, wxp, wym, wyp, wzm, wzp,
+      m, xlo, xhi, ylo, yhi, zlo, zhi, s)
+    return m_new, s_new, flips[0, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("fmt", "bx", "interpret"))

@@ -12,7 +12,8 @@ import jax.numpy as jnp
 
 from repro.core.pbit import FixedPoint
 
-__all__ = ["pbit_brick_update_ref", "brick_energy_ref", "neighbor_sums_ref"]
+__all__ = ["pbit_brick_update_ref", "pbit_brick_sweep_ref",
+           "brick_energy_ref", "neighbor_sums_ref"]
 
 
 def _shifted(m, halos):
@@ -50,6 +51,26 @@ def pbit_brick_update_ref(m, s, beta, parity_mask, h, w6, halos,
     upd = jnp.where(jnp.tanh(act) + r >= 0, 1, -1).astype(jnp.int8)
     m_new = jnp.where(parity_mask != 0, upd, m)
     return m_new, s
+
+
+def pbit_brick_sweep_ref(m, s, betas, masks, h, w6, halos,
+                         fmt: Optional[FixedPoint] = None):
+    """Oracle for the fused multi-phase kernel: ``len(betas)`` full sweeps
+    (every color phase, in order) against halos held fixed.
+
+    Composes :func:`pbit_brick_update_ref` phase by phase, so it is bitwise
+    identical to the per-phase dispatch it replaces.  Returns
+    (m_new, s_new, flips) with flips the int32 count of accepted changes.
+    """
+    betas = jnp.asarray(betas, jnp.float32).reshape(-1)
+    flips = jnp.zeros((), jnp.int32)
+    for t in range(betas.shape[0]):
+        for c in range(masks.shape[0]):
+            m2, s = pbit_brick_update_ref(m, s, betas[t], masks[c], h, w6,
+                                          halos, fmt)
+            flips = flips + (m2 != m).sum().astype(jnp.int32)
+            m = m2
+    return m, s, flips
 
 
 def brick_energy_ref(m, active, h, w6, halos):

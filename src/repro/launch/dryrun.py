@@ -270,7 +270,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     else:
         cell = SHAPES[shape_name]
         # ambient mesh scope so in-model shard_hint() constraints resolve
-        with jax.sharding.set_mesh(mesh):
+        from repro.compat import set_mesh
+        with set_mesh(mesh):
             lowered, extras = lower_lm_cell(cfg, cell, mesh)
         mf = model_flops_estimate(cfg, cell)
     t_lower = time.time() - t0

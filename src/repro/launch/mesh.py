@@ -33,10 +33,6 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             f"dry-run entrypoint must set "
             f"XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             f"any jax import")
-    try:
-        return jax.make_mesh(shape, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-                             devices=devs[:n])
-    except TypeError:
-        # older signatures: fall back to explicit Mesh
-        return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+    from repro.compat import make_mesh, auto_axes
+    return make_mesh(shape, axes, axis_types=auto_axes(len(axes)),
+                     devices=devs[:n])

@@ -48,9 +48,9 @@ def make_mesh_from_arg(spec: str):
         sizes.append(int(v))
     n = int(np.prod(sizes))
     devs = jax.devices()[:n]
-    return jax.make_mesh(tuple(sizes), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-                         devices=devs)
+    from repro.compat import make_mesh, auto_axes
+    return make_mesh(tuple(sizes), tuple(axes),
+                     axis_types=auto_axes(len(axes)), devices=devs)
 
 
 def main():
@@ -127,8 +127,9 @@ def main():
         bshard = None
 
         def step_fn(st, b):
+            from repro.compat import set_mesh
             bb = jax.tree.map(jnp.asarray, b)
-            with jax.sharding.set_mesh(mesh):
+            with set_mesh(mesh):
                 return step(st, bb)
 
     t0 = time.time()

@@ -62,18 +62,12 @@ def moe_fwd(p, x, *, top_k: int, capacity_factor: float = 1.25
 
 def _dist_plan(x):
     """(batch_axes, model_axis?) if a usable ambient mesh is present."""
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return None
+    from repro.compat import ambient_mesh, mesh_is_auto
+    mesh = ambient_mesh()
     if mesh is None or not getattr(mesh, "axis_names", ()):
         return None
-    try:
-        # only under fully-Auto meshes (nested shard_map is not allowed)
-        if any(t != jax.sharding.AxisType.Auto
-               for t in getattr(mesh, "axis_types", ())):
-            return None
-    except Exception:
+    # only under fully-Auto meshes (nested shard_map is not allowed)
+    if not mesh_is_auto(mesh):
         return None
     baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names
                   and mesh.shape[a] > 1)
@@ -121,7 +115,8 @@ def _moe_fwd_dist(p, x, *, top_k, capacity_factor, plan):
         args += [p["shared"]["wi"]["w"], p["shared"]["wg"]["w"],
                  p["shared"]["wo"]["w"]]
         in_specs += [swi_spec, swi_spec, swo_spec]
-    out, aux = jax.shard_map(
+    from repro.compat import shard_map as _shard_map
+    out, aux = _shard_map(
         block, mesh=mesh, in_specs=tuple(in_specs),
         out_specs=(P(bspec[0], None, None), P()), check_vma=False)(*args)
     return out, aux

@@ -69,6 +69,7 @@ def make_ef_allreduce(mesh, axis_name: str = "data"):
         return (jax.tree.map(lambda x: x[None], avg),
                 jax.tree.map(lambda x: x[None], new_e))
 
-    return jax.jit(jax.shard_map(
+    from repro.compat import shard_map as _shard_map
+    return jax.jit(_shard_map(
         block, mesh=mesh, in_specs=(rspec, rspec),
         out_specs=(rspec, rspec), check_vma=False))

@@ -105,7 +105,8 @@ def make_local_sgd_step(model, opt: AdamW, mesh, replica_axis: str = "data",
         return (jax.tree.map(lambda x: x[None], out),
                 jax.lax.pmean(losses.mean(), replica_axis))
 
-    smapped = jax.shard_map(
+    from repro.compat import shard_map as _shard_map
+    smapped = _shard_map(
         local_steps, mesh=mesh,
         in_specs=(rspec, rspec), out_specs=(rspec, P()),
         check_vma=False)

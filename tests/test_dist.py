@@ -35,8 +35,8 @@ def test_dist_dsim_bitwise_matches_stacked():
         from repro.core.annealing import ea_schedule
         g = ea3d(8, seed=7); col = lattice3d_coloring(8)
         prob = build_partitioned(g, col, slab_partition(8, 4), 4)
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh, auto_axes
+        mesh = make_mesh((4,), ("data",), axis_types=auto_axes(1))
         sch = ea_schedule(256)
         d = DistDSIMEngine(prob, mesh, rng="lfsr", bitpack=True)
         sd = d.init_state(seed=3)
@@ -59,8 +59,8 @@ def test_lattice_dsim_multiaxis_halo():
         from repro.core.graph import ea3d
         from repro.core.energy import energy
         from repro.core.annealing import ea_schedule
-        mesh = jax.make_mesh((2, 2, 2), ("x", "y", "z"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        from repro.compat import make_mesh, auto_axes
+        mesh = make_mesh((2, 2, 2), ("x", "y", "z"), axis_types=auto_axes(3))
         prob = build_ea3d_lattice(8, seed=5)
         eng = LatticeDSIM(prob, mesh, dim_axes=("x", "y", "z"), impl="ref")
         st = eng.init_state(seed=0)
@@ -87,8 +87,8 @@ def test_local_sgd_and_compressed_allreduce():
         cfg = get_config("h2o-danube-1.8b").reduced()
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh, auto_axes
+        mesh = make_mesh((4,), ("data",), axis_types=auto_axes(1))
         opt = AdamW(lr=3e-3, warmup=5)
         outer, repl = make_local_sgd_step(model, opt, mesh, "data",
                                           sync_every=2)
@@ -135,14 +135,15 @@ def test_sharded_train_step_matches_single_device():
         st = TrainState(params=params, opt=opt.init(params))
         st1, m1 = jax.jit(make_train_step(model, opt))(st, batch)
         # 2x2 mesh sharded
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.compat import make_mesh, auto_axes
+        mesh = make_mesh((2, 2), ("data", "model"), axis_types=auto_axes(2))
         st = TrainState(params=params, opt=opt.init(params))
         sh = train_state_shardings(st, mesh, True, False)
         st = jax.tree.map(jax.device_put, st, sh)
         bsh = batch_shardings(batch, mesh)
         bb = jax.tree.map(jax.device_put, batch, bsh)
-        with jax.sharding.set_mesh(mesh):
+        from repro.compat import set_mesh
+        with set_mesh(mesh):
             st2, m2 = jax.jit(make_train_step(model, opt))(st, bb)
         print("LOSS_EQ", abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3)
         d = max(float(jnp.abs(a - jnp.asarray(np.asarray(b))).max())

@@ -3,6 +3,11 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+
+# hypothesis is a dev-only dependency (requirements-dev.txt); without it this
+# module must skip cleanly instead of failing tier-1 collection
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.core.graph import from_edges, random_regular

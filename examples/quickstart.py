@@ -68,6 +68,17 @@ def main():
     print(f"\nlattice x{R} replicas (fused kernel): "
           f"best E = {Es.min():9.1f}, per-replica {np.round(Es, 1)}")
 
+    # the same path through the hardware's fixed-point pipeline: int8
+    # on-chip couplings, integer fields, LUT-threshold accepts — zero
+    # floating point in the inner loop (DESIGN.md "Fixed-point pipeline")
+    eng = make_engine("lattice", L=L, seed=0, replicas=R, precision="int8")
+    st = eng.init_state(seed=0)
+    st, rec = eng.run_recorded(st, ea_schedule(budget), [budget],
+                               sync_every=8)
+    Es = np.asarray(rec.energies[-1])
+    print(f"lattice x{R} replicas (int8 pipeline, {eng.kernel_path}): "
+          f"best E = {Es.min():9.1f}, per-replica {np.round(Es, 1)}")
+
     print("\nStale boundaries trade solution quality for throughput —")
     print("the single ratio eta governs it (benchmarks/fig2, fig3).")
 

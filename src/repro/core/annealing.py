@@ -10,8 +10,9 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-__all__ = ["Schedule", "ea_schedule", "sat_schedule", "geometric_schedule",
-           "constant_schedule", "replica_beta_arrays"]
+__all__ = ["Schedule", "ArraySchedule", "ea_schedule", "sat_schedule",
+           "geometric_schedule", "constant_schedule", "replica_beta_arrays",
+           "beta_table", "beta_row_indices"]
 
 
 class Schedule:
@@ -41,6 +42,49 @@ class Schedule:
 
     def rescale(self, total_sweeps: int) -> "Schedule":
         return Schedule(self.betas, total_sweeps)
+
+
+class ArraySchedule:
+    """Adapter presenting a precomputed dense per-sweep array as a Schedule
+    to the recording driver.
+
+    Accepts (T,) staircases, (T, R) per-replica staircases, or (T, ...) any
+    trailing layout — trailing dims ride through the driver's chunking
+    untouched.  Dtype is preserved, so LUT *row-index* staircases (int32)
+    flow through the same machinery as f32 betas.
+    """
+
+    def __init__(self, values):
+        self.values = np.asarray(values)
+        if self.values.ndim < 1 or len(self.values) < 1:
+            raise ValueError("need at least one scheduled sweep")
+        self.total_sweeps = int(self.values.shape[0])
+
+    def beta_array(self) -> np.ndarray:
+        return self.values
+
+
+def beta_table(betas) -> np.ndarray:
+    """Sorted unique beta values of a staircase (any shape) — the rows of a
+    threshold LUT (:func:`repro.core.pbit.threshold_lut`)."""
+    return np.unique(np.asarray(betas, np.float32))
+
+
+def beta_row_indices(betas, table: np.ndarray) -> np.ndarray:
+    """Map a beta staircase (any shape, e.g. the (T, R) per-replica fans of
+    :func:`replica_beta_arrays`) to int32 row indices into ``table``.
+
+    Every value must appear in ``table`` exactly — the LUT folds beta in, so
+    an unlisted beta has no row to select.
+    """
+    betas = np.asarray(betas, np.float32)
+    table = np.asarray(table, np.float32)
+    rows = np.searchsorted(table, betas)
+    rows = np.clip(rows, 0, len(table) - 1)
+    if not (table[rows] == betas).all():
+        missing = np.unique(betas[table[rows] != betas])
+        raise ValueError(f"betas {missing[:5]} not in the LUT beta table")
+    return rows.astype(np.int32)
 
 
 def replica_beta_arrays(schedule: Schedule, replicas: int,

@@ -39,7 +39,10 @@ import numpy as np
 
 from .graph import IsingGraph
 from .coloring import Coloring
-from .pbit import FixedPoint, quantize, lfsr_init, lfsr_next, lfsr_uniform
+from .annealing import ArraySchedule, beta_row_indices, beta_table
+from .pbit import (FixedPoint, field_bound, quantize, quantize_couplings,
+                   threshold_lut_cached, lut_accept, lfsr_init, lfsr_next,
+                   lfsr_uniform)
 from .energy import energy as direct_energy
 from repro.engines.base import (run_recorded_driver, spawn_seeds,
                                 stack_states)
@@ -194,21 +197,48 @@ SyncSpec = Union[int, str, None]
 
 
 class DSIMEngine:
-    """Partitioned chromatic Gibbs sampler (stacked single-device backend)."""
+    """Partitioned chromatic Gibbs sampler (stacked single-device backend).
+
+    ``precision="int8"`` runs the hardware's fixed-point pipeline: local
+    couplings/biases quantized to int8 at init (one per-problem scale),
+    int32 field accumulation, and the tanh + float compare replaced by one
+    unsigned compare of the raw 24-bit LFSR draw against a per-(beta, field)
+    threshold LUT; annealing staircases become LUT row indices.  Requires
+    ``rng='lfsr'`` and ``mode='dsim'``; ``fmt`` folds into the LUT."""
 
     def __init__(self, prob: PartitionedProblem, rng: str = "philox",
-                 fmt: Optional[FixedPoint] = None, mode: str = "dsim"):
+                 fmt: Optional[FixedPoint] = None, mode: str = "dsim",
+                 precision: str = "f32"):
         if mode not in ("dsim", "cmft"):
             raise ValueError(f"unknown mode {mode!r}")
         if rng not in ("philox", "lfsr"):
             raise ValueError(f"unknown rng {rng!r}")
+        if precision not in ("f32", "int8"):
+            raise ValueError(f"unknown precision {precision!r}")
+        if precision == "int8" and (rng != "lfsr" or mode != "dsim"):
+            # the fixed-point path is the hardware pipeline: per-p-bit LFSRs
+            # (the LUT thresholds the raw 24-bit draw) and instantaneous +-1
+            # ghosts (cmft's fractional window-means don't fit integer fields)
+            raise ValueError("precision='int8' needs rng='lfsr', mode='dsim'")
         self.p = prob
         self.rng_kind = rng
         self.fmt = fmt
         self.mode = mode
+        self.precision = precision
+        if precision == "int8":
+            self.local_h_q, (self.local_w_q,), self.q_scale = \
+                quantize_couplings(prob.local_h, (prob.local_w,))
+            wq = np.asarray(self.local_w_q)
+            self.f_max = field_bound(
+                self.local_h_q, tuple(wq[..., d] for d in range(wq.shape[-1])))
+            self._lut_cache = {}
         self._rows = jnp.arange(prob.K)[:, None]
         self._chunk_cache = {}
         self._energy = jax.jit(self._energy_impl)
+
+    def _lut_for(self, table: np.ndarray) -> jnp.ndarray:
+        return threshold_lut_cached(self._lut_cache, table, self.q_scale,
+                                    self.f_max, fmt=self.fmt)
 
     # -- state -----------------------------------------------------------------
 
@@ -254,15 +284,26 @@ class DSIMEngine:
 
     # -- one color phase ----------------------------------------------------------
 
-    def _phase(self, c: int, m, ghosts, rng, beta):
+    def _phase(self, c: int, m, ghosts, rng, beta, lut=None):
+        """``beta`` is the f32 inverse temperature — or, on the int8 path,
+        the int32 LUT row index the staircase resolved to."""
         p = self.p
+        int8 = lut is not None
         slots, mask = p.color_slots[c], p.color_mask[c]       # (K, nc)
-        mext = jnp.concatenate([m.astype(jnp.float32), ghosts], axis=1)
         # (K, nc, D) neighbor slot ids -> per-partition-row gather (vmapped,
         # no (K, nc, n_max+g_max) broadcast is ever materialized)
         idx_c = jnp.take_along_axis(p.local_idx, slots[:, :, None], axis=1)
-        w_c = jnp.take_along_axis(p.local_w, slots[:, :, None], axis=1)
-        h_c = jnp.take_along_axis(p.local_h, slots, axis=1)
+        # one gather/accumulate sequence for both precisions — only the
+        # coupling source and accumulation dtype differ.  On the integer
+        # pipeline ghosts are instantaneous +-1 states in dsim mode, so
+        # the f32 state array casts losslessly to int32.
+        acc = jnp.int32 if int8 else jnp.float32
+        h_src, w_src = (self.local_h_q, self.local_w_q) if int8 else \
+            (p.local_h, p.local_w)
+        mext = jnp.concatenate([m.astype(acc), ghosts.astype(acc)], axis=1)
+        w_c = jnp.take_along_axis(w_src, slots[:, :, None],
+                                  axis=1).astype(acc)
+        h_c = jnp.take_along_axis(h_src, slots, axis=1).astype(acc)
         nbr = jax.vmap(lambda row, ii: row[ii])(mext, idx_c)
         field = h_c + (w_c * nbr).sum(axis=-1)
         if self.rng_kind == "philox":
@@ -273,27 +314,36 @@ class DSIMEngine:
             s = lfsr_next(s)
             r = lfsr_uniform(s)
             rng = rng.at[self._rows, slots].set(s)
-        act = quantize(beta * field, self.fmt)
         old = jnp.take_along_axis(m, slots, axis=1)
-        new = jnp.where(jnp.tanh(act) + r >= 0, 1, -1).astype(jnp.int8)
+        if int8:
+            # pure-integer accept: raw 24-bit draw vs tabulated threshold
+            u = s >> jnp.uint32(8)
+            thr = jax.lax.dynamic_index_in_dim(lut,
+                                               jnp.asarray(beta, jnp.int32),
+                                               axis=0, keepdims=False)
+            new = jnp.where(lut_accept(thr, field, self.f_max, u),
+                            1, -1).astype(jnp.int8)
+        else:
+            act = quantize(beta * field, self.fmt)
+            new = jnp.where(jnp.tanh(act) + r >= 0, 1, -1).astype(jnp.int8)
         new = jnp.where(mask, new, old)
         flips = (new != old).sum().astype(jnp.int32)
         m = m.at[self._rows, slots].set(new)
         return m, rng, flips
 
-    def _sweep(self, m, ghosts, rng, beta, sync_phase: bool):
+    def _sweep(self, m, ghosts, rng, beta, sync_phase: bool, lut=None):
         flips = jnp.zeros((), jnp.int32)
         for c in range(len(self.p.color_slots)):
             if sync_phase:
                 ghosts = self._exchange_inst(m)
-            m, rng, f = self._phase(c, m, ghosts, rng, beta)
+            m, rng, f = self._phase(c, m, ghosts, rng, beta, lut)
             flips = flips + f
         return m, ghosts, rng, flips
 
     # -- runners -----------------------------------------------------------------
 
     def _iteration(self, state: DSIMState, betas_S: jnp.ndarray,
-                   sync: SyncSpec) -> DSIMState:
+                   sync: SyncSpec, lut=None) -> DSIMState:
         """S sweeps then one boundary exchange (or per-phase / none)."""
         m, ghosts, macc, rng = state.m, state.ghosts, state.macc, state.rng
         flips = state.flips
@@ -302,7 +352,8 @@ class DSIMEngine:
         def body(carry, beta):
             m, ghosts, macc, rng, flips = carry
             m, ghosts, rng, f = self._sweep(m, ghosts, rng, beta,
-                                            sync_phase=(sync == "phase"))
+                                            sync_phase=(sync == "phase"),
+                                            lut=lut)
             macc = macc + m.astype(jnp.float32)
             return (m, ghosts, macc, rng, flips + f), None
 
@@ -326,15 +377,20 @@ class DSIMEngine:
                    batched: bool = False):
         key = (iters, S, sync, batched)
         if key not in self._chunk_cache:
-            it = (lambda st, b: self._iteration(st, b, sync)) if not batched \
-                else jax.vmap(lambda st, b: self._iteration(st, b, sync),
-                              in_axes=(0, None))
+            def one(st, b, lut):
+                return self._iteration(st, b, sync, lut)
+            it = one if not batched else \
+                jax.vmap(one, in_axes=(0, None, None))
 
             @jax.jit
-            def f(state, betas):  # betas (iters, S)
+            def f(state, sched, *lut_opt):
+                # sched (iters, S): f32 betas, or int32 LUT rows with the
+                # threshold LUT as the trailing operand
+                lut = lut_opt[0] if lut_opt else None
+
                 def body(st, b):
-                    return it(st, b), None
-                st, _ = jax.lax.scan(body, state, betas)
+                    return it(st, b, lut), None
+                st, _ = jax.lax.scan(body, state, sched)
                 return st
             self._chunk_cache[key] = f
         return self._chunk_cache[key]
@@ -347,11 +403,24 @@ class DSIMEngine:
         batched = self.is_batched(state)
         R = state.m.shape[0] if batched else 1
 
-        def chunk(st, betas2d, iters, S):
-            return self._run_chunk(iters, S, sync, batched)(st, betas2d)
+        if self.precision == "int8":
+            # the staircase becomes LUT row indices (beta is in the table)
+            beta_arr = np.asarray(schedule.beta_array(), np.float32)
+            table = beta_table(beta_arr)
+            lut = self._lut_for(table)
+            sched = ArraySchedule(beta_row_indices(beta_arr, table))
+
+            def chunk(st, rows2d, iters, S):
+                return self._run_chunk(iters, S, sync, batched)(st, rows2d,
+                                                                lut)
+        else:
+            sched = schedule
+
+            def chunk(st, betas2d, iters, S):
+                return self._run_chunk(iters, S, sync, batched)(st, betas2d)
 
         return run_recorded_driver(
-            state=state, schedule=schedule, record_points=record_points,
+            state=state, schedule=sched, record_points=record_points,
             chunk_fn=chunk, record_fn=self.energy, sync_every=sync_every,
             flips_of=lambda st: st.flips, flips_per_sweep=self.p.n * R)
 

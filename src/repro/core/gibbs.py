@@ -189,7 +189,9 @@ class GibbsEngine:
         per_rep = betas_R is not None
         if per_rep and not batched:
             raise ValueError("per-replica betas need a batched state")
-        sched = schedule if not per_rep else _ArraySchedule(betas_R)
+        from .annealing import ArraySchedule
+        sched = schedule if not per_rep else \
+            ArraySchedule(np.asarray(betas_R, np.float32))
 
         def chunk(st, betas2d, iters, S):
             flat = betas2d.reshape((iters * S,) + betas2d.shape[2:])
@@ -215,13 +217,3 @@ class GibbsEngine:
             return jax.vmap(lambda m: direct_energy(self.g, m))(state.m)
         return direct_energy(self.g, state.m)
 
-
-class _ArraySchedule:
-    """Adapter presenting a precomputed (T,) or (T, R) beta array as a
-    Schedule to the recording driver."""
-
-    def __init__(self, betas):
-        self._betas = np.asarray(betas, dtype=np.float32)
-
-    def beta_array(self):
-        return self._betas

@@ -22,6 +22,7 @@ in the multi-pod dry-run.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Sequence, Tuple, Union
 
 import jax
@@ -29,14 +30,53 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .annealing import ArraySchedule, beta_row_indices, beta_table
 from .lattice import LatticeProblem
 from .packing import pack_pm1, unpack_pm1, pad_to_multiple
-from .pbit import FixedPoint, lfsr_init
+from .pbit import (FixedPoint, LUT_SELECT_MAX_WIDTH, field_bound, lfsr_init,
+                   quantize_couplings, threshold_lut_cached)
 from repro.compat import shard_map
 from repro.engines.base import run_recorded_driver, spawn_seeds
-from repro.kernels.ops import pbit_update_op, pbit_sweep_op, brick_energy_op
+from repro.kernels.ops import (pbit_update_op, pbit_sweep_op,
+                               pbit_update_int_op, pbit_sweep_int_op,
+                               brick_energy_op)
 
-__all__ = ["LatticeDSIM", "LatticeState"]
+__all__ = ["LatticeDSIM", "LatticeState", "fused_working_set_bytes",
+           "fused_brick_ceiling"]
+
+# Per-site VMEM bytes of the single-block fused kernel (DESIGN.md
+# "VMEM working-set math"): f32 path = 7 f32 coupling arrays + in/out spins
+# (int8) + in/out LFSR (u32) + n_colors parity masks; int8 path = the same
+# with the couplings at 1 B/site.  Halo planes and the threshold LUT are
+# O(B^(2/3)) / O(1) and added separately.
+_PER_SITE_BYTES = {"f32": 38, "int8": 17}
+_LUT_ROWS_NOMINAL = 32          # staircase entries assumed for init-time sizing
+DEFAULT_VMEM_BUDGET = 16 << 20  # 16 MiB/core, the TPU VMEM working budget
+
+
+def fused_working_set_bytes(brick: Tuple[int, int, int], n_colors: int,
+                            precision: str = "f32",
+                            lut_width: Optional[int] = None) -> int:
+    """VMEM bytes the single-block fused sweep kernel needs for one brick."""
+    bx, by, bz = brick
+    sites = bx * by * bz
+    per_site = _PER_SITE_BYTES[precision] + n_colors
+    halo = 2 * (by * bz + bx * bz + bx * by)       # 6 int8 halo planes
+    lut = 0
+    if precision == "int8":
+        lut = 4 * _LUT_ROWS_NOMINAL * (lut_width if lut_width else 1)
+    return per_site * sites + halo + lut
+
+
+def fused_brick_ceiling(n_colors: int, precision: str = "f32",
+                        budget: int = DEFAULT_VMEM_BUDGET) -> int:
+    """Largest cubic brick extent whose fused working set fits ``budget``."""
+    per_site = _PER_SITE_BYTES[precision] + n_colors
+    side = int(round((budget / per_site) ** (1.0 / 3.0)))
+    while fused_working_set_bytes((side, side, side), n_colors,
+                                  precision) > budget:
+        side -= 1
+    return side
 
 
 @jax.tree_util.register_dataclass
@@ -63,13 +103,26 @@ class LatticeDSIM:
 
     ``fused``: run the multi-phase fused sweep kernel (one launch per
     ``sync_every`` sweeps); ``fused=False`` keeps the per-phase reference
-    dispatch (one launch per color phase), bitwise identical."""
+    dispatch (one launch per color phase), bitwise identical.  A fused
+    request whose brick working set exceeds ``vmem_budget_bytes`` falls
+    back to the per-phase path with a one-time warning; the decision is
+    exposed as ``kernel_path`` / ``fallback_reason``.
+
+    ``precision``: "f32" (reference) or "int8" — the hardware's fixed-point
+    pipeline: couplings quantized to int8 at init with one per-problem
+    scale, int32 field accumulation, and tanh + float compare replaced by a
+    uint32 compare against a per-(beta, field) threshold LUT; annealing
+    staircases become LUT row indices.  ``fmt`` folds into the LUT."""
 
     def __init__(self, prob: LatticeProblem, mesh: Mesh,
                  dim_axes: Tuple[Optional[str], Optional[str], Optional[str]],
                  fmt: Optional[FixedPoint] = None, impl: str = "auto",
                  kernel_bx: Optional[int] = None, bitpack_halos: bool = True,
-                 fused: bool = True, replicas: int = 1):
+                 fused: bool = True, replicas: int = 1,
+                 precision: str = "f32",
+                 vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET):
+        if precision not in ("f32", "int8"):
+            raise ValueError(f"unknown precision {precision!r}")
         self.p = prob
         self.mesh = mesh
         self.dim_axes = dim_axes
@@ -77,17 +130,65 @@ class LatticeDSIM:
         self.impl = impl
         self.kernel_bx = kernel_bx
         self.bitpack_halos = bitpack_halos
-        self.fused = fused and kernel_bx is None  # x-tiling forces per-phase
+        self.precision = precision
+        self.vmem_budget_bytes = int(vmem_budget_bytes)
         self.replicas = int(replicas)
         if self.replicas < 1:
             raise ValueError("replicas must be >= 1")
         self.n_sites = prob.n_active
         X, Y, Z = prob.dims
+        if precision == "int8":
+            self.h_q, self.w6_q, self.q_scale = quantize_couplings(prob.h,
+                                                                   prob.w6)
+            self.f_max = field_bound(self.h_q, self.w6_q)
+            # Mosaic cannot gather per element from VMEM: the Pallas int
+            # kernels rely on lut_accept's rank-count form, which caps the
+            # row width.  Fail at init with a clear message, not at first
+            # lowering.
+            from repro.kernels.ops import default_impl
+            resolved = impl if impl != "auto" else default_impl()
+            if resolved == "pallas" and \
+                    2 * self.f_max + 1 > LUT_SELECT_MAX_WIDTH:
+                raise ValueError(
+                    f"precision='int8' with impl='pallas' needs a threshold "
+                    f"LUT row of <= {LUT_SELECT_MAX_WIDTH} entries "
+                    f"(gather-free rank-count accept); this problem "
+                    f"quantizes to f_max={self.f_max} "
+                    f"(width {2 * self.f_max + 1}).  Use impl='ref' or "
+                    f"coarser couplings.")
+        else:
+            self.h_q = self.w6_q = None
+            self.q_scale, self.f_max = 1.0, 0
+        self._lut_cache = {}
         self.nb = tuple(1 if a is None else mesh.shape[a] for a in dim_axes)
         for d, (ext, k) in enumerate(zip(prob.dims, self.nb)):
             if ext % k != 0:
                 raise ValueError(f"dim {d} extent {ext} not divisible by mesh factor {k}")
         self.brick = tuple(e // k for e, k in zip(prob.dims, self.nb))
+        # fused-vs-per-phase decision (DESIGN.md "VMEM working-set math"):
+        # x-tiling forces per-phase; so does a brick working set beyond the
+        # VMEM budget — the fallback is no longer silent.
+        self.fused_requested = bool(fused)
+        self.fused_working_set = fused_working_set_bytes(
+            self.brick, prob.n_colors, precision,
+            lut_width=2 * self.f_max + 1)
+        self.fallback_reason = None
+        fused = bool(fused)
+        if fused and kernel_bx is not None:
+            fused, self.fallback_reason = False, "kernel_bx"
+        if fused and self.fused_working_set > self.vmem_budget_bytes:
+            ceiling = fused_brick_ceiling(prob.n_colors, precision,
+                                          self.vmem_budget_bytes)
+            fused, self.fallback_reason = False, "vmem"
+            warnings.warn(
+                f"lattice fused sweep kernel needs "
+                f"{self.fused_working_set:,} B of VMEM for brick "
+                f"{self.brick} ({precision}, {prob.n_colors} colors) — over "
+                f"the {self.vmem_budget_bytes:,} B budget; falling back to "
+                f"the per-phase x-tiled dispatch.  Fused single-block "
+                f"ceiling at this budget is ~{ceiling}^3 per brick.",
+                RuntimeWarning, stacklevel=2)
+        self.fused = fused
         ax, ay, az = dim_axes
         self.spec_m = P(None, ax, ay, az)        # leading replica axis
         self.spec_flat = P(ax, ay, az)           # problem constants (no R)
@@ -98,6 +199,16 @@ class LatticeDSIM:
         self._shard = lambda spec: NamedSharding(mesh, spec)
         self._chunk_cache = {}
         self._energy_fn = None
+
+    @property
+    def kernel_path(self) -> str:
+        """Which update dispatch actually runs: "fused" or "per_phase"."""
+        return "fused" if self.fused else "per_phase"
+
+    def _lut_for(self, table: np.ndarray) -> jnp.ndarray:
+        """Threshold LUT for a beta table (cached; fmt folded in)."""
+        return threshold_lut_cached(self._lut_cache, table, self.q_scale,
+                                    self.f_max, fmt=self.fmt)
 
     # -- halo plumbing -------------------------------------------------------------
 
@@ -165,28 +276,55 @@ class LatticeDSIM:
             body, (m, s, jnp.zeros((), jnp.int32)), betas_S)
         return m, s, fl
 
-    def _sweep_fused_block(self, m, s, halos, betas_S, masks, h, w6):
-        """S sweeps of one replica's brick in ONE fused kernel launch."""
-        return pbit_sweep_op(m, s, betas_S, masks, h, w6, halos,
-                             fmt=self.fmt, impl=self.impl)
+    def _sweep_phases_int_block(self, m, s, halos, rows_S, masks, h_q, w6_q,
+                                lut):
+        """Integer-path per-phase dispatch: LUT row indices replace betas."""
+        def body(carry, row):
+            m, s, fl = carry
+            for c in range(self.p.n_colors):
+                m2, s = pbit_update_int_op(m, s, row, masks[c], h_q, w6_q,
+                                           halos, lut, bx=self.kernel_bx,
+                                           impl=self.impl)
+                fl = fl + (m2 != m).sum().astype(jnp.int32)
+                m = m2
+            return (m, s, fl), None
+        (m, s, fl), _ = jax.lax.scan(
+            body, (m, s, jnp.zeros((), jnp.int32)), rows_S)
+        return m, s, fl
 
-    def _iteration_block(self, m, s, halos, betas_S, masks, h, w6):
+    def _one_replica_sweeps(self, masks, h, w6, lut):
+        """(m, s, halos, sched_S) -> (m, s, flips) for one replica's brick:
+        fused or per-phase, float betas or integer LUT rows."""
+        if self.precision == "int8":
+            if self.fused:
+                return lambda mr, sr, hr, ps: pbit_sweep_int_op(
+                    mr, sr, ps, masks, h, w6, hr, lut, impl=self.impl)
+            return lambda mr, sr, hr, ps: self._sweep_phases_int_block(
+                mr, sr, hr, ps, masks, h, w6, lut)
+        if self.fused:
+            return lambda mr, sr, hr, ps: pbit_sweep_op(
+                mr, sr, ps, masks, h, w6, hr, fmt=self.fmt, impl=self.impl)
+        return lambda mr, sr, hr, ps: self._sweep_phases_block(
+            mr, sr, hr, ps, masks, h, w6)
+
+    def _iteration_block(self, m, s, halos, sched_S, masks, h, w6, lut=None):
         """S sweeps for all R replicas, then one halo exchange.
 
-        m/s (R, bx, by, bz); halos 6 x (R, plane)."""
-        one = self._sweep_fused_block if self.fused else \
-            self._sweep_phases_block
+        m/s (R, bx, by, bz); halos 6 x (R, plane).  ``sched_S`` is the
+        per-sweep schedule — (S,) shared or (S, R) per-replica; f32 betas on
+        the float path, int32 LUT row indices on the integer path."""
+        one = self._one_replica_sweeps(masks, h, w6, lut)
+        per_rep = sched_S.ndim == 2
         from repro.kernels.ops import default_impl
         resolved = self.impl if self.impl != "auto" else default_impl()
         if resolved == "ref":
             # pure-jnp path: replicas vmap cleanly
-            m, s, fl = jax.vmap(
-                lambda mr, sr, hr: one(mr, sr, hr, betas_S, masks, h, w6),
-                in_axes=(0, 0, 0))(m, s, halos)
+            m, s, fl = jax.vmap(one, in_axes=(0, 0, 0, 1 if per_rep else
+                                              None))(m, s, halos, sched_S)
         else:
             # pallas paths: unrolled replica loop (no pallas_call batching)
             outs = [one(m[r], s[r], jax.tree.map(lambda x: x[r], halos),
-                        betas_S, masks, h, w6)
+                        sched_S[:, r] if per_rep else sched_S)
                     for r in range(m.shape[0])]
             m = jnp.stack([o[0] for o in outs])
             s = jnp.stack([o[1] for o in outs])
@@ -199,8 +337,8 @@ class LatticeDSIM:
     def _axes_all(self):
         return tuple(a for a in self.dim_axes if a is not None)
 
-    def _run_chunk(self, iters: int, S: int):
-        key = (iters, S)
+    def _run_chunk(self, iters: int, S: int, per_rep: bool = False):
+        key = (iters, S, per_rep)
         if key in self._chunk_cache:
             return self._chunk_cache[key]
         spec_m, spec_masks = self.spec_m, self.spec_masks
@@ -208,8 +346,9 @@ class LatticeDSIM:
         hspecs = self.halo_specs
         axes_all = self._axes_all()
         R = self.replicas
+        int8 = self.precision == "int8"
 
-        def block(m, s, halos, betas, masks, h, w6):
+        def block(m, s, halos, sched, masks, h, w6, lut):
             # halos arrive as (R, k?, ...) plane stacks; squeeze the brick dims
             xlo, xhi, ylo, yhi, zlo, zhi = halos
             halos = (xlo[:, 0], xhi[:, 0], ylo[:, :, 0, :], yhi[:, :, 0, :],
@@ -219,10 +358,10 @@ class LatticeDSIM:
             def it(carry, b):
                 m, s, halos, fl = carry
                 m, s, halos, f = self._iteration_block(m, s, halos, b,
-                                                       masks, h, w6)
+                                                       masks, h, w6, lut)
                 return (m, s, halos, fl + f), None
             (m, s, halos, local), _ = jax.lax.scan(
-                it, (m, s, halos, local), betas)
+                it, (m, s, halos, local), sched)
             flips = jax.lax.psum(local, axes_all) if axes_all else local
             xlo, xhi, ylo, yhi, zlo, zhi = halos
             halos = (xlo[:, None], xhi[:, None],
@@ -230,21 +369,27 @@ class LatticeDSIM:
                      zlo[:, :, :, None], zhi[:, :, :, None])
             return m, s, halos, flips
 
+        # identical construction for both precisions — the integer path just
+        # appends the (replicated) threshold LUT as a trailing operand
+        fn = block if int8 else (
+            lambda m, s, halos, sched, masks, h, w6:
+                block(m, s, halos, sched, masks, h, w6, None))
+        lut_spec = ((P(),) if int8 else ())
         smapped = shard_map(
-            block, mesh=self.mesh,
+            fn, mesh=self.mesh,
             in_specs=(spec_m, spec_m, hspecs, P(), spec_masks, spec_flat,
-                      tuple(spec_flat for _ in range(6))),
+                      tuple(spec_flat for _ in range(6))) + lut_spec,
             out_specs=(spec_m, spec_m, hspecs, P()),
             check_vma=False,
         )
 
         @jax.jit
-        def run(state: LatticeState, betas, masks, h, w6):
-            m, s, halos, fl = smapped(state.m, state.s, state.halos, betas,
-                                      masks, h, w6)
+        def run(state: LatticeState, sched, masks, h, w6, *lut_opt):
+            m, s, halos, fl = smapped(state.m, state.s, state.halos,
+                                      sched, masks, h, w6, *lut_opt)
             return LatticeState(
                 m=m, s=s, halos=halos,
-                sweep=state.sweep + betas.shape[0] * betas.shape[1],
+                sweep=state.sweep + sched.shape[0] * sched.shape[1],
                 flips=state.flips + fl)
 
         self._chunk_cache[key] = run
@@ -292,14 +437,41 @@ class LatticeDSIM:
         return dataclasses.replace(st, halos=halos)
 
     def run_recorded_full(self, state: LatticeState, schedule,
-                          record_points: Sequence[int], sync_every: int = 1):
-        """Shared-driver runner; returns (state, RunRecord)."""
-        def chunk(st, betas2d, iters, S):
-            return self._run_chunk(iters, S)(st, betas2d, self.p.masks,
-                                             self.p.h, self.p.w6)
+                          record_points: Sequence[int], sync_every: int = 1,
+                          betas_R: Optional[np.ndarray] = None):
+        """Shared-driver runner; returns (state, RunRecord).
+
+        ``betas_R`` (total_sweeps, R) optionally gives each replica its own
+        beta staircase (:func:`repro.core.annealing.replica_beta_arrays`);
+        on the integer path each staircase becomes a fan of LUT row
+        indices, so the replica axis rides the fixed-point kernels
+        unchanged."""
+        if betas_R is not None:
+            betas_R = np.asarray(betas_R, np.float32)
+            if betas_R.ndim != 2 or betas_R.shape[1] != self.replicas:
+                raise ValueError(
+                    f"betas_R must be (total_sweeps, R={self.replicas})")
+            schedule = ArraySchedule(betas_R)
+        beta_arr = np.asarray(schedule.beta_array(), np.float32)
+        per_rep = beta_arr.ndim == 2
+
+        if self.precision == "int8":
+            table = beta_table(beta_arr)
+            lut = self._lut_for(table)
+            sched = ArraySchedule(beta_row_indices(beta_arr, table))
+
+            def chunk(st, rows2d, iters, S):
+                return self._run_chunk(iters, S, per_rep)(
+                    st, rows2d, self.p.masks, self.h_q, self.w6_q, lut)
+        else:
+            sched = ArraySchedule(beta_arr) if per_rep else schedule
+
+            def chunk(st, betas2d, iters, S):
+                return self._run_chunk(iters, S, per_rep)(
+                    st, betas2d, self.p.masks, self.p.h, self.p.w6)
 
         return run_recorded_driver(
-            state=state, schedule=schedule, record_points=record_points,
+            state=state, schedule=sched, record_points=record_points,
             chunk_fn=chunk, record_fn=self.energy, sync_every=int(sync_every),
             flips_of=lambda st: st.flips,
             flips_per_sweep=self.n_sites * self.replicas)
@@ -345,7 +517,7 @@ class LatticeDSIM:
 
     # -- dry-run hook -----------------------------------------------------------------------
 
-    def lower_chunk(self, iters: int = 2, S: int = 4):
+    def lower_chunk(self, iters: int = 2, S: int = 4, lut_rows: int = 10):
         run = self._run_chunk(iters, S)
 
         def sds(x, spec):
@@ -366,9 +538,17 @@ class LatticeDSIM:
             flips=jax.ShapeDtypeStruct((R,), jnp.int32,
                                        sharding=self._shard(P())),
         )
+        masks = sds(p.masks, self.spec_masks)
+        if self.precision == "int8":
+            rows = jax.ShapeDtypeStruct((iters, S), jnp.int32,
+                                        sharding=self._shard(P()))
+            h_q = sds(self.h_q, self.spec_flat)
+            w6_q = tuple(sds(w, self.spec_flat) for w in self.w6_q)
+            lut = jax.ShapeDtypeStruct((lut_rows, 2 * self.f_max + 1),
+                                       jnp.uint32, sharding=self._shard(P()))
+            return run.lower(st, rows, masks, h_q, w6_q, lut)
         betas = jax.ShapeDtypeStruct((iters, S), jnp.float32,
                                      sharding=self._shard(P()))
-        masks = sds(p.masks, self.spec_masks)
         h = sds(p.h, self.spec_flat)
         w6 = tuple(sds(w, self.spec_flat) for w in p.w6)
         return run.lower(st, betas, masks, h, w6)

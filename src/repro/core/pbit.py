@@ -20,7 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["FixedPoint", "quantize", "pbit_update", "lfsr_init", "lfsr_next",
-           "lfsr_uniform", "S41", "S43", "S46"]
+           "lfsr_uniform", "S41", "S43", "S46",
+           "LFSR_UNIFORM_BITS", "quantize_couplings", "field_bound",
+           "threshold_lut", "threshold_lut_cached", "lut_accept"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,3 +96,131 @@ def lfsr_uniform(state: jnp.ndarray) -> jnp.ndarray:
     # keep 24 mantissa-safe bits
     bits = (state >> jnp.uint32(8)).astype(jnp.float32)
     return bits * jnp.float32(2.0 / 16777216.0) - jnp.float32(1.0)
+
+
+# ---------------------------------------------------------------------------
+# fixed-point coupling quantization + threshold LUTs (the hardware pipeline)
+# ---------------------------------------------------------------------------
+#
+# The machine never evaluates tanh at runtime: couplings live on chip as
+# small signed integers, the local field is an integer accumulate, and the
+# Boltzmann acceptance is a single unsigned compare of the raw LFSR draw
+# against a pre-tabulated threshold
+#
+#   accept(+1)  <=>  tanh(beta*field) + r >= 0,   r = u / 2^23 - 1
+#               <=>  u >= ceil((1 - tanh(beta * scale * f)) * 2^23) = T[beta, f]
+#
+# with u the 24-bit LFSR draw (state >> 8) and f the *integer* field.  T is
+# one small uint32 row per beta-staircase entry, computed host-side in f64;
+# annealing staircases become row indices into the table.
+
+LFSR_UNIFORM_BITS = 24  # the draw u = state >> 8 is uniform on [0, 2^24)
+_HALF = 1 << (LFSR_UNIFORM_BITS - 1)   # 2^23: u/2^23 - 1 is the (-1,1) map
+
+
+def quantize_couplings(h, w6, bits: int = 8):
+    """Quantize biases + the six directional couplings to signed ``bits``.
+
+    One per-problem scale (symmetric, max-abs / qmax) covers h and all six
+    weight planes, so the integer field  f = h_q + sum_d w_q[d] * m_d  obeys
+    scale * f ~= h + sum_d w[d] * m_d.  For the paper's +-J EA instances the
+    quantization is *exact*.  A common integer factor of the quantized
+    values is divided out (and folded into the scale): +-J couplings land
+    on +-1 — the hardware's actual small-integer weights — which keeps the
+    integer field range, and with it the threshold-LUT width, minimal.
+
+    Returns ``(h_q, w6_q, scale)`` with int8 arrays and a float scale.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    h = np.asarray(h, np.float64)
+    ws = [np.asarray(w, np.float64) for w in w6]
+    amax = max([np.abs(h).max()] + [np.abs(w).max() for w in ws])
+    scale = (amax / qmax) if amax > 0 else 1.0
+    to_int = lambda a: np.clip(np.rint(a / scale), -qmax, qmax).astype(np.int64)
+    qs = [to_int(h)] + [to_int(w) for w in ws]
+    g = int(np.gcd.reduce([np.gcd.reduce(np.abs(q), axis=None) for q in qs]))
+    if g > 1:
+        qs = [q // g for q in qs]
+        scale *= g
+    qs = [q.astype(np.int8) for q in qs]
+    return jnp.asarray(qs[0]), tuple(jnp.asarray(q) for q in qs[1:]), \
+        float(scale)
+
+
+def field_bound(h_q, w6_q) -> int:
+    """Tight per-site bound on |h_q + sum_d w_q[d] * m_d| over m in {-1,+1}."""
+    b = np.abs(np.asarray(h_q, np.int64))
+    for w in w6_q:
+        b = b + np.abs(np.asarray(w, np.int64))
+    return int(b.max())
+
+
+# Widest LUT row evaluated by the unrolled rank-count accept (below).
+# Per-element gather is a scalar loop on XLA:CPU and unsupported from VMEM
+# on Mosaic; the rank count is Lw scalar compares that fuse into ONE
+# elementwise pass — and GCD-reduced +-J problems need only 2*6+1 = 13.
+LUT_SELECT_MAX_WIDTH = 64
+
+
+def lut_accept(thr: jnp.ndarray, field: jnp.ndarray, f_off: int,
+               u: jnp.ndarray) -> jnp.ndarray:
+    """The LUT accept test ``u >= thr[field + f_off]`` (thr is one LUT row).
+
+    Narrow rows exploit the row's monotonicity (thr is nonincreasing in the
+    field index, guaranteed by :func:`threshold_lut`): the number of
+    entries already satisfied by ``u`` is ``count = #{k : u >= thr[k]}``,
+    and those entries are exactly the top ``count`` field indices, so
+
+        u >= thr[idx]   <=>   idx + count >= len(thr)
+
+    — an unrolled chain of compares against scalars, pure vector-unit work
+    with no gather and no select traffic.  Wide rows fall back to a gather.
+    """
+    lw = int(thr.shape[0])
+    idx = jnp.clip(field + f_off, 0, lw - 1)
+    if lw <= LUT_SELECT_MAX_WIDTH:
+        count = jnp.zeros(u.shape, jnp.int32)
+        for k in range(lw):
+            count = count + (u >= thr[k]).astype(jnp.int32)
+        return idx + count >= lw
+    return u >= jnp.take(thr, idx, mode="clip")
+
+
+def threshold_lut(betas, scale: float, f_max: int,
+                  fmt: Optional[FixedPoint] = None) -> np.ndarray:
+    """(len(betas), 2*f_max+1) uint32 acceptance thresholds.
+
+    Row b, column f + f_max holds T such that the p-bit update at inverse
+    temperature betas[b] and integer field f accepts +1 iff the raw 24-bit
+    LFSR draw u satisfies u >= T.  ``fmt`` (the s{a}{b} activation format of
+    the f32 path) folds into the table for free: the activation is rounded
+    and saturated *before* tanh, exactly as the float kernel would.
+
+    Monotone in beta by construction: for f > 0 rows are non-increasing
+    down the staircase, for f < 0 non-decreasing, and T(f=0) == 2^23.
+    Each *row* is monotone non-increasing in f (beta >= 0 and tanh is
+    monotone) — the invariant :func:`lut_accept`'s rank count relies on.
+    """
+    betas = np.asarray(betas, np.float64).reshape(-1)
+    if (betas < 0).any():
+        raise ValueError("threshold LUTs need beta >= 0 (rows must be "
+                         "monotone in the field for the rank-count accept)")
+    f = np.arange(-int(f_max), int(f_max) + 1, dtype=np.float64)
+    act = betas[:, None] * (float(scale) * f)[None, :]
+    if fmt is not None:
+        act = np.clip(np.round(act / fmt.step) * fmt.step, fmt.lo, fmt.hi)
+    t = np.ceil((1.0 - np.tanh(act)) * _HALF)
+    return np.clip(t, 0, 1 << LFSR_UNIFORM_BITS).astype(np.uint32)
+
+
+def threshold_lut_cached(cache: dict, table: np.ndarray, scale: float,
+                         f_max: int,
+                         fmt: Optional[FixedPoint] = None) -> jnp.ndarray:
+    """Device-resident :func:`threshold_lut`, memoized in the caller-owned
+    ``cache`` — the one LUT-construction path shared by every engine.  The
+    key covers everything that determines the table, so one cache dict may
+    be shared across problems."""
+    key = (table.tobytes(), float(scale), int(f_max), fmt)
+    if key not in cache:
+        cache[key] = jnp.asarray(threshold_lut(table, scale, f_max, fmt=fmt))
+    return cache[key]

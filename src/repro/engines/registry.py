@@ -57,6 +57,17 @@ class _Handle:
         self.replicas = int(replicas)
         self.n_sites = int(n_sites)
 
+    @property
+    def precision(self) -> str:
+        """Numeric pipeline of the update rule ("f32" or "int8")."""
+        return getattr(self.eng, "precision", "f32")
+
+    @property
+    def kernel_path(self):
+        """Which lattice dispatch actually runs ("fused"/"per_phase");
+        None for engines without the fused/per-phase split."""
+        return getattr(self.eng, "kernel_path", None)
+
     def init_state(self, seed: int = 0):
         return self.eng.init_state(seed)
 
@@ -157,7 +168,8 @@ def make_engine(name: str, graph=None, *, coloring: Optional[Coloring] = None,
                 L: Optional[int] = None, seed: int = 0,
                 impl: str = "auto", bitpack: bool = True,
                 fused: bool = True, kernel_bx: Optional[int] = None,
-                bitpack_halos: bool = True):
+                bitpack_halos: bool = True, precision: str = "f32",
+                vmem_budget_bytes: Optional[int] = None):
     """Build a sampling engine by name.
 
       "gibbs"     — monolithic chromatic Gibbs; needs ``graph`` (+coloring).
@@ -171,11 +183,22 @@ def make_engine(name: str, graph=None, *, coloring: Optional[Coloring] = None,
                     LatticeProblem or ``L=`` to build one from ``seed``.
 
     ``replicas=R`` makes every handle run R independent chains per call.
+
+    ``precision="int8"`` selects the fixed-point update pipeline (int8
+    on-chip couplings, integer field accumulation, LUT-threshold accepts)
+    on the dsim and lattice engines; ``"f32"`` (default) is the floating
+    reference the integer path is statistically compared against.
     """
     if name not in ENGINE_NAMES:
         raise ValueError(f"unknown engine {name!r}; choose from {ENGINE_NAMES}")
     if replicas < 1:
         raise ValueError("replicas must be >= 1")
+    if precision not in ("f32", "int8"):
+        raise ValueError(f"unknown precision {precision!r}")
+    if precision != "f32" and name in ("gibbs", "dsim_dist"):
+        raise ValueError(
+            f"precision={precision!r} is not supported on {name!r} yet "
+            "(use 'dsim' or 'lattice')")
 
     if name == "gibbs":
         if not isinstance(graph, IsingGraph):
@@ -186,7 +209,8 @@ def make_engine(name: str, graph=None, *, coloring: Optional[Coloring] = None,
 
     if name == "dsim":
         prob = _default_partitioned(graph, coloring, K, labels)
-        eng = DSIMEngine(prob, rng=rng, fmt=fmt, mode=mode)
+        eng = DSIMEngine(prob, rng=rng, fmt=fmt, mode=mode,
+                         precision=precision)
         return _DSIMHandle(eng, replicas, prob.n)
 
     if name == "dsim_dist":
@@ -214,7 +238,10 @@ def make_engine(name: str, graph=None, *, coloring: Optional[Coloring] = None,
         dim_axes = (axis, None, None) if dim_axes is None else dim_axes
     elif dim_axes is None:
         raise ValueError("pass dim_axes when passing a mesh")
+    extra = {} if vmem_budget_bytes is None else \
+        {"vmem_budget_bytes": vmem_budget_bytes}
     eng = LatticeDSIM(prob, mesh, dim_axes=dim_axes, fmt=fmt, impl=impl,
                       kernel_bx=kernel_bx, bitpack_halos=bitpack_halos,
-                      fused=fused, replicas=replicas)
+                      fused=fused, replicas=replicas, precision=precision,
+                      **extra)
     return _LatticeHandle(eng, replicas, prob.n_active)

@@ -16,8 +16,8 @@ import jax
 from repro.core.pbit import FixedPoint
 from . import pbit_lattice, lattice_energy, ref as _ref
 
-__all__ = ["pbit_update_op", "pbit_sweep_op", "brick_energy_op",
-           "default_impl"]
+__all__ = ["pbit_update_op", "pbit_sweep_op", "pbit_update_int_op",
+           "pbit_sweep_int_op", "brick_energy_op", "default_impl"]
 
 
 def default_impl() -> str:
@@ -49,6 +49,32 @@ def pbit_sweep_op(m, s, betas, masks, h, w6, halos,
                                          fmt)
     return pbit_lattice.pbit_brick_sweep(
         m, s, betas, masks, h, w6, halos, fmt=fmt,
+        interpret=(impl == "interpret"))
+
+
+def pbit_update_int_op(m, s, row, parity_mask, h_q, w6_q, halos, lut,
+                       bx: Optional[int] = None, impl: str = "auto"):
+    """Fixed-point color-phase update: int8 couplings, int32 fields, LUT
+    thresholds (``row`` is the LUT row index replacing beta)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.pbit_brick_update_int_ref(m, s, row, parity_mask, h_q,
+                                              w6_q, halos, lut)
+    return pbit_lattice.pbit_brick_update_int(
+        m, s, row, parity_mask, h_q, w6_q, halos, lut, bx=bx,
+        interpret=(impl == "interpret"))
+
+
+def pbit_sweep_int_op(m, s, rows, masks, h_q, w6_q, halos, lut,
+                      impl: str = "auto"):
+    """Fused fixed-point multi-phase sweep: len(rows) full color cycles in
+    one launch, annealing as LUT row indices.  Returns (m, s, flips)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.pbit_brick_sweep_int_ref(m, s, rows, masks, h_q, w6_q,
+                                             halos, lut)
+    return pbit_lattice.pbit_brick_sweep_int(
+        m, s, rows, masks, h_q, w6_q, halos, lut,
         interpret=(impl == "interpret"))
 
 

@@ -9,7 +9,12 @@ for a color group.
 TPU adaptation (DESIGN.md): the FPGA's hardwired neighbor fabric becomes
 shifted-plane reads of a VMEM-resident brick; the per-p-bit LFSR column
 becomes a vectorized xorshift32 lane; s{4}{1} fixed point becomes a
-round+clip on the activation.  The brick's x extent is tiled by BlockSpec
+round+clip on the activation.  The ``*_int`` kernel variants go all the way
+to the hardware arithmetic: int8 on-chip couplings, int32 field
+accumulation, and the tanh + float compare replaced by one unsigned compare
+of the raw LFSR draw against a precomputed threshold LUT (DESIGN.md
+"Fixed-point pipeline and threshold LUTs") — zero floating-point ops in the
+inner loop.  The brick's x extent is tiled by BlockSpec
 (grid over x-slabs); neighbor access across tile boundaries uses the
 standard shifted-index-map halo pattern (the same input bound three times at
 block indices i-1, i, i+1), and physical brick boundaries use explicit halo
@@ -30,9 +35,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.pbit import FixedPoint
+from repro.core.pbit import FixedPoint, lut_accept
 
-__all__ = ["pbit_brick_update", "pbit_brick_sweep"]
+__all__ = ["pbit_brick_update", "pbit_brick_sweep",
+           "pbit_brick_update_int", "pbit_brick_sweep_int"]
 
 
 def _kernel(parity_ref, beta_ref,
@@ -159,6 +165,124 @@ def _sweep_kernel(betas_ref, masks_ref,
     flips_ref[0, 0] = flips
 
 
+# ---------------------------------------------------------------------------
+# fixed-point fused sweep kernel (precision="int8")
+# ---------------------------------------------------------------------------
+#
+# Identical dataflow to ``_sweep_kernel`` with every float op removed: the
+# couplings arrive as int8, the field accumulates in int32, and the tanh +
+# float-compare collapses to one unsigned compare of the raw 24-bit LFSR
+# draw against a per-(beta, field) threshold read from a small uint32 LUT
+# (``repro.core.pbit.threshold_lut``) held in VMEM.  Annealing enters as
+# one LUT *row index* per sweep.  VMEM working set drops from
+# (38 + n_c) B/site to (17 + n_c) B/site — see lattice_dsim's working-set
+# model for the resulting brick ceiling.
+
+
+def _sweep_kernel_int(rows_ref, lut_ref, masks_ref,
+                      h_ref, wxm_ref, wxp_ref, wym_ref, wyp_ref, wzm_ref,
+                      wzp_ref, m_ref,
+                      xlo_ref, xhi_ref, ylo_ref, yhi_ref, zlo_ref, zhi_ref,
+                      s_ref,
+                      m_out_ref, s_out_ref, flips_ref,
+                      *, n_colors: int, n_sweeps: int, f_off: int):
+    i32 = jnp.int32
+    m = m_ref[...]
+    s = s_ref[...]
+    lut = lut_ref[...]
+    h = h_ref[...].astype(i32)
+    wxm, wxp = wxm_ref[...].astype(i32), wxp_ref[...].astype(i32)
+    wym, wyp = wym_ref[...].astype(i32), wyp_ref[...].astype(i32)
+    wzm, wzp = wzm_ref[...].astype(i32), wzp_ref[...].astype(i32)
+    # halo planes stay int8 — neighbor concats below keep the 1 B/site
+    # layout and widen in registers inside the field accumulate
+    xlo = xlo_ref[...][None]
+    xhi = xhi_ref[...][None]
+    ylo = ylo_ref[...][:, None, :]
+    yhi = yhi_ref[...][:, None, :]
+    zlo = zlo_ref[...][:, :, None]
+    zhi = zhi_ref[...][:, :, None]
+    flips = jnp.zeros((), jnp.int32)
+
+    for t in range(n_sweeps):                     # static unroll: S is small
+        thr = jax.lax.dynamic_index_in_dim(lut, rows_ref[t, 0], axis=0,
+                                           keepdims=False)
+        for c in range(n_colors):
+            xm = jnp.concatenate([xlo, m[:-1]], axis=0).astype(i32)
+            xp = jnp.concatenate([m[1:], xhi], axis=0).astype(i32)
+            ym = jnp.concatenate([ylo, m[:, :-1]], axis=1).astype(i32)
+            yp = jnp.concatenate([m[:, 1:], yhi], axis=1).astype(i32)
+            zm = jnp.concatenate([zlo, m[:, :, :-1]], axis=2).astype(i32)
+            zp = jnp.concatenate([m[:, :, 1:], zhi], axis=2).astype(i32)
+            field = (h + wxm * xm + wxp * xp + wym * ym + wyp * yp
+                     + wzm * zm + wzp * zp)
+            s = s ^ (s << jnp.uint32(13))
+            s = s ^ (s >> jnp.uint32(17))
+            s = s ^ (s << jnp.uint32(5))
+            u = s >> jnp.uint32(8)
+            upd = jnp.where(lut_accept(thr, field, f_off, u),
+                            1, -1).astype(jnp.int8)
+            new = jnp.where(masks_ref[c] != 0, upd, m)
+            flips = flips + (new != m).sum().astype(jnp.int32)
+            m = new
+
+    m_out_ref[...] = m
+    s_out_ref[...] = s
+    flips_ref[0, 0] = flips
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pbit_brick_sweep_int(m, s, rows, masks, h_q, w6_q, halos, lut,
+                         interpret: bool = True):
+    """``len(rows)`` fused fixed-point sweeps of one brick.
+
+    Args match :func:`pbit_brick_sweep` except:
+      rows: (S,) int32 — LUT row index (= beta staircase entry) per sweep.
+      h_q / w6_q: int8 quantized biases and couplings
+        (:func:`repro.core.pbit.quantize_couplings`).
+      lut: (n_rows, 2*f_max+1) uint32 acceptance thresholds
+        (:func:`repro.core.pbit.threshold_lut`).
+
+    Returns (m_new, s_new, flips).  Bit-exact against
+    :func:`repro.kernels.ref.pbit_brick_sweep_int_ref`.
+    """
+    Bx, By, Bz = m.shape
+    n_colors, S = int(masks.shape[0]), int(rows.shape[0])
+    n_rows, lw = lut.shape
+    wxm, wxp, wym, wyp, wzm, wzp = w6_q
+    xlo, xhi, ylo, yhi, zlo, zhi = halos
+    rows = jnp.asarray(rows, jnp.int32).reshape(S, 1)
+
+    whole = pl.BlockSpec((Bx, By, Bz), lambda: (0, 0, 0))
+    full = lambda *sh: pl.BlockSpec(sh, lambda: (0,) * len(sh))
+
+    m_new, s_new, flips = pl.pallas_call(
+        functools.partial(_sweep_kernel_int, n_colors=n_colors, n_sweeps=S,
+                          f_off=(lw - 1) // 2),
+        grid=(),
+        in_specs=[
+            full(S, 1),                           # LUT row per sweep
+            full(n_rows, lw),                     # threshold LUT
+            full(n_colors, Bx, By, Bz),           # masks
+            whole, whole, whole, whole, whole, whole, whole,  # h_q + 6 w_q
+            whole,                                # m
+            full(By, Bz), full(By, Bz),           # xlo, xhi
+            full(Bx, Bz), full(Bx, Bz),           # ylo, yhi
+            full(Bx, By), full(Bx, By),           # zlo, zhi
+            whole,                                # lfsr state
+        ],
+        out_specs=[whole, whole, full(1, 1)],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bx, By, Bz), jnp.int8),
+            jax.ShapeDtypeStruct((Bx, By, Bz), jnp.uint32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(rows, lut, masks, h_q, wxm, wxp, wym, wyp, wzm, wzp,
+      m, xlo, xhi, ylo, yhi, zlo, zhi, s)
+    return m_new, s_new, flips[0, 0]
+
+
 @functools.partial(jax.jit, static_argnames=("fmt", "interpret"))
 def pbit_brick_sweep(m, s, betas, masks, h, w6, halos,
                      fmt: Optional[FixedPoint] = None,
@@ -273,4 +397,102 @@ def pbit_brick_update(m, s, beta, parity_mask, h, w6, halos,
         ],
         interpret=interpret,
     )(parity_mask, beta_arr, h, wxm, wxp, wym, wyp, wzm, wzp,
+      m, m, m, xlo, xhi, ylo, yhi, zlo, zhi, s)
+
+
+def _kernel_int(parity_ref, row_ref, lut_ref,
+                h_ref, wxm_ref, wxp_ref, wym_ref, wyp_ref, wzm_ref, wzp_ref,
+                m_l_ref, m_c_ref, m_r_ref,
+                xlo_ref, xhi_ref, ylo_ref, yhi_ref, zlo_ref, zhi_ref,
+                s_ref,
+                m_out_ref, s_out_ref,
+                *, nblocks: int, f_off: int):
+    i = pl.program_id(0)
+    i32 = jnp.int32
+    mc_raw = m_c_ref[...]
+
+    # x-direction neighbors: interior from the shifted blocks, edges from
+    # halos — assembled in int8 (1 B/site), widened in the accumulate
+    left_plane = jnp.where(i == 0, xlo_ref[...][None], m_l_ref[...][-1:])
+    right_plane = jnp.where(i == nblocks - 1, xhi_ref[...][None],
+                            m_r_ref[...][:1])
+    xm = jnp.concatenate([left_plane, mc_raw[:-1]], axis=0).astype(i32)
+    xp = jnp.concatenate([mc_raw[1:], right_plane], axis=0).astype(i32)
+    ym = jnp.concatenate([ylo_ref[...][:, None, :], mc_raw[:, :-1]],
+                         axis=1).astype(i32)
+    yp = jnp.concatenate([mc_raw[:, 1:], yhi_ref[...][:, None, :]],
+                         axis=1).astype(i32)
+    zm = jnp.concatenate([zlo_ref[...][:, :, None], mc_raw[:, :, :-1]],
+                         axis=2).astype(i32)
+    zp = jnp.concatenate([mc_raw[:, :, 1:], zhi_ref[...][:, :, None]],
+                         axis=2).astype(i32)
+
+    field = (h_ref[...].astype(i32)
+             + wxm_ref[...].astype(i32) * xm + wxp_ref[...].astype(i32) * xp
+             + wym_ref[...].astype(i32) * ym + wyp_ref[...].astype(i32) * yp
+             + wzm_ref[...].astype(i32) * zm + wzp_ref[...].astype(i32) * zp)
+
+    s = s_ref[...]
+    s = s ^ (s << jnp.uint32(13))
+    s = s ^ (s >> jnp.uint32(17))
+    s = s ^ (s << jnp.uint32(5))
+    u = s >> jnp.uint32(8)
+
+    thr = jax.lax.dynamic_index_in_dim(lut_ref[...], row_ref[0, 0], axis=0,
+                                       keepdims=False)
+    upd = jnp.where(lut_accept(thr, field, f_off, u), 1, -1).astype(jnp.int8)
+    mask = parity_ref[...] != 0
+    m_out_ref[...] = jnp.where(mask, upd, mc_raw)
+    s_out_ref[...] = s
+
+
+@functools.partial(jax.jit, static_argnames=("bx", "interpret"))
+def pbit_brick_update_int(m, s, row, parity_mask, h_q, w6_q, halos, lut,
+                          bx: Optional[int] = None,
+                          interpret: bool = True):
+    """One fixed-point color-phase update of a lattice brick (x-tiled).
+
+    Args match :func:`pbit_brick_update` except ``row`` (scalar int32 LUT
+    row index replacing beta), int8 ``h_q``/``w6_q``, and the uint32
+    threshold ``lut``.  Bit-exact against
+    :func:`repro.kernels.ref.pbit_brick_update_int_ref`.
+    """
+    Bx, By, Bz = m.shape
+    bx = Bx if bx is None else bx
+    if Bx % bx != 0:
+        raise ValueError(f"Bx={Bx} not divisible by tile bx={bx}")
+    nb = Bx // bx
+    n_rows, lw = lut.shape
+    wxm, wxp, wym, wyp, wzm, wzp = w6_q
+    xlo, xhi, ylo, yhi, zlo, zhi = halos
+    row_arr = jnp.asarray(row, jnp.int32).reshape(1, 1)
+
+    blk = (bx, By, Bz)
+    cur = pl.BlockSpec(blk, lambda i: (i, 0, 0))
+    prv = pl.BlockSpec(blk, lambda i: (jnp.maximum(i - 1, 0), 0, 0))
+    nxt = pl.BlockSpec(blk, lambda i: (jnp.minimum(i + 1, nb - 1), 0, 0))
+    full2 = lambda a, b: pl.BlockSpec((a, b), lambda i: (0, 0))
+    xtile = lambda b2: pl.BlockSpec((bx, b2), lambda i: (i, 0))
+
+    return pl.pallas_call(
+        functools.partial(_kernel_int, nblocks=nb, f_off=(lw - 1) // 2),
+        grid=(nb,),
+        in_specs=[
+            cur,                      # parity_mask
+            full2(1, 1),              # LUT row index
+            full2(n_rows, lw),        # threshold LUT
+            cur, cur, cur, cur, cur, cur, cur,   # h_q + 6 quantized weights
+            prv, cur, nxt,            # m at i-1, i, i+1
+            full2(By, Bz), full2(By, Bz),        # xlo, xhi
+            xtile(Bz), xtile(Bz),     # ylo, yhi
+            xtile(By), xtile(By),     # zlo, zhi
+            cur,                      # lfsr state
+        ],
+        out_specs=[cur, cur],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bx, By, Bz), jnp.int8),
+            jax.ShapeDtypeStruct((Bx, By, Bz), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(parity_mask, row_arr, lut, h_q, wxm, wxp, wym, wyp, wzm, wzp,
       m, m, m, xlo, xhi, ylo, yhi, zlo, zhi, s)

@@ -8,12 +8,14 @@ from __future__ import annotations
 
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
-from repro.core.pbit import FixedPoint
+from repro.core.pbit import FixedPoint, lut_accept
 
 __all__ = ["pbit_brick_update_ref", "pbit_brick_sweep_ref",
-           "brick_energy_ref", "neighbor_sums_ref"]
+           "pbit_brick_update_int_ref", "pbit_brick_sweep_int_ref",
+           "brick_energy_ref", "neighbor_sums_ref", "int_field_ref"]
 
 
 def _shifted(m, halos):
@@ -68,6 +70,77 @@ def pbit_brick_sweep_ref(m, s, betas, masks, h, w6, halos,
         for c in range(masks.shape[0]):
             m2, s = pbit_brick_update_ref(m, s, betas[t], masks[c], h, w6,
                                           halos, fmt)
+            flips = flips + (m2 != m).sum().astype(jnp.int32)
+            m = m2
+    return m, s, flips
+
+
+# ---------------------------------------------------------------------------
+# fixed-point pipeline oracles (zero floating-point ops in the update)
+# ---------------------------------------------------------------------------
+
+def _shifted_int(m, halos):
+    """Neighbor assembly kept in int8 — the big shifted intermediates stay
+    1 B/site (the accumulate below widens in registers)."""
+    xlo, xhi, ylo, yhi, zlo, zhi = halos
+    xm = jnp.concatenate([xlo[None], m[:-1]], axis=0)
+    xp = jnp.concatenate([m[1:], xhi[None]], axis=0)
+    ym = jnp.concatenate([ylo[:, None, :], m[:, :-1]], axis=1)
+    yp = jnp.concatenate([m[:, 1:], yhi[:, None, :]], axis=1)
+    zm = jnp.concatenate([zlo[:, :, None], m[:, :, :-1]], axis=2)
+    zp = jnp.concatenate([m[:, :, 1:], zhi[:, :, None]], axis=2)
+    return xm, xp, ym, yp, zm, zp
+
+
+def int_field_ref(m, h_q, w6_q, halos):
+    """Integer local field  h_q + sum_d w_q[d] * m_d  in int32.
+
+    Products and sums accumulate in int32; the int8 operands widen inside
+    the fused elementwise chain, so no int32 neighbor array is ever
+    materialized."""
+    i32 = jnp.int32
+    wxm, wxp, wym, wyp, wzm, wzp = w6_q
+    xm, xp, ym, yp, zm, zp = _shifted_int(m, halos)
+    return (h_q.astype(i32)
+            + wxm.astype(i32) * xm.astype(i32)
+            + wxp.astype(i32) * xp.astype(i32)
+            + wym.astype(i32) * ym.astype(i32)
+            + wyp.astype(i32) * yp.astype(i32)
+            + wzm.astype(i32) * zm.astype(i32)
+            + wzp.astype(i32) * zp.astype(i32))
+
+
+def pbit_brick_update_int_ref(m, s, row, parity_mask, h_q, w6_q, halos, lut):
+    """One color-phase update on the integer path.
+
+    ``row`` selects the beta row of ``lut`` ((n_rows, 2*f_max+1) uint32,
+    :func:`repro.core.pbit.threshold_lut`); the accept test is a single
+    unsigned compare of the raw 24-bit LFSR draw against the tabulated
+    threshold — no floating point anywhere.
+    """
+    f_off = (lut.shape[1] - 1) // 2
+    field = int_field_ref(m, h_q, w6_q, halos)
+    s = s ^ (s << jnp.uint32(13))
+    s = s ^ (s >> jnp.uint32(17))
+    s = s ^ (s << jnp.uint32(5))
+    u = s >> jnp.uint32(8)
+    thr = jax.lax.dynamic_index_in_dim(lut, jnp.asarray(row, jnp.int32),
+                                       axis=0, keepdims=False)
+    upd = jnp.where(lut_accept(thr, field, f_off, u), 1, -1).astype(jnp.int8)
+    m_new = jnp.where(parity_mask != 0, upd, m)
+    return m_new, s
+
+
+def pbit_brick_sweep_int_ref(m, s, rows, masks, h_q, w6_q, halos, lut):
+    """Oracle for the fused integer sweep kernel: ``len(rows)`` full color
+    cycles against halos held fixed, one LUT row index per sweep.  Returns
+    (m_new, s_new, flips)."""
+    rows = jnp.asarray(rows, jnp.int32).reshape(-1)
+    flips = jnp.zeros((), jnp.int32)
+    for t in range(rows.shape[0]):
+        for c in range(masks.shape[0]):
+            m2, s = pbit_brick_update_int_ref(m, s, rows[t], masks[c], h_q,
+                                              w6_q, halos, lut)
             flips = flips + (m2 != m).sum().astype(jnp.int32)
             m = m2
     return m, s, flips

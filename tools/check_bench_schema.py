@@ -1,0 +1,104 @@
+"""CI gate for BENCH_flip_rate.json: required keys present, numbers finite.
+
+A benchmark that silently drops a key (or records NaN/inf/zero because a
+path crashed and a default leaked through) looks exactly like a benchmark
+that ran — this check turns schema regressions into a red CI step.
+
+  python tools/check_bench_schema.py [BENCH_flip_rate.json]
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+REQUIRED_NUMBERS = [
+    "lattice_per_phase_R1_flips_per_s",
+    "lattice_fused_R1_flips_per_s",
+    "lattice_fused_int8_R1_flips_per_s",
+    "speedup_fused_R1_vs_seed_dispatch",
+    "speedup_int8_vs_f32_fused_R1",
+    "engine_speedup_int8_vs_f32_R1",
+    "speedup_fused_replica_batch_vs_seed_dispatch",
+]
+REQUIRED_KEYS = REQUIRED_NUMBERS + [
+    "mode", "problem", "host", "all_paths_flips_per_s",
+    "sweeps_per_s_spread", "kernel_int8_vs_f32",
+]
+SPREAD_FIELDS = ("best", "min", "median", "max", "reps")
+
+
+def _finite_positive(name, v, errors):
+    if not isinstance(v, (int, float)) or isinstance(v, bool) \
+            or not math.isfinite(v) or v <= 0:
+        errors.append(f"{name}: expected finite positive number, got {v!r}")
+
+
+def check(payload: dict) -> list:
+    errors = []
+    for k in REQUIRED_KEYS:
+        if k not in payload:
+            errors.append(f"missing key: {k}")
+    for k in REQUIRED_NUMBERS:
+        if k in payload:
+            _finite_positive(k, payload[k], errors)
+    for path, v in payload.get("all_paths_flips_per_s", {}).items():
+        _finite_positive(f"all_paths_flips_per_s[{path}]", v, errors)
+    for path, stats in payload.get("sweeps_per_s_spread", {}).items():
+        if not isinstance(stats, dict):
+            errors.append(f"sweeps_per_s_spread[{path}]: expected a "
+                          f"spread dict, got {stats!r}")
+            continue
+        entry_errors = []
+        for f in SPREAD_FIELDS:
+            if f not in stats:
+                entry_errors.append(
+                    f"sweeps_per_s_spread[{path}] missing {f!r}")
+            else:
+                _finite_positive(f"sweeps_per_s_spread[{path}].{f}",
+                                 stats[f], entry_errors)
+        if not entry_errors and stats["min"] > stats["best"]:
+            entry_errors.append(f"sweeps_per_s_spread[{path}]: min > best")
+        errors.extend(entry_errors)
+    k2k = payload.get("kernel_int8_vs_f32")
+    if isinstance(k2k, dict):
+        for side in ("f32_flips_per_s", "int8_flips_per_s"):
+            stats = k2k.get(side)
+            if not isinstance(stats, dict):
+                errors.append(f"kernel_int8_vs_f32.{side}: expected a "
+                              f"spread dict, got {stats!r}")
+                continue
+            for f in SPREAD_FIELDS:
+                v = stats.get(f)
+                if v is None:
+                    errors.append(f"kernel_int8_vs_f32.{side} missing {f!r}")
+                else:
+                    _finite_positive(f"kernel_int8_vs_f32.{side}.{f}", v,
+                                     errors)
+        _finite_positive("kernel_int8_vs_f32.speedup_int8_vs_f32",
+                         k2k.get("speedup_int8_vs_f32"), errors)
+    return errors
+
+
+def main(argv) -> int:
+    path = argv[1] if len(argv) > 1 else "BENCH_flip_rate.json"
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: cannot read {path}: {e}")
+        return 1
+    errors = check(payload)
+    if errors:
+        print(f"FAIL: {path} schema regressions:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"OK: {path} — {len(REQUIRED_KEYS)} required keys present, "
+          "all numbers finite and positive")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -11,11 +11,26 @@ from __future__ import annotations
 
 import json
 import os
+import platform
 import time
 
 import numpy as np
 
 REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports", "bench")
+
+
+def host_fingerprint() -> dict:
+    """Host identity stamped into BENCH_* records so cross-run comparisons
+    are grounded (this container's scheduler swings ~2x run to run)."""
+    import jax
+    return {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "cpu_count": os.cpu_count(),
+    }
 
 # reduced-scale experiment defaults (quick mode)
 QUICK = dict(L=8, K=4, budget=2048, instances=3, runs=3, seed0=50)

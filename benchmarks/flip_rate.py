@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import json
 import os
-import platform
 import time
 
 import numpy as np
@@ -33,23 +32,13 @@ from repro.core.coloring import lattice3d_coloring
 from repro.core.partition import slab_partition
 from repro.core.annealing import constant_schedule
 
-from .common import save_detail, row
+from .common import host_fingerprint, row, save_detail
 
 ROOT_BENCH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_flip_rate.json")
 SYNC = 8          # the seed benchmark's boundary-exchange period
 
 
-def _host_fingerprint() -> dict:
-    import jax
-    return {
-        "platform": platform.platform(),
-        "machine": platform.machine(),
-        "python": platform.python_version(),
-        "jax": jax.__version__,
-        "jax_backend": jax.default_backend(),
-        "cpu_count": os.cpu_count(),
-    }
 
 
 def _rate(handle, sweeps: int, sync, reps: int = 9) -> dict:
@@ -200,7 +189,7 @@ def run(quick: bool = True, engine: str = None, replicas: int = 1):
 
     flips = {k: v * n * rep_of[k] for k, v in out.items()}
     detail = {"L": L, "N": n, "replicas": rep_of, "sync_every": sync_used,
-              "host": _host_fingerprint(),
+              "host": host_fingerprint(),
               "sweeps_per_s": out, "sweeps_per_s_spread": spread,
               "flips_per_s": flips}
     if "lattice_kernel" in flips and "lattice_per_phase" in flips:
@@ -219,7 +208,7 @@ def run(quick: bool = True, engine: str = None, replicas: int = 1):
         bench = {
             "mode": "quick" if quick else "full",
             "problem": {"L": L, "N": n, "sync_every": SYNC},
-            "host": _host_fingerprint(),
+            "host": host_fingerprint(),
             "seed_lattice_flips_per_s": None,
             "seed_note": ("the seed's lattice flip-rate path cannot run on "
                           "this jax install (jax.shard_map / "

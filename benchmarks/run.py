@@ -10,6 +10,7 @@ MODULES = [
     "fig3_kappa_vs_eta",
     "fig45_time_to_target",
     "flip_rate",
+    "serve_load",
     "tableS2_maxcut",
     "figS15_sat",
     "figS3_commcost",

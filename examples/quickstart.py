@@ -7,6 +7,9 @@ exchange frequencies (the eta-staleness effect — the paper's core result),
 and the fused-kernel lattice engine running a batch of independent replica
 anneals — one screen of code, every backend behind one API.
 
+For the *serving* story — async job queue, replica-packing scheduler,
+engine pool, streaming results — see examples/serve_sampling.py.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 

@@ -44,7 +44,7 @@ from .pbit import (FixedPoint, field_bound, quantize, quantize_couplings,
                    threshold_lut_cached, lut_accept, lfsr_init, lfsr_next,
                    lfsr_uniform)
 from .energy import energy as direct_energy
-from repro.engines.base import (run_recorded_driver, spawn_seeds,
+from repro.engines.base import (RecordedCursor, run_recorded_driver, spawn_seeds,
                                 stack_states)
 
 __all__ = ["PartitionedProblem", "build_partitioned", "DSIMEngine", "DSIMState"]
@@ -243,9 +243,16 @@ class DSIMEngine:
     # -- state -----------------------------------------------------------------
 
     def init_state(self, seed: int = 0, m0: Optional[np.ndarray] = None,
-                   replicas: Optional[int] = None) -> DSIMState:
+                   replicas: Optional[int] = None,
+                   seeds: Optional[Sequence[int]] = None) -> DSIMState:
         """Fresh state; ``replicas=R`` stacks R independent chains along a
-        new leading axis (independent RNG streams from spawned seeds)."""
+        new leading axis (independent RNG streams from spawned seeds).
+        ``seeds=[...]`` gives every chain its own explicit seed — the
+        packed-batch path, where replica r's trajectory depends only on
+        seeds[r] (co-packed tenants never perturb each other)."""
+        if seeds is not None:
+            return stack_states([self.init_state(int(s), m0=m0)
+                                 for s in seeds])
         if replicas is not None:
             return stack_states([self.init_state(s, m0=m0)
                                  for s in spawn_seeds(seed, replicas)])
@@ -397,8 +404,9 @@ class DSIMEngine:
 
     def run_recorded_full(self, state: DSIMState, schedule,
                           record_points: Sequence[int],
-                          sync_every: SyncSpec = 1):
-        """Shared-driver runner; returns (state, RunRecord)."""
+                          sync_every: SyncSpec = 1, cursor: bool = False):
+        """Shared-driver runner; returns (state, RunRecord) — or, with
+        ``cursor=True``, the resumable RecordedCursor."""
         sync = sync_every if sync_every in ("phase", None) else int(sync_every)
         batched = self.is_batched(state)
         R = state.m.shape[0] if batched else 1
@@ -419,10 +427,13 @@ class DSIMEngine:
             def chunk(st, betas2d, iters, S):
                 return self._run_chunk(iters, S, sync, batched)(st, betas2d)
 
-        return run_recorded_driver(
+        kw = dict(
             state=state, schedule=sched, record_points=record_points,
             chunk_fn=chunk, record_fn=self.energy, sync_every=sync_every,
             flips_of=lambda st: st.flips, flips_per_sweep=self.p.n * R)
+        if cursor:
+            return RecordedCursor(**kw)
+        return run_recorded_driver(**kw)
 
     def run_recorded(self, state: DSIMState, schedule,
                      record_points: Sequence[int],

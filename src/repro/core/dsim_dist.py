@@ -33,7 +33,7 @@ from .pbit import FixedPoint, quantize, lfsr_init, lfsr_next, lfsr_uniform
 from .packing import pack_pm1, unpack_pm1, pad_to_multiple
 from .energy import energy as direct_energy
 from repro.compat import shard_map
-from repro.engines.base import run_recorded_driver
+from repro.engines.base import RecordedCursor, run_recorded_driver
 
 __all__ = ["DistDSIMEngine"]
 
@@ -244,19 +244,24 @@ class DistDSIMEngine:
         return run
 
     def run_recorded_full(self, state: DSIMState, schedule,
-                          record_points: Sequence[int],
+                          record_points: Sequence[int], *,
+                          cursor: bool = False,
                           sync_every: SyncSpec = 1):
-        """Shared-driver runner; returns (state, RunRecord)."""
+        """Shared-driver runner; returns (state, RunRecord) — or, with
+        ``cursor=True``, the resumable RecordedCursor."""
         sync = sync_every if sync_every in ("phase", None) else int(sync_every)
 
         def chunk(st, betas2d, iters, S):
             return self._run_chunk(iters, S, sync)(st, betas2d, self._consts)
 
-        return run_recorded_driver(
+        kw = dict(
             state=state, schedule=schedule, record_points=record_points,
             chunk_fn=chunk, record_fn=self.energy, sync_every=sync_every,
             flips_of=lambda st: st.flips,
             flips_per_sweep=self.p.n * self.replicas)
+        if cursor:
+            return RecordedCursor(**kw)
+        return run_recorded_driver(**kw)
 
     def run_recorded(self, state: DSIMState, schedule,
                      record_points: Sequence[int], sync_every: SyncSpec = 1):

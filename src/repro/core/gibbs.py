@@ -29,7 +29,7 @@ from .graph import IsingGraph
 from .coloring import Coloring
 from .pbit import FixedPoint, pbit_update, lfsr_init, lfsr_next, lfsr_uniform
 from .energy import energy as direct_energy
-from repro.engines.base import (run_recorded_driver, spawn_seeds,
+from repro.engines.base import (RecordedCursor, run_recorded_driver, spawn_seeds,
                                 stack_states)
 from repro.engines.base import chunk_plan  # noqa: F401  (legacy import path)
 
@@ -82,9 +82,16 @@ class GibbsEngine:
     # -- state ---------------------------------------------------------------
 
     def init_state(self, seed: int = 0, m0: Optional[np.ndarray] = None,
-                   replicas: Optional[int] = None) -> GibbsState:
+                   replicas: Optional[int] = None,
+                   seeds: Optional[Sequence[int]] = None) -> GibbsState:
         """Fresh state; ``replicas=R`` stacks R independent chains (leading
-        replica axis, per-replica RNG streams from spawned seeds)."""
+        replica axis, per-replica RNG streams from spawned seeds).
+        ``seeds=[...]`` instead gives every chain its own explicit seed —
+        the packed-batch path, where replica r's trajectory depends only on
+        seeds[r] (co-packed tenants never perturb each other)."""
+        if seeds is not None:
+            return stack_states([self.init_state(int(s), m0=m0)
+                                 for s in seeds])
         if replicas is not None:
             return stack_states([self.init_state(s, m0=m0)
                                  for s in spawn_seeds(seed, replicas)])
@@ -178,13 +185,16 @@ class GibbsEngine:
 
     def run_recorded_full(self, state: GibbsState, schedule,
                           record_points: Sequence[int], sync_every=1,
-                          betas_R: Optional[np.ndarray] = None):
+                          betas_R: Optional[np.ndarray] = None,
+                          cursor: bool = False):
         """Shared-driver runner; returns (state, RunRecord).
 
         ``sync_every`` is accepted (and ignored — the monolithic engine has
         no boundaries) so every engine exposes one signature.
         ``betas_R`` (total_sweeps, R) optionally gives each replica its own
-        staircase (replica-aware annealing)."""
+        staircase (replica-aware annealing).  ``cursor=True`` returns the
+        resumable :class:`~repro.engines.base.RecordedCursor` instead of
+        driving the run to completion."""
         batched = self.is_batched(state)
         per_rep = betas_R is not None
         if per_rep and not batched:
@@ -198,10 +208,13 @@ class GibbsEngine:
             return self._run_chunk(iters * S, batched, per_rep)(st, flat)
 
         R = state.m.shape[0] if batched else 1
-        return run_recorded_driver(
+        kw = dict(
             state=state, schedule=sched, record_points=record_points,
             chunk_fn=chunk, record_fn=lambda st: st.E, sync_every=1,
             flips_of=lambda st: st.flips, flips_per_sweep=self.n * R)
+        if cursor:
+            return RecordedCursor(**kw)
+        return run_recorded_driver(**kw)
 
     def run_recorded(self, state: GibbsState, schedule,
                      record_points: Sequence[int]):

@@ -36,7 +36,8 @@ from .packing import pack_pm1, unpack_pm1, pad_to_multiple
 from .pbit import (FixedPoint, LUT_SELECT_MAX_WIDTH, field_bound, lfsr_init,
                    quantize_couplings, threshold_lut_cached)
 from repro.compat import shard_map
-from repro.engines.base import run_recorded_driver, spawn_seeds
+from repro.engines.base import (RecordedCursor, run_recorded_driver,
+                                spawn_seeds)
 from repro.kernels.ops import (pbit_update_op, pbit_sweep_op,
                                pbit_update_int_op, pbit_sweep_int_op,
                                brick_energy_op)
@@ -395,11 +396,20 @@ class LatticeDSIM:
         self._chunk_cache[key] = run
         return run
 
-    def init_state(self, seed: int = 0) -> LatticeState:
+    def init_state(self, seed: int = 0,
+                   seeds: Optional[Sequence[int]] = None) -> LatticeState:
+        """Fresh replicated state.  ``seeds=[...]`` (length R) gives every
+        replica its own explicit seed — the packed-batch path, where
+        replica r's trajectory depends only on seeds[r]."""
         p = self.p
         X, Y, Z = p.dims
         R = self.replicas
-        seeds = [seed] if R == 1 else spawn_seeds(seed, R)
+        if seeds is not None:
+            seeds = [int(s) for s in seeds]
+            if len(seeds) != R:
+                raise ValueError(f"need exactly R={R} seeds, got {len(seeds)}")
+        else:
+            seeds = [seed] if R == 1 else spawn_seeds(seed, R)
         ms, ss = [], []
         for sd in seeds:
             rng = np.random.default_rng(sd)
@@ -438,7 +448,8 @@ class LatticeDSIM:
 
     def run_recorded_full(self, state: LatticeState, schedule,
                           record_points: Sequence[int], sync_every: int = 1,
-                          betas_R: Optional[np.ndarray] = None):
+                          betas_R: Optional[np.ndarray] = None,
+                          cursor: bool = False):
         """Shared-driver runner; returns (state, RunRecord).
 
         ``betas_R`` (total_sweeps, R) optionally gives each replica its own
@@ -470,11 +481,14 @@ class LatticeDSIM:
                 return self._run_chunk(iters, S, per_rep)(
                     st, betas2d, self.p.masks, self.p.h, self.p.w6)
 
-        return run_recorded_driver(
+        kw = dict(
             state=state, schedule=sched, record_points=record_points,
             chunk_fn=chunk, record_fn=self.energy, sync_every=int(sync_every),
             flips_of=lambda st: st.flips,
             flips_per_sweep=self.n_sites * self.replicas)
+        if cursor:
+            return RecordedCursor(**kw)
+        return run_recorded_driver(**kw)
 
     def run_recorded(self, state: LatticeState, schedule,
                      record_points: Sequence[int], sync_every: int = 1):

@@ -1,0 +1,47 @@
+"""Host-side state snapshotting for preemptible / resumable anneals.
+
+Engine states are jax pytrees of device arrays.  A *snapshot* is the same
+pytree with every array leaf pulled to host memory as an owned numpy copy —
+cheap insurance a serving layer can take between chunks: a preempted or
+cancelled job's exact sampler state survives engine-pool eviction and can
+be handed back to a (re)built engine later.  ``restore_state`` pushes the
+leaves back to device; engines that shard their states (lattice, dist)
+re-establish placement via their own ``shard_state`` — the registry handle's
+``restore`` does this automatically.
+
+Snapshots are plain numpy pytrees, so they also pickle — a durable-queue
+backend can persist in-flight jobs across process restarts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["snapshot_state", "restore_state", "snapshot_nbytes"]
+
+
+def _is_array(x) -> bool:
+    return isinstance(x, (jax.Array, np.ndarray, np.generic))
+
+
+def snapshot_state(state):
+    """Device pytree -> structurally identical host pytree (owned copies)."""
+    return jax.tree.map(
+        lambda x: np.array(x) if _is_array(x) else x, state)
+
+
+def restore_state(snapshot):
+    """Host snapshot -> device pytree (dtypes and structure preserved).
+
+    Placement is the default device; sharded engines re-place via their
+    ``shard_state`` (the registry handle's ``restore`` calls it for you).
+    """
+    return jax.tree.map(
+        lambda x: jnp.asarray(x) if _is_array(x) else x, snapshot)
+
+
+def snapshot_nbytes(snapshot) -> int:
+    """Total host bytes held by a snapshot (pool / queue accounting)."""
+    return sum(x.nbytes for x in jax.tree.leaves(snapshot) if _is_array(x))

@@ -14,11 +14,12 @@ chunk-planning driver (:func:`run_recorded_driver`).
   rec.flips         # exact total flips (host int, no int32 wraparound)
 """
 
-from .base import (Engine, RunRecord, chunk_plan, run_recorded_driver,
-                   spawn_seeds, stack_states)
+from .base import (Engine, RecordedCursor, RunRecord, chunk_plan,
+                   run_recorded_driver, spawn_seeds, stack_states)
 
-__all__ = ["Engine", "RunRecord", "chunk_plan", "run_recorded_driver",
-           "spawn_seeds", "stack_states", "ENGINE_NAMES", "make_engine"]
+__all__ = ["Engine", "RecordedCursor", "RunRecord", "chunk_plan",
+           "run_recorded_driver", "spawn_seeds", "stack_states",
+           "ENGINE_NAMES", "make_engine"]
 
 
 def make_engine(name, *args, **kwargs):

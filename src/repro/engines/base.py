@@ -25,8 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["Engine", "RunRecord", "SyncSpec", "chunk_plan",
-           "run_recorded_driver", "spawn_seeds", "stack_states",
-           "flips_chunk_cap"]
+           "run_recorded_driver", "RecordedCursor", "spawn_seeds",
+           "stack_states", "flips_chunk_cap"]
 
 SyncSpec = Union[int, str, None]
 
@@ -114,13 +114,191 @@ def flips_chunk_cap(flips_per_sweep: int, sweeps_per_iter: int = 1) -> int:
     return 1 << (cap.bit_length() - 1)
 
 
-def quantize_record_points(record_points: Sequence[int], S: int) -> List[int]:
-    """Record points snapped to multiples of the exchange period S."""
-    return sorted(set(max(S, int(round(p / S)) * S) for p in record_points))
+def quantize_record_points(record_points: Sequence[int], S: int,
+                           limit: Optional[int] = None) -> List[int]:
+    """Record points snapped to multiples of the exchange period S.
+
+    ``limit`` (the schedule length): round-to-nearest can push a valid
+    point past the end of the schedule (e.g. 1000 with S=7 -> 1001), so
+    when given, quantized points clamp down to the last reachable
+    boundary ``(limit // S) * S``.
+    """
+    pts = set(max(S, int(round(p / S)) * S) for p in record_points)
+    if limit is not None:
+        last = (int(limit) // S) * S
+        if last >= S:
+            pts = set(min(p, last) for p in pts)
+    return sorted(pts)
 
 
 def _flips_read(value) -> np.ndarray:
     return np.atleast_1d(np.asarray(value)).astype(np.int64) % (1 << 32)
+
+
+class RecordedCursor:
+    """The shared recording loop in resumable form.
+
+    Same chunk plan, record-point quantization, and exact modular flip
+    accounting as :func:`run_recorded_driver` — but advanced one bounded
+    chunk at a time (:meth:`advance`), so a scheduler can interleave several
+    runs on one device, stream partial traces to callers mid-anneal, and
+    preempt a long job between chunks.  Driving a cursor to completion is
+    bitwise identical to the one-shot driver; ``run_recorded_driver`` *is*
+    a cursor driven to completion.
+
+    Args are those of :func:`run_recorded_driver`.  Mid-run, :meth:`record`
+    returns an exact snapshot (times/observables recorded so far, exact
+    flips so far); :attr:`flips_vec` additionally keeps the per-counter
+    (e.g. per-replica) totals so a multi-tenant caller can attribute flips
+    to the replica slices it packed into one batched run.
+    """
+
+    def __init__(self, *, state, schedule, record_points: Sequence[int],
+                 chunk_fn: Callable, record_fn: Callable,
+                 sync_every: SyncSpec = 1,
+                 flips_of: Optional[Callable] = None,
+                 flips_per_sweep: Optional[int] = None):
+        if len(record_points) == 0:
+            raise ValueError("record_points must be non-empty")
+        S = 1 if sync_every in ("phase", None) else int(sync_every)
+        if S < 1:
+            raise ValueError(f"sync_every must be >= 1, got {sync_every!r}")
+        betas = np.asarray(schedule.beta_array())
+        if max(int(p) for p in record_points) > len(betas):
+            raise ValueError("schedule shorter than last record point")
+        pts = quantize_record_points(record_points, S, limit=len(betas))
+        if len(betas) < pts[-1]:
+            raise ValueError("schedule shorter than last record point")
+        max_chunk = None
+        if flips_per_sweep is not None:
+            max_chunk = flips_chunk_cap(flips_per_sweep, S)
+        self.state = state
+        self.S = S
+        self.total_sweeps = pts[-1]
+        self._betas = betas
+        self._chunk_fn = chunk_fn
+        self._record_fn = record_fn
+        self._flips_of = flips_of
+        self._flips_per_sweep = flips_per_sweep
+        self._plan = chunk_plan([p // S for p in pts], max_chunk=max_chunk)
+        self._targets = set(pts)
+        self._i = 0                  # next chunk index into the plan
+        self._pos = 0                # sweeps completed
+        self._out: List[Any] = []
+        self._times: List[int] = []
+        # The device counter is read lazily: at record points (which
+        # synchronize anyway for the observable) and just before the
+        # worst-case flips since the last read could reach 2**31 (keeping
+        # the modular delta unambiguous).  Chunks never end with a
+        # gratuitous host sync.
+        self._prev = _flips_read(flips_of(state)) if flips_of is not None \
+            else None
+        self._pending = 0            # worst-case flips since `_prev` was read
+        self.flips_vec = None if self._prev is None else \
+            np.zeros(self._prev.shape, np.int64)
+        self._flips_total = 0        # exact host total (Python int)
+
+    _LIMIT = 1 << 31
+
+    @property
+    def done(self) -> bool:
+        return self._i >= len(self._plan)
+
+    @property
+    def sweeps_done(self) -> int:
+        return self._pos
+
+    @property
+    def points_recorded(self) -> int:
+        """How many record points have been hit so far (no device sync) —
+        lets a caller skip :meth:`record` after a mid-gap chunk."""
+        return len(self._times)
+
+    @property
+    def flips(self) -> int:
+        """Exact flips up to the last counter read (no device sync)."""
+        return self._flips_total
+
+    def _read_flips(self):
+        cur = _flips_read(self._flips_of(self.state))
+        delta = (cur - self._prev) % (1 << 32)
+        self.flips_vec += delta
+        self._flips_total += int(delta.sum())
+        self._prev = cur
+        self._pending = 0
+
+    def advance(self, max_chunks: int = 1) -> int:
+        """Run up to ``max_chunks`` plan chunks; returns how many ran."""
+        ran = 0
+        while ran < max_chunks and not self.done:
+            c = self._plan[self._i]
+            nsw = c * self.S
+            worst = nsw * (self._flips_per_sweep or 0)
+            if self._flips_of is not None and self._flips_per_sweep and \
+                    self._pending + worst >= self._LIMIT:
+                self._read_flips()
+            # trailing dims (e.g. a per-replica axis) ride along untouched
+            bchunk = jnp.asarray(
+                self._betas[self._pos:self._pos + nsw]).reshape(
+                    (c, self.S) + self._betas.shape[1:])
+            self.state = self._chunk_fn(self.state, bchunk, c, self.S)
+            self._i += 1
+            self._pos += nsw
+            self._pending += worst
+            ran += 1
+            if self._flips_of is not None and self._flips_per_sweep is None:
+                self._read_flips()   # unknown bound: stay exact per chunk
+            if self._pos in self._targets:
+                self._out.append(self._record_fn(self.state))
+                self._times.append(self._pos)
+                if self._flips_of is not None:
+                    self._read_flips()
+        return ran
+
+    def run_to_completion(self):
+        self.advance(max_chunks=len(self._plan))
+        if self._flips_of is not None and self._pending:
+            self._read_flips()
+        return self
+
+    def record(self) -> RunRecord:
+        """Exact snapshot of the trajectory recorded so far.
+
+        Mid-run this settles the pending flip window (one host sync — the
+        caller is asking for an exact partial result); after
+        :meth:`run_to_completion` it is free.  With no record points hit
+        yet, ``energies`` is an empty (0,) array.
+        """
+        if self._flips_of is not None and self._pending:
+            self._read_flips()
+        obs = jnp.stack(self._out) if self._out else jnp.zeros((0,))
+        return RunRecord(np.asarray(self._times, np.int64), obs,
+                         self._flips_total)
+
+    def warm(self):
+        """Execute each distinct chunk length once, discarding the result.
+
+        Chunk runners jit-compile per (length, S) signature; running every
+        distinct length in the plan on the *initial* state populates those
+        caches without advancing the cursor (chunk_fn is pure), so a serving
+        layer can absorb cold-start compiles off the request's timed path.
+        The record observable is warmed too (it may be jitted, e.g. the
+        partitioned engines' energy readout).
+        """
+        import jax
+        seen = set()
+        for c in self._plan[self._i:]:
+            if c in seen:
+                continue
+            seen.add(c)
+            nsw = c * self.S
+            bchunk = jnp.asarray(self._betas[:nsw]).reshape(
+                (c, self.S) + self._betas.shape[1:])
+            jax.block_until_ready(self._chunk_fn(self.state, bchunk, c,
+                                                 self.S))
+        if not self.done:
+            jax.block_until_ready(self._record_fn(self.state))
+        return self
 
 
 def run_recorded_driver(*, state, schedule, record_points: Sequence[int],
@@ -129,12 +307,13 @@ def run_recorded_driver(*, state, schedule, record_points: Sequence[int],
                         sync_every: SyncSpec = 1,
                         flips_of: Optional[Callable] = None,
                         flips_per_sweep: Optional[int] = None):
-    """The shared recording loop.
+    """The shared recording loop (a :class:`RecordedCursor` driven to
+    completion).
 
     Args:
       state: engine state (any pytree).
       schedule: a ``repro.core.annealing.Schedule``.
-      record_points: sweep indices at which to record.
+      record_points: sweep indices at which to record (non-empty).
       chunk_fn: ``(state, betas_2d, iters, S) -> state`` runs ``iters``
         iterations of ``S`` sweeps; betas_2d has shape (iters, S).
       record_fn: ``state -> observable`` read at each record point.
@@ -147,57 +326,12 @@ def run_recorded_driver(*, state, schedule, record_points: Sequence[int],
 
     Returns (state, RunRecord).
     """
-    S = 1 if sync_every in ("phase", None) else int(sync_every)
-    pts = quantize_record_points(record_points, S)
-    betas = schedule.beta_array()
-    if len(betas) < pts[-1]:
-        raise ValueError("schedule shorter than last record point")
-    max_chunk = None
-    if flips_per_sweep is not None:
-        max_chunk = flips_chunk_cap(flips_per_sweep, S)
-    plan = chunk_plan([p // S for p in pts], max_chunk=max_chunk)
-    targets = set(pts)
-
-    # The device counter is read lazily: at record points (which synchronize
-    # anyway for the observable) and just before the worst-case flips since
-    # the last read could reach 2**31 (keeping the modular delta
-    # unambiguous).  Chunks never end with a gratuitous host sync.
-    flips_total = 0
-    prev = _flips_read(flips_of(state)) if flips_of is not None else None
-    pending = 0                      # worst-case flips since `prev` was read
-    LIMIT = 1 << 31
-
-    def read_flips():
-        nonlocal flips_total, prev, pending
-        cur = _flips_read(flips_of(state))
-        flips_total += int(((cur - prev) % (1 << 32)).sum())
-        prev = cur
-        pending = 0
-
-    out, times, pos = [], [], 0
-    betas = np.asarray(betas)
-    for c in plan:
-        nsw = c * S
-        worst = nsw * (flips_per_sweep or 0)
-        if flips_of is not None and flips_per_sweep and \
-                pending + worst >= LIMIT:
-            read_flips()
-        # trailing dims (e.g. a per-replica axis) ride along untouched
-        bchunk = jnp.asarray(betas[pos:pos + nsw]).reshape(
-            (c, S) + betas.shape[1:])
-        state = chunk_fn(state, bchunk, c, S)
-        pos += nsw
-        pending += worst
-        if flips_of is not None and flips_per_sweep is None:
-            read_flips()             # unknown bound: stay exact per chunk
-        if pos in targets:
-            out.append(record_fn(state))
-            times.append(pos)
-            if flips_of is not None:
-                read_flips()
-    if flips_of is not None and pending:
-        read_flips()
-    return state, RunRecord(np.asarray(times), jnp.stack(out), flips_total)
+    cur = RecordedCursor(
+        state=state, schedule=schedule, record_points=record_points,
+        chunk_fn=chunk_fn, record_fn=record_fn, sync_every=sync_every,
+        flips_of=flips_of, flips_per_sweep=flips_per_sweep)
+    cur.run_to_completion()
+    return cur.state, cur.record()
 
 
 # ---------------------------------------------------------------------------

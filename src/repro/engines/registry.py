@@ -26,9 +26,10 @@ from repro.core.dsim_dist import DistDSIMEngine
 from repro.core.lattice import LatticeProblem, build_ea3d_lattice
 from repro.core.lattice_dsim import LatticeDSIM
 from repro.compat import make_mesh, auto_axes
+from repro.core.snapshot import restore_state, snapshot_state
 from .base import RunRecord, SyncSpec
 
-__all__ = ["ENGINE_NAMES", "make_engine"]
+__all__ = ["ENGINE_NAMES", "make_engine", "HandleCursor"]
 
 ENGINE_NAMES = ("gibbs", "dsim", "dsim_dist", "lattice")
 
@@ -42,15 +43,92 @@ def _as_1d(x) -> jnp.ndarray:
     return jnp.atleast_1d(jnp.asarray(x))
 
 
+class HandleCursor:
+    """Registry-normalized view of a :class:`RecordedCursor`.
+
+    Same incremental surface (``advance``/``done``/``record``), but partial
+    records come back in handle shape — energies always (P, R) — and the
+    per-counter flip totals are reduced to one exact total per replica, so
+    a packing scheduler can attribute flips to the replica slices of the
+    jobs it coalesced into this one batched run.
+    """
+
+    def __init__(self, cursor, replicas: int):
+        self._c = cursor
+        self.replicas = int(replicas)
+
+    @property
+    def state(self):
+        return self._c.state
+
+    @property
+    def done(self) -> bool:
+        return self._c.done
+
+    @property
+    def sweeps_done(self) -> int:
+        return self._c.sweeps_done
+
+    @property
+    def total_sweeps(self) -> int:
+        return self._c.total_sweeps
+
+    @property
+    def S(self) -> int:
+        """The record-point quantum the cursor actually applied (1 for
+        engines without boundaries, whatever sync_every resolved to
+        otherwise) — callers mirroring the quantization must use this,
+        not the sync_every they passed in."""
+        return self._c.S
+
+    @property
+    def points_recorded(self) -> int:
+        return self._c.points_recorded
+
+    @property
+    def flips(self) -> int:
+        return self._c.flips
+
+    def advance(self, max_chunks: int = 1) -> int:
+        n = self._c.advance(max_chunks)
+        if self._c.done:
+            self._c.run_to_completion()    # settles the pending flip window
+        return n
+
+    def record(self) -> RunRecord:
+        rec = self._c.record()
+        e = rec.energies
+        if len(rec.times) > 0:
+            e = _as_2d(e)
+        return RunRecord(rec.times, e, rec.flips)
+
+    def flips_per_replica(self) -> np.ndarray:
+        """(R,) exact per-replica flip totals up to the last counter read."""
+        vec = self._c.flips_vec
+        if vec is None:
+            return np.zeros((self.replicas,), np.int64)
+        if vec.shape[0] == self.replicas:
+            return vec.reshape(self.replicas, -1).sum(axis=1)
+        if self.replicas == 1:
+            return np.asarray([vec.sum()], np.int64)
+        raise ValueError(
+            f"flip counters {vec.shape} don't lead with R={self.replicas}")
+
+    def warm(self):
+        self._c.warm()
+        return self
+
+
 class _Handle:
     """Shared adapter plumbing over a legacy engine instance.
 
     The default methods cover the engines whose replicas are fixed at
     construction (dist, lattice); the batched-state engines (gibbs, dsim)
     override ``init_state`` to thread the replica count, and gibbs alone
-    overrides ``run_recorded`` (it has no boundaries, so no sync_every)."""
+    overrides ``_recorded`` (it has no boundaries, so no sync_every)."""
 
     name: str = ""
+    supports_packing: bool = True     # init_state_packed(seeds) available
 
     def __init__(self, eng, replicas: int, n_sites: int):
         self.eng = eng
@@ -71,12 +149,46 @@ class _Handle:
     def init_state(self, seed: int = 0):
         return self.eng.init_state(seed)
 
+    def init_state_packed(self, seeds: Sequence[int]):
+        """Batched state whose replica r is seeded by seeds[r] alone —
+        the replica-packing path: R == len(seeds) must match the handle,
+        and each chain's trajectory is independent of its batch-mates."""
+        seeds = [int(s) for s in seeds]
+        if len(seeds) != self.replicas:
+            raise ValueError(
+                f"need exactly R={self.replicas} seeds, got {len(seeds)}")
+        return self.eng.init_state(seeds=seeds)
+
+    def _recorded(self, state, schedule, record_points, sync_every, cursor):
+        return self.eng.run_recorded_full(state, schedule, record_points,
+                                          sync_every=sync_every,
+                                          cursor=cursor)
+
     def run_recorded(self, state, schedule, record_points: Sequence[int],
                      sync_every: SyncSpec = 1):
-        state, rec = self.eng.run_recorded_full(state, schedule,
-                                                record_points,
-                                                sync_every=sync_every)
+        state, rec = self._recorded(state, schedule, record_points,
+                                    sync_every, cursor=False)
         return state, RunRecord(rec.times, _as_2d(rec.energies), rec.flips)
+
+    def start_recorded(self, state, schedule, record_points: Sequence[int],
+                       sync_every: SyncSpec = 1) -> HandleCursor:
+        """Begin (not run) a recorded anneal; returns a resumable
+        :class:`HandleCursor` advanced chunk by chunk by the caller."""
+        cur = self._recorded(state, schedule, record_points, sync_every,
+                             cursor=True)
+        return HandleCursor(cur, self.replicas)
+
+    def snapshot(self, state):
+        """Host-side owned copy of an engine state (see core.snapshot)."""
+        return snapshot_state(state)
+
+    def restore(self, snap):
+        """Snapshot -> live device state, re-sharded where the engine
+        shards (lattice, dist)."""
+        st = restore_state(snap)
+        if hasattr(self.eng, "shard_state"):
+            st = self.eng.shard_state(st)
+        return st
 
     def energy(self, state) -> jnp.ndarray:
         return _as_1d(self.eng.energy(state))
@@ -104,11 +216,10 @@ class _BatchedStateHandle(_Handle):
 class _GibbsHandle(_BatchedStateHandle):
     name = "gibbs"
 
-    def run_recorded(self, state, schedule, record_points: Sequence[int],
-                     sync_every: SyncSpec = 1):
-        state, rec = self.eng.run_recorded_full(state, schedule,
-                                                record_points)
-        return state, RunRecord(rec.times, _as_2d(rec.energies), rec.flips)
+    def _recorded(self, state, schedule, record_points, sync_every, cursor):
+        # monolithic: no boundaries, so no sync_every
+        return self.eng.run_recorded_full(state, schedule, record_points,
+                                          cursor=cursor)
 
     def energy(self, state) -> jnp.ndarray:
         return _as_1d(self.eng.direct_energy(state))
@@ -135,6 +246,14 @@ class _DSIMHandle(_BatchedStateHandle):
 
 class _DistHandle(_Handle):
     name = "dsim_dist"
+    # the mesh engine derives all replica RNG streams jointly from one
+    # seed, so per-replica explicit seeding (packing) isn't available
+    supports_packing = False
+
+    def init_state_packed(self, seeds: Sequence[int]):
+        raise NotImplementedError(
+            "dsim_dist derives replica streams jointly from one seed; "
+            "replica packing needs per-replica seeding")
 
 
 class _LatticeHandle(_Handle):

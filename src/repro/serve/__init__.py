@@ -1,0 +1,20 @@
+"""Serving layer: the async multi-tenant sampling server and the LM
+token paths.
+
+- :class:`SampleServer` (server.py) — async job queue with priorities and
+  admission control, replica-packing scheduler, LRU engine pool, and
+  streaming per-chunk results.  The production sampling front door.
+- :class:`SampleService` (sample_service.py) — the synchronous one-call
+  facade, kept for scripts and as the packing benchmark baseline.
+- serve_step.py — prefill/decode steps for the LM workload family.
+"""
+
+from .jobs import Job, JobSpec, JobStatus
+from .pool import EnginePool
+from .sample_service import SampleService
+from .scheduler import Batch, ReplicaPackingScheduler
+from .server import QueueFull, SampleServer
+
+__all__ = ["SampleServer", "SampleService", "QueueFull", "EnginePool",
+           "ReplicaPackingScheduler", "Batch", "Job", "JobSpec",
+           "JobStatus"]

@@ -1,0 +1,116 @@
+"""LRU pool of compiled engine handles.
+
+Building an engine is cheap; the expensive part is the jit compile of its
+chunk runners on first use — seconds on this host, against millisecond
+anneals.  The pool keys handles by (problem fingerprint, engine, precision,
+packed replica count, engine-kwargs), so a hot problem never recompiles:
+the second request for the same key is a dict hit and runs warm.
+
+Capacity-bounded LRU: the serving layer multiplexes many problems over one
+device, and each cached handle pins compiled executables plus problem
+constants — eviction drops the coldest key (its compiled runners are
+garbage-collected; a later request simply rebuilds).
+
+Builds are per-key single-flight: a second thread asking for a key that is
+mid-build waits for the first build instead of compiling twice, and the
+pool lock is *not* held during builds, so an async prewarm never blocks
+the serving path on a compile.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Tuple
+
+__all__ = ["EnginePool"]
+
+
+class EnginePool:
+    """Capacity-bounded LRU cache of engine handles with single-flight
+    builds; see the module docstring."""
+
+    def __init__(self, capacity: int = 8):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = int(capacity)
+        self._cache: "OrderedDict[tuple, Any]" = OrderedDict()
+        self._building: Dict[tuple, threading.Event] = {}
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: tuple, builder: Callable[[], Any]) -> Tuple[Any, bool]:
+        """Return (handle, was_hit); builds via ``builder()`` on miss.
+
+        ``was_hit`` means the handle was already cached *when asked* — a
+        caller that waited on another thread's in-flight build gets False,
+        because that handle is freshly built and possibly not yet warmed
+        (callers use the flag to decide whether to warm-compile).
+        """
+        waited = False
+        while True:
+            with self._lock:
+                if key in self._cache:
+                    self._cache.move_to_end(key)
+                    self.hits += 1
+                    return self._cache[key], not waited
+                ev = self._building.get(key)
+                if ev is None:
+                    ev = threading.Event()
+                    self._building[key] = ev
+                    self.misses += 1
+                    break            # we build
+            waited = True
+            ev.wait()                # someone else is building this key
+        try:
+            handle = builder()
+        except BaseException:
+            with self._lock:
+                del self._building[key]
+            ev.set()
+            raise
+        with self._lock:
+            self._cache[key] = handle
+            self._cache.move_to_end(key)
+            while len(self._cache) > self.capacity:
+                self._cache.popitem(last=False)
+                self.evictions += 1
+            del self._building[key]
+        ev.set()
+        return handle, False
+
+    def prewarm_async(self, key: tuple, builder: Callable[[], Any],
+                      warm: Callable[[Any], None] = None) -> threading.Thread:
+        """Build (and optionally warm-compile) a key on a daemon thread —
+        cold-start work fully off the serving path.  Returns the thread;
+        a build/warm failure is stashed on it as ``thread.error`` (the key
+        just stays cold), so a joining caller can surface it."""
+        def _work():
+            try:
+                handle, hit = self.get(key, builder)
+                if warm is not None and not hit:
+                    warm(handle)
+            except Exception as e:   # noqa: BLE001 — reported via .error
+                t.error = e
+
+        t = threading.Thread(target=_work, daemon=True,
+                             name=f"engine-prewarm-{key[0]}")
+        t.error = None
+        t.start()
+        return t
+
+    def __contains__(self, key: tuple) -> bool:
+        with self._lock:
+            return key in self._cache
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._cache)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"capacity": self.capacity, "size": len(self._cache),
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions}

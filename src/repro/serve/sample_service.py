@@ -8,6 +8,11 @@ per-replica energies, the best configuration, and the exact flip count.
 ``serve_lm.py``'s token path and this sampling path are the two workload
 families the production deployment multiplexes.
 
+This is the synchronous one-call facade (and the one-job-at-a-time
+baseline in benchmarks/serve_load.py); the async multi-tenant front door —
+job queue, replica packing, engine pool, streaming — is
+:class:`repro.serve.SampleServer` (see examples/serve_sampling.py).
+
   svc = SampleService(graph=g, coloring=col)
   out = svc.submit(engine="dsim", sweeps=2048, replicas=8, seed=3)
   out["best_energy"], out["energies"], out["flips"]
@@ -56,11 +61,20 @@ class SampleService:
                schedule: Optional[Schedule] = None,
                record_points: Optional[Sequence[int]] = None,
                sync_every=1) -> dict:
-        """Run one annealing job; returns a plain-dict result payload."""
+        """Run one annealing job; returns a plain-dict result payload.
+
+        Cold submissions warm-compile the chunk runners *outside* the timed
+        region (one throwaway execution per distinct chunk length), so
+        ``flips_per_s`` always reports warm throughput — compile time never
+        bills into the capacity number.
+        """
         cold = (engine, replicas) not in self._handles
         h = self._handle(engine, replicas)
         sch = schedule if schedule is not None else ea_schedule(sweeps)
         pts = list(record_points) if record_points is not None else [sweeps]
+        if cold:
+            h.start_recorded(h.init_state(seed=seed), sch, pts,
+                             sync_every=sync_every).warm()
         t0 = time.perf_counter()
         st = h.init_state(seed=seed)
         st, rec = h.run_recorded(st, sch, pts, sync_every=sync_every)
@@ -79,8 +93,8 @@ class SampleService:
             "best_spins": spins[best],
             "flips": rec.flips,
             "wall_s": wall,
-            # cold submissions compile their chunk runners inside the timed
-            # region — size capacity from warm (cold_start=False) responses
+            # compile happens in the pre-timed warm pass, so flips_per_s is
+            # warm throughput even when cold_start is True
             "cold_start": cold,
             "flips_per_s": rec.flips / max(wall, 1e-9),
         }

@@ -1,0 +1,153 @@
+"""Replica-packing scheduler.
+
+The machine's unit of parallelism is the replica axis R: every engine runs
+R independent chains per batched call at marginal cost far below R separate
+calls (one dispatch, one compiled runner, vectorized sweeps).  The
+scheduler exploits that for multi-tenancy — compatible concurrent requests
+(equal :func:`repro.serve.jobs.pack_key`: problem, engine, precision,
+exchange period, beta staircase) coalesce into ONE batched call, each job
+owning a contiguous replica slice, so eight R=2 requests for a hot problem
+cost one R=16 anneal instead of eight dispatch+record loops.
+
+Packed batch sizes are padded up to a power of two by default: the pad
+replicas are throwaway chains (their results are sliced off), but the pool
+then serves *any* pack composition summing into the same bucket from one
+compiled handle — a 3+2 pack and a 4+1 pack both run the R=8 executable.
+
+Priorities order batch formation (strict: a batch is led by the
+highest-priority queued job, filled only with compatible jobs); FIFO
+within a priority level.  `dsim_dist` derives replica RNG streams jointly
+from one seed, so it is never packed (batches of one).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+from .jobs import Job
+
+__all__ = ["Batch", "ReplicaPackingScheduler", "PACKABLE_ENGINES",
+           "ceil_pow2"]
+
+# engines whose init_state takes per-replica seeds (see registry handles'
+# ``supports_packing``); dsim_dist seeds all replicas jointly
+PACKABLE_ENGINES = frozenset({"gibbs", "dsim", "lattice"})
+
+
+def ceil_pow2(n: int) -> int:
+    return 1 << (int(n) - 1).bit_length()
+
+
+@dataclasses.dataclass
+class Batch:
+    """One batched engine call serving len(jobs) tenants.
+
+    ``slices[i]`` is job i's [start, stop) replica range inside the packed
+    state; ``r_exec`` (>= sum of job replicas) is the executed batch width
+    after power-of-two padding.  The server attaches the live handle /
+    cursor when the batch starts.
+    """
+
+    jobs: List[Job]
+    key: tuple
+    r_exec: int
+    slices: List[Tuple[int, int]]
+    seq: int                          # min job seq (FIFO tie-break)
+    priority: int                     # max job priority
+
+    # runtime (attached by the server)
+    handle: Any = None
+    cursor: Any = None
+    pool_hit: Optional[bool] = None
+    started_at: Optional[float] = None
+    warm_s: float = 0.0
+    device_s: float = 0.0
+    points_seen: int = 0
+    own_points: Any = None            # job id -> the points THAT job gets
+
+    @property
+    def started(self) -> bool:
+        return self.cursor is not None
+
+    def relayout(self, pad_pow2: bool, cap: Optional[int] = None):
+        """Compute slices / executed width / rank over the batch's jobs
+        (called once at formation; batches never shrink — cancelled
+        tenants keep their slice and are simply not harvested).  Padding
+        never pushes the executed width past ``cap`` — near the cap the
+        batch just runs unpadded."""
+        self.slices, pos = [], 0
+        for j in self.jobs:
+            self.slices.append((pos, pos + j.spec.replicas))
+            pos += j.spec.replicas
+        self.r_exec = pos
+        if pad_pow2 and (cap is None or ceil_pow2(pos) <= cap):
+            self.r_exec = ceil_pow2(pos)
+        self.seq = min(j.seq for j in self.jobs)
+        self.priority = max(j.spec.priority for j in self.jobs)
+
+
+class ReplicaPackingScheduler:
+    """Forms batches from the queued-job set; see the module docstring."""
+
+    def __init__(self, max_replicas_per_call: int = 64, pack: bool = True,
+                 pad_pow2: bool = True):
+        if max_replicas_per_call < 1:
+            raise ValueError("max_replicas_per_call must be >= 1")
+        self.max_replicas_per_call = int(max_replicas_per_call)
+        self.pack = bool(pack)
+        self.pad_pow2 = bool(pad_pow2)
+        # counters (monotone; read via stats())
+        self.batches_formed = 0
+        self.jobs_batched = 0
+        self.jobs_packed = 0          # jobs that shared a batch with others
+
+    def r_exec_for(self, engine: str, replicas: int) -> int:
+        """Executed batch width for a pack totalling ``replicas`` chains —
+        the pool-key bucketing ``prewarm`` must agree with.  Clamped like
+        :meth:`Batch.relayout`: never padded past the per-call cap."""
+        if self.pad_pow2 and engine in PACKABLE_ENGINES \
+                and ceil_pow2(replicas) <= self.max_replicas_per_call:
+            return ceil_pow2(replicas)
+        return int(replicas)
+
+    def next_batch(self, queued: Sequence[Job]) -> Optional[Batch]:
+        """The single next batch to run, or None.
+
+        Led by the highest-priority (then oldest) queued job; greedily
+        filled with pack-compatible queued jobs in the same order while the
+        replica budget holds.  Exactly the jobs it absorbs should be
+        removed from the queue by the caller.
+        """
+        order = sorted(queued, key=lambda j: (-j.spec.priority, j.seq))
+        if not order:
+            return None
+        lead = order[0]
+        group = [lead]
+        total = lead.spec.replicas
+        if self.pack and lead.spec.engine in PACKABLE_ENGINES:
+            for j in order[1:]:
+                if j.pack_key != lead.pack_key:
+                    continue
+                if total + j.spec.replicas > self.max_replicas_per_call:
+                    continue
+                group.append(j)
+                total += j.spec.replicas
+        b = Batch(jobs=group, key=lead.pack_key, r_exec=0, slices=[],
+                  seq=0, priority=0)
+        # non-packable engines derive all replica streams from one seed, so
+        # pad replicas would perturb the tenant's chains — never pad them
+        b.relayout(self.pad_pow2 and lead.spec.engine in PACKABLE_ENGINES,
+                   cap=self.max_replicas_per_call)
+        self.batches_formed += 1
+        self.jobs_batched += len(group)
+        if len(group) > 1:
+            self.jobs_packed += len(group)
+        return b
+
+    def stats(self) -> dict:
+        return {"max_replicas_per_call": self.max_replicas_per_call,
+                "pack": self.pack, "pad_pow2": self.pad_pow2,
+                "batches_formed": self.batches_formed,
+                "jobs_batched": self.jobs_batched,
+                "jobs_packed": self.jobs_packed}

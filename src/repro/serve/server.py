@@ -1,0 +1,560 @@
+"""Async sampling server: job queue, packing scheduler, engine pool,
+streaming results.
+
+``SampleServer`` turns the engine layer into a multi-tenant service:
+
+- **submit / poll / result / cancel** — anneal requests become jobs with
+  priorities and admission control (a bounded queue rejects overload with
+  :class:`QueueFull` instead of buffering unboundedly).
+- **replica packing** — compatible concurrent jobs (same problem, engine,
+  precision, exchange period, beta staircase) coalesce into one batched
+  engine call along the replica axis R; each tenant owns a replica slice,
+  and because packed replicas are seeded per-job, a job's trajectory is
+  bitwise independent of its batch-mates.
+- **engine pool** — compiled handles live in an LRU keyed by problem
+  fingerprint (+ engine/precision/packed width), so hot problems never
+  recompile; ``prewarm`` moves cold compiles off the serving path entirely.
+- **streaming** — jobs advance through the bounded chunks of the shared
+  recording driver (``RecordedCursor``); ``poll`` returns the partial
+  energy trace, best-so-far spins, and *exact* per-job flip counts
+  mid-anneal, and the server can preempt a long batch between chunks when
+  higher-priority work arrives.
+
+Driving: ``pump()`` runs one chunk of the best batch (deterministic,
+test-friendly); ``start()`` runs the same loop on a background thread.
+
+  srv = SampleServer()
+  srv.register_problem("ea8", graph=g, coloring=col)
+  jid = srv.submit("ea8", engine="dsim", sweeps=2048, replicas=4)
+  srv.poll(jid)["sweeps_done"]      # streams while annealing
+  srv.result(jid)["best_energy"]
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.annealing import ea_schedule
+from repro.engines import make_engine
+from repro.engines.base import quantize_record_points, spawn_seeds
+
+from .jobs import Job, JobSpec, JobStatus, problem_fingerprint, \
+    schedule_fingerprint
+from .pool import EnginePool
+from .scheduler import Batch, ReplicaPackingScheduler
+
+__all__ = ["SampleServer", "QueueFull"]
+
+_FILLER_SEED = 1_000_003      # namespace for pad-replica seed spawning
+
+
+class QueueFull(RuntimeError):
+    """Admission control: the bounded job queue rejected a submission."""
+
+
+class _Problem:
+    def __init__(self, name, graph, coloring, L, seed, engine_kw):
+        self.name = name
+        self.graph = graph
+        self.coloring = coloring
+        self.L = L
+        self.seed = seed
+        self.engine_kw = dict(engine_kw)
+        self.fingerprint = problem_fingerprint(graph=graph, L=L, seed=seed)
+
+
+class SampleServer:
+    """Multi-tenant annealing server over the unified engine layer."""
+
+    def __init__(self, *, pool_capacity: int = 8, max_queue_depth: int = 128,
+                 max_replicas_per_call: int = 64, pack: bool = True,
+                 pad_pow2: bool = True, stream_chunks: int = 8,
+                 warm_compile: bool = True, retain_jobs: int = 4096):
+        self.pool = EnginePool(pool_capacity)
+        self.scheduler = ReplicaPackingScheduler(
+            max_replicas_per_call=max_replicas_per_call, pack=pack,
+            pad_pow2=pad_pow2)
+        self.max_queue_depth = int(max_queue_depth)
+        self.stream_chunks = max(int(stream_chunks), 1)
+        self.warm_compile = bool(warm_compile)
+        # terminal results are retained for the most recent `retain_jobs`
+        # jobs (bounded memory on a long-lived server); older ids 404
+        self.retain_jobs = max(int(retain_jobs), 1)
+        self._terminal_order: deque = deque()
+
+        self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)
+        self._pump_lock = threading.Lock()
+        self._problems: Dict[str, _Problem] = {}
+        self._jobs: Dict[str, Job] = {}
+        self._queue: List[Job] = []
+        self._batches: List[Batch] = []
+        self._current: Optional[Batch] = None
+        self._seq = itertools.count()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = False
+        # counters
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.cancelled = 0
+        self.rejected = 0
+        self.engine_calls = 0        # batched anneal launches (cursors built)
+        self.preemptions = 0
+
+    # -- problems --------------------------------------------------------------
+
+    def register_problem(self, name: str, *, graph=None, coloring=None,
+                         L: Optional[int] = None, seed: int = 0,
+                         **engine_kw) -> str:
+        """Register a problem instance under ``name``; returns its content
+        fingerprint (the packing/pool identity)."""
+        if (graph is None) == (L is None):
+            raise ValueError("register exactly one of graph= or L=")
+        p = _Problem(name, graph, coloring, L, seed, engine_kw)
+        with self._lock:
+            self._problems[name] = p
+        return p.fingerprint
+
+    # -- submission ------------------------------------------------------------
+
+    def submit(self, problem: str, *, engine: str = "gibbs",
+               sweeps: int = 1024, replicas: int = 1, seed: int = 0,
+               precision: str = "f32", sync_every=1,
+               record_points: Optional[Sequence[int]] = None,
+               priority: int = 0, schedule=None) -> str:
+        """Admit one annealing job; returns its job id (non-blocking)."""
+        with self._lock:
+            if problem not in self._problems:
+                raise ValueError(f"unknown problem {problem!r}")
+            prob = self._problems[problem]
+        if engine == "lattice" and prob.L is None:
+            raise ValueError("lattice engine needs an L=-registered problem")
+        if engine != "lattice" and prob.graph is None:
+            raise ValueError(f"{engine!r} engine needs a graph-registered "
+                             "problem")
+        if precision not in ("f32", "int8"):
+            raise ValueError(f"unknown precision {precision!r}")
+        if precision != "f32" and engine not in ("dsim", "lattice"):
+            raise ValueError(f"precision={precision!r} not supported on "
+                             f"{engine!r}")
+        if replicas < 1 or replicas > self.scheduler.max_replicas_per_call:
+            raise ValueError(
+                f"replicas must be in [1, "
+                f"{self.scheduler.max_replicas_per_call}]")
+        if sync_every not in ("phase", None) and int(sync_every) < 1:
+            raise ValueError(f"sync_every must be >= 1, 'phase', or None; "
+                             f"got {sync_every!r}")
+        sched = schedule if schedule is not None else ea_schedule(int(sweeps))
+        sweeps = int(sched.total_sweeps)
+        if sync_every not in ("phase", None) and int(sync_every) > sweeps:
+            raise ValueError(
+                f"sync_every={sync_every} exceeds the {sweeps}-sweep "
+                "schedule (no record point is reachable)")
+        if record_points is not None:
+            record_points = tuple(int(p) for p in record_points)
+            if any(p > sweeps for p in record_points):
+                raise ValueError("record point beyond the schedule")
+        spec = JobSpec(problem=problem, engine=engine, sweeps=sweeps,
+                       replicas=int(replicas), seed=int(seed),
+                       precision=precision, sync_every=sync_every,
+                       record_points=record_points, priority=int(priority),
+                       schedule=schedule)
+        with self._lock:
+            if len(self._queue) >= self.max_queue_depth:
+                self.rejected += 1
+                raise QueueFull(
+                    f"queue depth {len(self._queue)} at limit "
+                    f"{self.max_queue_depth}")
+            seq = next(self._seq)
+            job = Job(f"job-{seq:06d}", seq, spec, prob.fingerprint, sched,
+                      schedule_fingerprint(sched), time.perf_counter())
+            self._jobs[job.id] = job
+            self._queue.append(job)
+            self.submitted += 1
+            self._cv.notify_all()
+        return job.id
+
+    # -- queries ---------------------------------------------------------------
+
+    def _job(self, job_id: str) -> Job:
+        try:
+            return self._jobs[job_id]
+        except KeyError:
+            raise KeyError(f"unknown job {job_id!r}") from None
+
+    def poll(self, job_id: str) -> dict:
+        """Snapshot of a job (streams partial results while RUNNING)."""
+        with self._lock:
+            return self._job(job_id).poll_snapshot()
+
+    def result(self, job_id: str, timeout: Optional[float] = None) -> dict:
+        """Final payload; drives the server inline when no background
+        thread is running, else blocks.  ``timeout`` bounds the wait
+        either way (inline pumping checks the deadline between chunks).
+        If the serving thread is stopped mid-wait, the caller takes over
+        pumping instead of hanging."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._lock:
+            job = self._job(job_id)
+            threaded = self._thread is not None
+        if threaded:
+            with self._cv:
+                ok = self._cv.wait_for(
+                    lambda: job.status.terminal or self._thread is None,
+                    timeout=timeout)
+            if not ok:
+                raise TimeoutError(f"{job_id} not finished in {timeout}s")
+        while not job.status.terminal:
+            if deadline is not None and time.perf_counter() > deadline:
+                raise TimeoutError(f"{job_id} not finished in {timeout}s")
+            if not self.pump():
+                with self._lock:     # a concurrent pumper may have just
+                    if job.status.terminal:      # finished it
+                        break
+                raise RuntimeError(
+                    f"{job_id} is {job.status.value} but the server has "
+                    "no runnable work")
+        with self._lock:
+            return job.result_payload()
+
+    def cancel(self, job_id: str) -> bool:
+        """Cancel a job; queued jobs stop immediately, running jobs at the
+        next chunk boundary (partial results are kept).  False if the job
+        already reached a terminal state."""
+        with self._lock:
+            job = self._job(job_id)
+            if job.status.terminal:
+                return False
+            job.cancel_requested = True
+            if job.status is JobStatus.QUEUED and job in self._queue:
+                self._queue.remove(job)
+                self._finalize(job, JobStatus.CANCELLED)
+            return True
+
+    # -- the serving loop ------------------------------------------------------
+
+    def pump(self) -> bool:
+        """One scheduling step: pick the best batch (forming it from the
+        queue if the queue outranks every started batch) and advance it by
+        one bounded chunk.  Returns False when there is nothing to run."""
+        with self._pump_lock:
+            with self._lock:
+                batch = self._choose_batch()
+                if batch is None:
+                    return False
+            try:
+                if not batch.started:
+                    self._start_batch(batch)
+                self._advance_batch(batch)
+            except Exception as e:        # noqa: BLE001 — isolate tenants
+                self._fail_batch(batch, e)
+            return True
+
+    def drain(self):
+        """Run until every admitted job is terminal."""
+        while self.pump():
+            pass
+        return self
+
+    def start(self):
+        """Serve on a background daemon thread (submit stays non-blocking)."""
+        with self._lock:
+            if self._thread is not None:
+                return self
+            self._stop = False
+            self._thread = threading.Thread(target=self._serve_loop,
+                                            daemon=True,
+                                            name="sample-server")
+        self._thread.start()
+        return self
+
+    def stop(self):
+        with self._lock:
+            self._stop = True
+            self._cv.notify_all()
+            t, self._thread = self._thread, None
+        if t is not None:
+            t.join()
+        return self
+
+    def _serve_loop(self):
+        while True:
+            with self._lock:
+                if self._stop:
+                    return
+            if not self.pump():
+                with self._cv:
+                    if self._stop:
+                        return
+                    self._cv.wait(timeout=0.02)
+
+    # -- internals -------------------------------------------------------------
+
+    @staticmethod
+    def _rank(b: Batch):
+        return (b.priority, -b.seq)
+
+    def _choose_batch(self) -> Optional[Batch]:
+        """Under the lock: highest-(priority, FIFO) among started batches
+        and the would-be batch led by the best queued job."""
+        best_started = max(self._batches, key=self._rank, default=None)
+        lead = max(self._queue,
+                   key=lambda j: (j.spec.priority, -j.seq), default=None)
+        batch = best_started
+        if lead is not None and (
+                best_started is None or
+                (lead.spec.priority, -lead.seq) > self._rank(best_started)):
+            batch = self.scheduler.next_batch(self._queue)
+            for j in batch.jobs:
+                self._queue.remove(j)
+            self._batches.append(batch)
+        if batch is None:
+            return None
+        if (self._current is not None and self._current is not batch
+                and self._current in self._batches
+                and batch.priority > self._current.priority):
+            self.preemptions += 1     # higher-priority work parked a batch
+        self._current = batch
+        return batch
+
+    def _engine_key_builder(self, prob: _Problem, spec: JobSpec, r_exec: int):
+        key = (prob.fingerprint, spec.engine, spec.precision, r_exec,
+               tuple(sorted(prob.engine_kw.items())))
+
+        def builder():
+            kw = dict(prob.engine_kw)
+            if spec.engine == "lattice":
+                return make_engine("lattice", L=prob.L, seed=prob.seed,
+                                   replicas=r_exec,
+                                   precision=spec.precision, **kw)
+            kw.setdefault("coloring", prob.coloring)
+            if spec.engine == "dsim":
+                return make_engine("dsim", prob.graph, replicas=r_exec,
+                                   precision=spec.precision, **kw)
+            # gibbs / dsim_dist (f32-only, enforced at submit)
+            return make_engine(spec.engine, prob.graph, replicas=r_exec,
+                               **kw)
+
+        return key, builder
+
+    def _stream_points(self, sweeps: int) -> set:
+        """Stream points bound chunk sizes, so polls see fresh data and
+        preemption is never more than one stream interval away."""
+        every = max(sweeps // self.stream_chunks, 1)
+        return set(range(every, sweeps + 1, every)) | {sweeps}
+
+    def _record_points(self, spec_points, sweeps: int) -> List[int]:
+        """Union of tenant-requested points and stream points."""
+        pts = self._stream_points(sweeps)
+        for p in spec_points:
+            pts |= set(p if p is not None else (sweeps,))
+        return sorted(pts)
+
+    def _start_batch(self, batch: Batch):
+        lead = batch.jobs[0].spec
+        prob = self._problems[lead.problem]
+        key, builder = self._engine_key_builder(prob, lead, batch.r_exec)
+        handle, hit = self.pool.get(key, builder)
+        if handle.supports_packing:
+            seeds: List[int] = []
+            for j in batch.jobs:
+                seeds += spawn_seeds(j.spec.seed, j.spec.replicas)
+            pad = batch.r_exec - len(seeds)
+            if pad:
+                seeds += spawn_seeds(_FILLER_SEED + batch.seq, pad)
+            state = handle.init_state_packed(seeds)
+        else:
+            state = handle.init_state(seed=lead.seed)
+        sweeps = batch.jobs[0].total_sweeps
+        pts = self._record_points([j.spec.record_points for j in batch.jobs],
+                                  sweeps)
+        cursor = handle.start_recorded(state, batch.jobs[0].schedule, pts,
+                                       sync_every=lead.sync_every)
+        # a tenant's trace must not depend on its batch-mates: each job
+        # harvests only its own requested points plus the shared stream
+        # points, quantized with the quantum the cursor ACTUALLY applied
+        # (cursor.S — gibbs has no boundaries and records at S=1 whatever
+        # sync_every says)
+        stream = self._stream_points(sweeps)
+        batch.own_points = {
+            j.id: set(quantize_record_points(
+                sorted(stream | set(j.spec.record_points or ())), cursor.S,
+                limit=sweeps))
+            for j in batch.jobs}
+        if self.warm_compile and not hit:
+            # cold handle: compiles land before the timed region (a pool
+            # hit is already warm — re-warming would re-execute every
+            # distinct chunk length for nothing)
+            t0 = time.perf_counter()
+            cursor.warm()
+            batch.warm_s = time.perf_counter() - t0
+        batch.handle, batch.cursor, batch.pool_hit = handle, cursor, hit
+        batch.started_at = time.perf_counter()
+        with self._lock:
+            self.engine_calls += 1
+            for j in batch.jobs:
+                j.status = JobStatus.RUNNING
+                j.started_at = batch.started_at
+                j.packed_with = len(batch.jobs) - 1
+                j.pool_hit = hit
+
+    def _advance_batch(self, batch: Batch):
+        cur = batch.cursor
+        t0 = time.perf_counter()
+        cur.advance(1)
+        batch.device_s += time.perf_counter() - t0
+        if cur.points_recorded == batch.points_seen and not cur.done:
+            # mid-gap chunk (max_chunk split): nothing recorded, so skip
+            # the flip-settling host sync and trace restack — just keep
+            # progress/cancellation current
+            with self._lock:
+                alive = False
+                for j, (a, b) in zip(batch.jobs, batch.slices):
+                    if j.status is not JobStatus.RUNNING:
+                        continue
+                    j.sweeps_done = cur.sweeps_done
+                    j.device_s = batch.device_s * (b - a) / \
+                        max(batch.r_exec, 1)
+                    if j.cancel_requested:
+                        self._finalize(j, JobStatus.CANCELLED)
+                    else:
+                        alive = True
+                if not alive:
+                    if batch in self._batches:
+                        self._batches.remove(batch)
+                    if self._current is batch:
+                        self._current = None
+            return
+        t0 = time.perf_counter()
+        rec = cur.record()
+        fpr = cur.flips_per_replica()
+        batch.device_s += time.perf_counter() - t0
+        energies = np.asarray(rec.energies) if len(rec.times) else None
+        new = range(batch.points_seen, len(rec.times))
+        # spins snapshots are only consistent with a row recorded at the
+        # cursor's *current* state (chunks end on record points).  The
+        # device sync + (R, N) transfer happens OUTSIDE the server lock —
+        # job partials are only ever mutated by the (single) pump holder,
+        # so the improvement pre-check is race-free — keeping submit/poll
+        # latency independent of problem size.
+        spins_fresh = (len(rec.times) > 0
+                       and int(rec.times[-1]) == cur.sweeps_done)
+        spins = None
+        if spins_fresh:
+            last = len(rec.times) - 1
+            improved = any(
+                j.status is JobStatus.RUNNING
+                and float(energies[last, a:b].min()) < j.best_energy
+                for j, (a, b) in zip(batch.jobs, batch.slices))
+            if improved:
+                spins = np.asarray(batch.handle.global_spins(cur.state))
+        with self._lock:
+            for i in new:
+                t = int(rec.times[i])
+                want_spins = (spins is not None and i == len(rec.times) - 1)
+                for j, (a, b) in zip(batch.jobs, batch.slices):
+                    if j.status is not JobStatus.RUNNING or \
+                            t not in batch.own_points[j.id]:
+                        continue
+                    j.observe(t, energies[i, a:b],
+                              spins[a:b] if want_spins else None)
+            for j, (a, b) in zip(batch.jobs, batch.slices):
+                if j.status is not JobStatus.RUNNING:
+                    continue
+                j.flips = int(fpr[a:b].sum())
+                j.sweeps_done = cur.sweeps_done
+                # device time attributed by executed replica share (tenant
+                # shares sum to the batch total); flips_per_s is then the
+                # machine-level flip rate observed while this job ran
+                j.device_s = batch.device_s * (b - a) / max(batch.r_exec, 1)
+                if j.cancel_requested:
+                    self._finalize(j, JobStatus.CANCELLED)
+            alive = [j for j in batch.jobs
+                     if j.status is JobStatus.RUNNING]
+            batch.points_seen = len(rec.times)
+            if cur.done or not alive:
+                for j in alive:
+                    self._finalize(j, JobStatus.DONE)
+                if batch in self._batches:
+                    self._batches.remove(batch)
+                if self._current is batch:
+                    self._current = None
+
+    def _fail_batch(self, batch: Batch, err: Exception):
+        with self._lock:
+            for j in batch.jobs:
+                if not j.status.terminal:
+                    j.error = f"{type(err).__name__}: {err}"
+                    self._finalize(j, JobStatus.FAILED)
+            if batch in self._batches:
+                self._batches.remove(batch)
+            if self._current is batch:
+                self._current = None
+
+    def _finalize(self, job: Job, status: JobStatus):
+        job.status = status
+        job.finished_at = time.perf_counter()
+        if status is JobStatus.DONE:
+            self.completed += 1
+        elif status is JobStatus.FAILED:
+            self.failed += 1
+        else:
+            self.cancelled += 1
+        self._terminal_order.append(job.id)
+        while len(self._terminal_order) > self.retain_jobs:
+            self._jobs.pop(self._terminal_order.popleft(), None)
+        self._cv.notify_all()
+
+    # -- warmup / stats --------------------------------------------------------
+
+    def prewarm(self, problem: str, *, engine: str = "gibbs",
+                replicas: int = 1, precision: str = "f32", sweeps: int = 1024,
+                sync_every=1, schedule=None,
+                wait: bool = False) -> threading.Thread:
+        """Build + warm-compile the engine a future submit will need, on a
+        daemon thread — the cold compile never touches the serving path.
+        ``replicas`` is bucketed exactly like the scheduler would."""
+        with self._lock:
+            prob = self._problems[problem]
+        spec = JobSpec(problem=problem, engine=engine, sweeps=int(sweeps),
+                       replicas=int(replicas), precision=precision,
+                       sync_every=sync_every, schedule=schedule)
+        r_exec = self.scheduler.r_exec_for(engine, replicas)
+        key, builder = self._engine_key_builder(prob, spec, r_exec)
+        sched = schedule if schedule is not None else ea_schedule(int(sweeps))
+        pts = self._record_points([None], int(sched.total_sweeps))
+
+        def warm(handle):
+            st = handle.init_state(seed=0)
+            handle.start_recorded(st, sched, pts,
+                                  sync_every=sync_every).warm()
+
+        t = self.pool.prewarm_async(key, builder, warm)
+        if wait:
+            t.join()
+            if t.error is not None:  # surface what a fire-and-forget hides
+                raise t.error
+        return t
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "failed": self.failed,
+                "cancelled": self.cancelled,
+                "rejected": self.rejected,
+                "engine_calls": self.engine_calls,
+                "preemptions": self.preemptions,
+                "queue_depth": len(self._queue),
+                "inflight_batches": len(self._batches),
+                "pool": self.pool.stats(),
+                "scheduler": self.scheduler.stats(),
+            }

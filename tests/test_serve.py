@@ -1,0 +1,438 @@
+"""Sampling server subsystem: queue lifecycle, replica packing, engine
+pool, streaming, preemption, cancellation, admission control."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.coloring import lattice3d_coloring
+from repro.core.graph import ea3d
+from repro.serve import EnginePool, QueueFull, SampleServer
+from repro.serve.jobs import problem_fingerprint, schedule_fingerprint
+from repro.core.annealing import constant_schedule, ea_schedule
+
+L_A, L_B = 5, 6
+SW = 64
+
+
+@pytest.fixture(scope="module")
+def problems():
+    return {
+        "pa": (ea3d(L_A, seed=1), lattice3d_coloring(L_A)),
+        "pb": (ea3d(L_B, seed=2), lattice3d_coloring(L_B)),
+    }
+
+
+def _server(problems, **kw):
+    srv = SampleServer(**kw)
+    for name, (g, col) in problems.items():
+        srv.register_problem(name, graph=g, coloring=col, rng="lfsr")
+    srv.register_problem("lat", L=L_B, seed=3)
+    return srv
+
+
+def _check_payload(r, g_n, replicas):
+    assert r["status"] == "done"
+    e = r["energies"]
+    assert e.ndim == 2 and e.shape[1] == replicas and len(e) >= 1
+    assert np.isfinite(e).all()
+    assert r["best_energy"] == pytest.approx(float(e.min()))
+    assert r["best_spins"] is not None and r["best_spins"].shape == (g_n,)
+    assert set(np.unique(r["best_spins"])) <= {-1, 1}
+    assert r["flips"] > 0 and r["wall_s"] >= 0 and r["device_s"] > 0
+    assert r["sweeps_done"] == r["total_sweeps"]
+
+
+# -- the acceptance workload: concurrent mixed jobs, packing observable -------
+
+def test_mixed_concurrent_workload_packs(problems):
+    """>= 8 in-flight jobs across 2 problems and 2 engines: all complete,
+    payloads validate, and compatible requests shared engine calls."""
+    srv = _server(problems, max_replicas_per_call=16)
+    ids = []
+    for k in range(4):
+        ids.append(srv.submit("pa", engine="gibbs", sweeps=SW, replicas=2,
+                              seed=k))
+    for k in range(2):
+        ids.append(srv.submit("pb", engine="gibbs", sweeps=SW, replicas=2,
+                              seed=k))
+    for k in range(2):
+        ids.append(srv.submit("pa", engine="dsim", sweeps=SW, replicas=2,
+                              seed=k, sync_every=4))
+    assert srv.stats()["queue_depth"] == 8          # all in flight
+    srv.drain()
+    for jid, name in zip(ids, ["pa"] * 4 + ["pb"] * 2 + ["pa"] * 2):
+        _check_payload(srv.result(jid), problems[name][0].n, 2)
+    s = srv.stats()
+    assert s["completed"] == 8
+    # the packing claim: batched engine calls < submitted jobs
+    assert s["engine_calls"] == 3 < s["submitted"]
+    assert s["scheduler"]["jobs_packed"] == 8
+
+
+def test_packed_job_bitwise_equals_solo(problems):
+    """A tenant's trajectory is independent of its batch-mates: the same
+    job packed with strangers reproduces its solo run bitwise."""
+    packed = _server(problems, max_replicas_per_call=16)
+    ids = [packed.submit("pa", engine="gibbs", sweeps=SW, replicas=2,
+                         seed=s) for s in (9, 10, 11)]
+    packed.drain()
+    assert packed.stats()["engine_calls"] == 1
+    solo = _server(problems, pack=False)
+    sid = solo.submit("pa", engine="gibbs", sweeps=SW, replicas=2, seed=9)
+    solo.drain()
+    rp, rs = packed.result(ids[0]), solo.result(sid)
+    assert np.array_equal(rp["energies"], rs["energies"])
+    assert np.array_equal(rp["best_spins"], rs["best_spins"])
+    assert rp["flips"] == rs["flips"]
+
+
+def test_packed_trace_isolated_from_batch_mates(problems):
+    """A tenant only gets its own record points: packing with a mate that
+    requested different points must not change the tenant's trace."""
+    packed = _server(problems, max_replicas_per_call=16)
+    a = packed.submit("pa", engine="gibbs", sweeps=SW, replicas=2, seed=9,
+                      record_points=[SW // 2, SW])
+    packed.submit("pa", engine="gibbs", sweeps=SW, replicas=2, seed=10,
+                  record_points=[SW // 4])
+    packed.drain()
+    assert packed.stats()["engine_calls"] == 1
+    solo = _server(problems, pack=False)
+    s = solo.submit("pa", engine="gibbs", sweeps=SW, replicas=2, seed=9,
+                    record_points=[SW // 2, SW])
+    solo.drain()
+    rp, rs = packed.result(a), solo.result(s)
+    assert np.array_equal(rp["times"], rs["times"])
+    assert np.array_equal(rp["energies"], rs["energies"])
+
+
+def test_pow2_padding_respects_replica_cap(problems):
+    """Padding never pushes the executed width past max_replicas_per_call
+    (the cap is sized to the device, e.g. memory)."""
+    srv = _server(problems, max_replicas_per_call=12)
+    for s in range(6):
+        srv.submit("pa", engine="gibbs", sweeps=SW, replicas=2, seed=s)
+    assert srv.pump()                        # forms + starts the batch
+    batches = srv._batches
+    assert len(batches) == 1 and batches[0].r_exec == 12  # not padded to 16
+    srv.drain()
+    assert srv.stats()["completed"] == 6
+
+
+def test_terminal_jobs_evicted_beyond_retention(problems):
+    srv = _server(problems, retain_jobs=2)
+    ids = [srv.submit("pa", engine="gibbs", sweeps=SW, seed=s)
+           for s in range(3)]
+    srv.drain()
+    assert srv.result(ids[-1])["status"] == "done"
+    with pytest.raises(KeyError):
+        srv.poll(ids[0])                     # oldest terminal job evicted
+
+
+def test_sync_every_validated_at_submit(problems):
+    srv = _server(problems)
+    with pytest.raises(ValueError, match="sync_every"):
+        srv.submit("pa", engine="dsim", sweeps=SW, sync_every=0)
+    with pytest.raises(ValueError, match="sync_every"):
+        srv.submit("pa", engine="dsim", sweeps=4, sync_every=8)
+
+
+def test_prewarm_wait_surfaces_build_errors(problems):
+    srv = SampleServer()
+    g, col = problems["pa"]
+    srv.register_problem("bad", graph=g, coloring=col, rng="not-an-rng")
+    with pytest.raises(ValueError):
+        srv.prewarm("bad", engine="gibbs", replicas=2, sweeps=SW, wait=True)
+
+
+def test_lattice_packs_through_server(problems):
+    srv = _server(problems, max_replicas_per_call=8)
+    ids = [srv.submit("lat", engine="lattice", sweeps=SW, replicas=2,
+                      seed=s, sync_every=4) for s in range(3)]
+    srv.drain()
+    n = L_B ** 3
+    for jid in ids:
+        _check_payload(srv.result(jid), n, 2)
+    assert srv.stats()["engine_calls"] == 1
+
+
+# -- streaming / preemption / cancel ------------------------------------------
+
+def test_streaming_partial_results(problems):
+    srv = _server(problems, stream_chunks=8)
+    jid = srv.submit("pa", engine="gibbs", sweeps=512, replicas=2, seed=0)
+    srv.pump(); srv.pump()
+    p = srv.poll(jid)
+    assert p["status"] == "running"
+    assert 0 < p["sweeps_done"] < 512
+    assert len(p["times"]) >= 1 and p["times"][-1] <= p["sweeps_done"]
+    assert p["energies"].shape == (len(p["times"]), 2)
+    assert p["flips"] > 0                    # exact mid-anneal flip count
+    assert p["best_spins"] is not None       # best-so-far configuration
+    before = p["sweeps_done"]
+    srv.drain()
+    r = srv.result(jid)
+    assert r["status"] == "done" and r["sweeps_done"] == 512
+    assert r["flips"] > p["flips"] and before < r["sweeps_done"]
+
+
+def test_priority_preempts_running_batch(problems):
+    srv = _server(problems)
+    lo = srv.submit("pa", engine="gibbs", sweeps=1024, replicas=1, seed=1)
+    srv.pump()                               # lo is mid-anneal
+    hi = srv.submit("pa", engine="gibbs", sweeps=SW, replicas=1, seed=2,
+                    priority=5)
+    while srv.poll(hi)["status"] != "done":
+        assert srv.pump()
+    assert srv.poll(lo)["status"] == "running"   # parked, not lost
+    assert srv.stats()["preemptions"] >= 1
+    srv.drain()
+    assert srv.poll(lo)["status"] == "done"
+
+
+def test_cancel_queued_and_running(problems):
+    srv = _server(problems)
+    q = srv.submit("pa", engine="gibbs", sweeps=SW)
+    assert srv.cancel(q) and srv.poll(q)["status"] == "cancelled"
+    assert not srv.cancel(q)                 # already terminal
+    run = srv.submit("pa", engine="gibbs", sweeps=512, seed=3)
+    mate = srv.submit("pa", engine="gibbs", sweeps=512, seed=4)
+    srv.pump()
+    assert srv.cancel(run)
+    srv.drain()
+    r = srv.result(run)
+    assert r["status"] == "cancelled" and 0 < r["sweeps_done"] < 512
+    _check_payload(srv.result(mate), ea3d(L_A, seed=1).n, 1)  # unharmed
+    assert srv.stats()["cancelled"] == 2
+
+
+# -- admission control / validation -------------------------------------------
+
+def test_admission_control(problems):
+    srv = _server(problems, max_queue_depth=2)
+    srv.submit("pa", sweeps=SW)
+    srv.submit("pa", sweeps=SW)
+    with pytest.raises(QueueFull):
+        srv.submit("pa", sweeps=SW)
+    assert srv.stats()["rejected"] == 1
+    srv.drain()                              # draining reopens admission
+    srv.submit("pa", sweeps=SW)
+    srv.drain()
+
+
+def test_submit_validation(problems):
+    srv = _server(problems, max_replicas_per_call=4)
+    with pytest.raises(ValueError):
+        srv.submit("nope", sweeps=SW)
+    with pytest.raises(ValueError):
+        srv.submit("pa", engine="lattice", sweeps=SW)     # graph problem
+    with pytest.raises(ValueError):
+        srv.submit("lat", engine="gibbs", sweeps=SW)      # lattice problem
+    with pytest.raises(ValueError):
+        srv.submit("pa", engine="gibbs", precision="int8", sweeps=SW)
+    with pytest.raises(ValueError):
+        srv.submit("pa", replicas=5, sweeps=SW)           # > max per call
+    with pytest.raises(ValueError):
+        srv.submit("pa", sweeps=SW, record_points=[SW + 1])
+    with pytest.raises(KeyError):
+        srv.poll("job-999999")
+
+
+def test_gibbs_sync_every_keeps_all_points(problems):
+    """Gibbs has no boundaries, so its cursor records at S=1 whatever
+    sync_every says — the harvest filter must use the cursor's actual
+    quantum or requested points silently vanish."""
+    srv = _server(problems)
+    jid = srv.submit("pa", engine="gibbs", sweeps=SW, sync_every=4,
+                     record_points=[13, SW // 2, SW])
+    srv.drain()
+    r = srv.result(jid)
+    assert {13, SW // 2, SW} <= set(r["times"].tolist())
+    assert r["energies"].shape[0] == len(r["times"])
+
+
+def test_dsim_points_quantized_to_exchange_period(problems):
+    srv = _server(problems)
+    jid = srv.submit("pa", engine="dsim", sweeps=SW, sync_every=4,
+                     record_points=[14])
+    srv.drain()
+    times = set(srv.result(jid)["times"].tolist())
+    assert 16 in times                       # 14 snapped to a boundary
+    assert all(t % 4 == 0 for t in times)
+    assert {8, 16, 24, 32, 40, 48, 56, 64} <= times   # stream points intact
+
+
+def test_awkward_sync_period_near_schedule_end(problems):
+    """sweeps not a multiple of sync_every: stream points that round past
+    the schedule clamp to the last reachable boundary instead of failing
+    the whole batch."""
+    srv = _server(problems)
+    jid = srv.submit("pa", engine="dsim", sweeps=SW, sync_every=7)
+    srv.drain()
+    r = srv.result(jid)
+    assert r["status"] == "done"
+    assert len(r["times"]) >= 1 and r["times"][-1] == (SW // 7) * 7
+
+
+def test_result_timeout_honored_inline(problems):
+    srv = _server(problems)           # no background thread
+    jid = srv.submit("pa", sweeps=SW)
+    with pytest.raises(TimeoutError):
+        srv.result(jid, timeout=0.0)
+    assert srv.result(jid)["status"] == "done"
+
+
+def test_incompatible_schedules_do_not_pack(problems):
+    """Same problem/engine but different staircases -> separate batches."""
+    srv = _server(problems)
+    a = srv.submit("pa", engine="gibbs", sweeps=SW,
+                   schedule=ea_schedule(SW))
+    b = srv.submit("pa", engine="gibbs", sweeps=SW,
+                   schedule=constant_schedule(2.0, SW))
+    srv.drain()
+    assert srv.stats()["engine_calls"] == 2
+    assert srv.result(a)["status"] == srv.result(b)["status"] == "done"
+
+
+# -- engine pool ---------------------------------------------------------------
+
+def test_pool_lru_hit_and_evict(problems):
+    srv = _server(problems, pool_capacity=1)
+    srv.submit("pa", engine="gibbs", sweeps=SW); srv.drain()
+    srv.submit("pb", engine="gibbs", sweeps=SW); srv.drain()  # evicts pa
+    srv.submit("pb", engine="gibbs", sweeps=SW); srv.drain()  # hit
+    s = srv.stats()["pool"]
+    assert s["size"] == 1 and s["evictions"] >= 1 and s["hits"] >= 1
+    # hit/miss is reported on the job payload as cold_start
+    jid = srv.submit("pb", engine="gibbs", sweeps=SW); srv.drain()
+    assert srv.result(jid)["cold_start"] is False
+
+
+def test_pool_single_flight_builds():
+    pool = EnginePool(capacity=4)
+    built = []
+
+    def builder():
+        built.append(1)
+        return object()
+
+    outs = []
+    ts = [threading.Thread(
+        target=lambda: outs.append(pool.get(("k",), builder)))
+        for _ in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert len(built) == 1                   # concurrent gets build once
+    assert len({id(h) for h, _ in outs}) == 1
+    assert pool.stats()["hits"] == 3 and pool.stats()["misses"] == 1
+
+
+def test_pool_waiter_on_inflight_build_not_a_hit():
+    """A caller that waited on another thread's build gets was_hit=False:
+    that handle is freshly built and possibly unwarmed."""
+    import time as _time
+    pool = EnginePool(capacity=4)
+    gate = threading.Event()
+
+    def slow_builder():
+        gate.wait(10)
+        return object()
+
+    t1 = threading.Thread(target=lambda: pool.get(("k",), slow_builder))
+    t1.start()
+    _time.sleep(0.05)                        # t1 is mid-build
+    out = {}
+    t2 = threading.Thread(
+        target=lambda: out.update(r=pool.get(("k",), slow_builder)))
+    t2.start()
+    _time.sleep(0.05)
+    gate.set()
+    t1.join()
+    t2.join()
+    assert out["r"][1] is False              # waited -> not a warm hit
+    _, hit = pool.get(("k",), slow_builder)  # genuinely cached now
+    assert hit is True
+
+
+def test_prewarm_moves_compile_off_path(problems):
+    srv = _server(problems)
+    srv.prewarm("pa", engine="gibbs", replicas=2, sweeps=SW, wait=True)
+    jid = srv.submit("pa", engine="gibbs", sweeps=SW, replicas=2)
+    srv.drain()
+    r = srv.result(jid)
+    assert r["pool_hit"] is True and r["cold_start"] is False
+    assert srv.stats()["pool"]["hits"] >= 1
+
+
+# -- background serving thread -------------------------------------------------
+
+def test_threaded_serving_concurrent_submitters(problems):
+    """Submissions race in from several threads while the serving loop
+    runs; everything completes and validates (the CI smoke contract)."""
+    srv = _server(problems).start()
+    ids, errs = [], []
+    lock = threading.Lock()
+
+    def client(k):
+        try:
+            eng = ("gibbs", "dsim")[k % 2]
+            jid = srv.submit("pa", engine=eng, sweeps=SW, replicas=2,
+                             seed=k, sync_every=4 if eng == "dsim" else 1)
+            r = srv.result(jid, timeout=300)
+            with lock:
+                ids.append((jid, r))
+        except Exception as e:               # noqa: BLE001
+            with lock:
+                errs.append(e)
+
+    ts = [threading.Thread(target=client, args=(k,)) for k in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    srv.stop()
+    assert not errs
+    assert len(ids) == 8
+    g_n = ea3d(L_A, seed=1).n
+    for _, r in ids:
+        _check_payload(r, g_n, 2)
+    assert srv.stats()["completed"] == 8
+
+
+def test_result_after_stop_falls_back_inline(problems):
+    srv = _server(problems).start()
+    srv.stop()
+    jid = srv.submit("pa", sweeps=SW)
+    assert srv.result(jid, timeout=120)["status"] == "done"
+
+
+def test_result_survives_stop_mid_wait(problems):
+    """A waiter must not hang when the serving thread is stopped under
+    it — it takes over pumping instead."""
+    srv = _server(problems).start()
+    jid = srv.submit("pa", sweeps=256, replicas=1)
+    out = {}
+    t = threading.Thread(
+        target=lambda: out.update(r=srv.result(jid, timeout=120)))
+    t.start()
+    srv.stop()
+    t.join(timeout=120)
+    assert not t.is_alive()
+    assert out["r"]["status"] == "done"
+
+
+# -- fingerprints --------------------------------------------------------------
+
+def test_fingerprints_discriminate(problems):
+    (ga, _), (gb, _) = problems["pa"], problems["pb"]
+    assert problem_fingerprint(graph=ga) == problem_fingerprint(graph=ga)
+    assert problem_fingerprint(graph=ga) != problem_fingerprint(graph=gb)
+    assert problem_fingerprint(L=8, seed=0) != problem_fingerprint(L=8,
+                                                                   seed=1)
+    assert schedule_fingerprint(ea_schedule(SW)) == \
+        schedule_fingerprint(ea_schedule(SW))
+    assert schedule_fingerprint(ea_schedule(SW)) != \
+        schedule_fingerprint(constant_schedule(1.0, SW))

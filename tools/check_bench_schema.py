@@ -1,10 +1,15 @@
-"""CI gate for BENCH_flip_rate.json: required keys present, numbers finite.
+"""CI gate for BENCH_* records: required keys present, numbers finite.
 
 A benchmark that silently drops a key (or records NaN/inf/zero because a
 path crashed and a default leaked through) looks exactly like a benchmark
 that ran — this check turns schema regressions into a red CI step.
 
-  python tools/check_bench_schema.py [BENCH_flip_rate.json]
+Covers BENCH_flip_rate.json (kernel/engine throughput record, the default)
+and BENCH_serve_load.json (serving-layer load benchmark); the serve-load
+schema is selected by the payload's ``"bench": "serve_load"`` tag or a
+``serve_load`` filename.
+
+  python tools/check_bench_schema.py [BENCH_flip_rate.json|BENCH_serve_load.json]
 """
 
 from __future__ import annotations
@@ -81,6 +86,56 @@ def check(payload: dict) -> list:
     return errors
 
 
+SERVE_WAVE_NUMBERS = ("throughput_jobs_per_s", "p50_ms", "p95_ms", "p99_ms",
+                      "flips_total", "elapsed_s")
+SERVE_REQUIRED = ("bench", "mode", "host", "workload", "loads",
+                  "speedup_packed_vs_baseline_best", "packing_observed")
+
+
+def check_serve_load(payload: dict) -> list:
+    """BENCH_serve_load.json: every load entry carries packed + baseline
+    waves with finite latency percentiles and throughput, engine-call
+    counts consistent with job counts, and the packing evidence bit."""
+    errors = []
+    for k in SERVE_REQUIRED:
+        if k not in payload:
+            errors.append(f"missing key: {k}")
+    _finite_positive("speedup_packed_vs_baseline_best",
+                     payload.get("speedup_packed_vs_baseline_best"), errors)
+    loads = payload.get("loads")
+    if not isinstance(loads, list) or not loads:
+        errors.append(f"loads: expected a non-empty list, got {loads!r}")
+        return errors
+    for i, entry in enumerate(loads):
+        if not isinstance(entry, dict):
+            errors.append(f"loads[{i}]: expected a dict, got {entry!r}")
+            continue
+        _finite_positive(f"loads[{i}].speedup_packed_vs_baseline",
+                         entry.get("speedup_packed_vs_baseline"), errors)
+        for mode in ("packed", "baseline"):
+            wave = entry.get(mode)
+            if not isinstance(wave, dict):
+                errors.append(f"loads[{i}].{mode}: expected a wave dict, "
+                              f"got {wave!r}")
+                continue
+            for f in SERVE_WAVE_NUMBERS:
+                _finite_positive(f"loads[{i}].{mode}.{f}", wave.get(f),
+                                 errors)
+            jobs, calls = wave.get("jobs"), wave.get("engine_calls")
+            _finite_positive(f"loads[{i}].{mode}.jobs", jobs, errors)
+            _finite_positive(f"loads[{i}].{mode}.engine_calls", calls,
+                             errors)
+            if isinstance(jobs, int) and isinstance(calls, int) \
+                    and calls > jobs:
+                errors.append(f"loads[{i}].{mode}: engine_calls {calls} > "
+                              f"jobs {jobs}")
+    if payload.get("packing_observed") is not True:
+        errors.append("packing_observed: scheduler never batched "
+                      "compatible jobs (expected engine_calls < jobs "
+                      "under burst load)")
+    return errors
+
+
 def main(argv) -> int:
     path = argv[1] if len(argv) > 1 else "BENCH_flip_rate.json"
     try:
@@ -89,13 +144,15 @@ def main(argv) -> int:
     except (OSError, json.JSONDecodeError) as e:
         print(f"FAIL: cannot read {path}: {e}")
         return 1
-    errors = check(payload)
+    serve = payload.get("bench") == "serve_load" or "serve_load" in path
+    errors = check_serve_load(payload) if serve else check(payload)
     if errors:
         print(f"FAIL: {path} schema regressions:")
         for e in errors:
             print(f"  - {e}")
         return 1
-    print(f"OK: {path} — {len(REQUIRED_KEYS)} required keys present, "
+    which = "serve_load" if serve else "flip_rate"
+    print(f"OK: {path} — {which} schema: required keys present, "
           "all numbers finite and positive")
     return 0
 

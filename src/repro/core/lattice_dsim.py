@@ -32,50 +32,68 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .annealing import ArraySchedule, beta_row_indices, beta_table
 from .lattice import LatticeProblem
-from .packing import pack_pm1, unpack_pm1, pad_to_multiple
-from .pbit import (FixedPoint, LUT_SELECT_MAX_WIDTH, field_bound, lfsr_init,
-                   quantize_couplings, threshold_lut_cached)
+from .packing import (LANE_WIDTH, pack_lanes, pack_pm1, unpack_lanes,
+                      unpack_pm1, pad_to_multiple)
+from .pbit import (FixedPoint, LUT_SELECT_MAX_WIDTH, bitplane_planes,
+                   field_bound, lfsr_init, quantize_couplings,
+                   threshold_lut_cached)
 from repro.compat import shard_map
 from repro.engines.base import (RecordedCursor, run_recorded_driver,
                                 spawn_seeds)
 from repro.kernels.ops import (pbit_update_op, pbit_sweep_op,
                                pbit_update_int_op, pbit_sweep_int_op,
-                               brick_energy_op)
+                               pbit_bitplane_sweep_op, brick_energy_op)
 
-__all__ = ["LatticeDSIM", "LatticeState", "fused_working_set_bytes",
-           "fused_brick_ceiling"]
+__all__ = ["LatticeDSIM", "LatticeState", "BitplaneLatticeState",
+           "fused_working_set_bytes", "fused_brick_ceiling"]
 
 # Per-site VMEM bytes of the single-block fused kernel (DESIGN.md
 # "VMEM working-set math"): f32 path = 7 f32 coupling arrays + in/out spins
 # (int8) + in/out LFSR (u32) + n_colors parity masks; int8 path = the same
-# with the couplings at 1 B/site.  Halo planes and the threshold LUT are
+# with the couplings at 1 B/site.  The bitplane path packs 32 replica lanes
+# per uint32 word: in/out spin words (8 B/site for ALL lanes), in/out
+# per-lane LFSR columns (8 B/site/lane), 12 sign/nonzero planes + base
+# (52 B/site) and uint32 color masks (4 B/site each) — per *lane* it is the
+# densest layout of the three.  Halo planes and the threshold LUT are
 # O(B^(2/3)) / O(1) and added separately.
 _PER_SITE_BYTES = {"f32": 38, "int8": 17}
 _LUT_ROWS_NOMINAL = 32          # staircase entries assumed for init-time sizing
 DEFAULT_VMEM_BUDGET = 16 << 20  # 16 MiB/core, the TPU VMEM working budget
 
 
+def _per_site_bytes(precision: str, n_colors: int,
+                    lanes: int = LANE_WIDTH) -> int:
+    if precision == "bitplane":
+        return 60 + 4 * n_colors + 8 * lanes
+    return _PER_SITE_BYTES[precision] + n_colors
+
+
 def fused_working_set_bytes(brick: Tuple[int, int, int], n_colors: int,
                             precision: str = "f32",
-                            lut_width: Optional[int] = None) -> int:
-    """VMEM bytes the single-block fused sweep kernel needs for one brick."""
+                            lut_width: Optional[int] = None,
+                            lanes: int = LANE_WIDTH) -> int:
+    """VMEM bytes the single-block fused sweep kernel needs for one brick.
+
+    ``lanes`` only matters on the bitplane path (per-lane LFSR columns)."""
     bx, by, bz = brick
     sites = bx * by * bz
-    per_site = _PER_SITE_BYTES[precision] + n_colors
-    halo = 2 * (by * bz + bx * bz + bx * by)       # 6 int8 halo planes
+    per_site = _per_site_bytes(precision, n_colors, lanes)
+    halo_unit = 4 if precision == "bitplane" else 1   # word vs int8 planes
+    halo = 2 * halo_unit * (by * bz + bx * bz + bx * by)
     lut = 0
-    if precision == "int8":
+    if precision in ("int8", "bitplane"):
         lut = 4 * _LUT_ROWS_NOMINAL * (lut_width if lut_width else 1)
     return per_site * sites + halo + lut
 
 
 def fused_brick_ceiling(n_colors: int, precision: str = "f32",
-                        budget: int = DEFAULT_VMEM_BUDGET) -> int:
+                        budget: int = DEFAULT_VMEM_BUDGET,
+                        lanes: int = LANE_WIDTH) -> int:
     """Largest cubic brick extent whose fused working set fits ``budget``."""
-    per_site = _PER_SITE_BYTES[precision] + n_colors
+    per_site = _per_site_bytes(precision, n_colors, lanes)
     side = int(round((budget / per_site) ** (1.0 / 3.0)))
     while fused_working_set_bytes((side, side, side), n_colors,
-                                  precision) > budget:
+                                  precision, lanes=lanes) > budget:
         side -= 1
     return side
 
@@ -93,6 +111,26 @@ class LatticeState:
     @property
     def replicas(self) -> int:
         return int(self.m.shape[0])
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BitplaneLatticeState:
+    """Multi-spin-coded state: replicas live in the bit lanes of ``m``.
+
+    Bit r of a spin word is replica lane r's spin (1 = +1); only the LFSR
+    columns and flip odometers keep an explicit replica axis — each lane
+    owns its own RNG stream (the lane-independence contract)."""
+
+    m: jnp.ndarray        # (X, Y, Z) uint32 spin words, bit r = lane r
+    s: jnp.ndarray        # (R, X, Y, Z) uint32 per-lane LFSR states
+    halos: tuple          # 6 packed word halo planes (see _halo_shapes)
+    sweep: jnp.ndarray    # scalar int32
+    flips: jnp.ndarray    # (R,) int32 per-lane modular odometers
+
+    @property
+    def replicas(self) -> int:
+        return int(self.s.shape[0])
 
 
 class LatticeDSIM:
@@ -122,7 +160,7 @@ class LatticeDSIM:
                  fused: bool = True, replicas: int = 1,
                  precision: str = "f32",
                  vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET):
-        if precision not in ("f32", "int8"):
+        if precision not in ("f32", "int8", "bitplane"):
             raise ValueError(f"unknown precision {precision!r}")
         self.p = prob
         self.mesh = mesh
@@ -136,30 +174,50 @@ class LatticeDSIM:
         self.replicas = int(replicas)
         if self.replicas < 1:
             raise ValueError("replicas must be >= 1")
+        if precision == "bitplane":
+            if self.replicas > LANE_WIDTH:
+                raise ValueError(
+                    f"precision='bitplane' packs replicas into the "
+                    f"{LANE_WIDTH} bit lanes of one uint32 word; replicas "
+                    f"must be in [1, {LANE_WIDTH}], got {self.replicas}")
+            if kernel_bx is not None:
+                raise ValueError("kernel_bx (per-phase x-tiling) is not "
+                                 "available on the bitplane path")
         self.n_sites = prob.n_active
         X, Y, Z = prob.dims
-        if precision == "int8":
+        if precision in ("int8", "bitplane"):
             self.h_q, self.w6_q, self.q_scale = quantize_couplings(prob.h,
                                                                    prob.w6)
             self.f_max = field_bound(self.h_q, self.w6_q)
             # Mosaic cannot gather per element from VMEM: the Pallas int
             # kernels rely on lut_accept's rank-count form, which caps the
-            # row width.  Fail at init with a clear message, not at first
-            # lowering.
+            # row width.  The bitplane path uses the rank count on EVERY
+            # impl (the word math has no per-lane gather form at all).
+            # Fail at init with a clear message, not at first lowering.
             from repro.kernels.ops import default_impl
             resolved = impl if impl != "auto" else default_impl()
-            if resolved == "pallas" and \
+            if (resolved == "pallas" or precision == "bitplane") and \
                     2 * self.f_max + 1 > LUT_SELECT_MAX_WIDTH:
                 raise ValueError(
-                    f"precision='int8' with impl='pallas' needs a threshold "
-                    f"LUT row of <= {LUT_SELECT_MAX_WIDTH} entries "
-                    f"(gather-free rank-count accept); this problem "
-                    f"quantizes to f_max={self.f_max} "
-                    f"(width {2 * self.f_max + 1}).  Use impl='ref' or "
-                    f"coarser couplings.")
+                    f"precision={precision!r} needs a threshold LUT row of "
+                    f"<= {LUT_SELECT_MAX_WIDTH} entries (gather-free "
+                    f"rank-count accept); this problem quantizes to "
+                    f"f_max={self.f_max} (width {2 * self.f_max + 1}).  "
+                    f"Use impl='ref' with precision='int8' or coarser "
+                    f"couplings.")
         else:
             self.h_q = self.w6_q = None
             self.q_scale, self.f_max = 1.0, 0
+        if precision == "bitplane":
+            # sign-plane quantization (validates couplings land on +-1/0)
+            # + lane-masked uint32 color masks: lanes >= R never update
+            self.signs6_w, self.nz6_w, self.base_w, _ = bitplane_planes(
+                self.h_q, self.w6_q)
+            self.lane_mask = (1 << self.replicas) - 1 if \
+                self.replicas < LANE_WIDTH else 0xFFFFFFFF
+            self.masks_w = jnp.asarray(
+                np.where(np.asarray(prob.masks) != 0, self.lane_mask, 0)
+                .astype(np.uint32))
         self._lut_cache = {}
         self.nb = tuple(1 if a is None else mesh.shape[a] for a in dim_axes)
         for d, (ext, k) in enumerate(zip(prob.dims, self.nb)):
@@ -168,42 +226,69 @@ class LatticeDSIM:
         self.brick = tuple(e // k for e, k in zip(prob.dims, self.nb))
         # fused-vs-per-phase decision (DESIGN.md "VMEM working-set math"):
         # x-tiling forces per-phase; so does a brick working set beyond the
-        # VMEM budget — the fallback is no longer silent.
+        # VMEM budget — the fallback is no longer silent.  The bitplane
+        # path has exactly one dispatch (the single-block word kernel), so
+        # an over-budget brick warns but cannot fall back.
         self.fused_requested = bool(fused)
         self.fused_working_set = fused_working_set_bytes(
             self.brick, prob.n_colors, precision,
-            lut_width=2 * self.f_max + 1)
+            lut_width=2 * self.f_max + 1, lanes=self.replicas)
         self.fallback_reason = None
         fused = bool(fused)
-        if fused and kernel_bx is not None:
-            fused, self.fallback_reason = False, "kernel_bx"
-        if fused and self.fused_working_set > self.vmem_budget_bytes:
-            ceiling = fused_brick_ceiling(prob.n_colors, precision,
-                                          self.vmem_budget_bytes)
-            fused, self.fallback_reason = False, "vmem"
-            warnings.warn(
-                f"lattice fused sweep kernel needs "
-                f"{self.fused_working_set:,} B of VMEM for brick "
-                f"{self.brick} ({precision}, {prob.n_colors} colors) — over "
-                f"the {self.vmem_budget_bytes:,} B budget; falling back to "
-                f"the per-phase x-tiled dispatch.  Fused single-block "
-                f"ceiling at this budget is ~{ceiling}^3 per brick.",
-                RuntimeWarning, stacklevel=2)
-        self.fused = fused
+        if precision == "bitplane":
+            if self.fused_working_set > self.vmem_budget_bytes:
+                ceiling = fused_brick_ceiling(prob.n_colors, precision,
+                                              self.vmem_budget_bytes,
+                                              lanes=self.replicas)
+                warnings.warn(
+                    f"bitplane sweep kernel needs "
+                    f"{self.fused_working_set:,} B of VMEM for brick "
+                    f"{self.brick} ({self.replicas} lanes, "
+                    f"{prob.n_colors} colors) — over the "
+                    f"{self.vmem_budget_bytes:,} B budget and the word "
+                    f"kernel has no per-phase fallback; shard to bricks of "
+                    f"~{ceiling}^3 or fewer sites for TPU.",
+                    RuntimeWarning, stacklevel=2)
+            self.fused = True
+        else:
+            if fused and kernel_bx is not None:
+                fused, self.fallback_reason = False, "kernel_bx"
+            if fused and self.fused_working_set > self.vmem_budget_bytes:
+                ceiling = fused_brick_ceiling(prob.n_colors, precision,
+                                              self.vmem_budget_bytes)
+                fused, self.fallback_reason = False, "vmem"
+                warnings.warn(
+                    f"lattice fused sweep kernel needs "
+                    f"{self.fused_working_set:,} B of VMEM for brick "
+                    f"{self.brick} ({precision}, {prob.n_colors} colors) — "
+                    f"over the {self.vmem_budget_bytes:,} B budget; falling "
+                    f"back to the per-phase x-tiled dispatch.  Fused "
+                    f"single-block ceiling at this budget is ~{ceiling}^3 "
+                    f"per brick.",
+                    RuntimeWarning, stacklevel=2)
+            self.fused = fused
         ax, ay, az = dim_axes
         self.spec_m = P(None, ax, ay, az)        # leading replica axis
         self.spec_flat = P(ax, ay, az)           # problem constants (no R)
         self.spec_masks = P(None, ax, ay, az)
         # halo plane specs: (R, nbx, Y, Z), ... each sharded so every device
-        # holds exactly its (1-plane) halo slice for all replicas
-        self.halo_specs = tuple(P(None, ax, ay, az) for _ in range(6))
+        # holds exactly its (1-plane) halo slice for all replicas.  On the
+        # bitplane path the replica axis lives inside the words, so halo
+        # planes (and the spin words) shard without a leading R dim.
+        if precision == "bitplane":
+            self.halo_specs = tuple(P(ax, ay, az) for _ in range(6))
+        else:
+            self.halo_specs = tuple(P(None, ax, ay, az) for _ in range(6))
         self._shard = lambda spec: NamedSharding(mesh, spec)
         self._chunk_cache = {}
         self._energy_fn = None
 
     @property
     def kernel_path(self) -> str:
-        """Which update dispatch actually runs: "fused" or "per_phase"."""
+        """Which update dispatch actually runs: "fused", "per_phase", or
+        "bitplane" (the multi-spin-coded word kernel)."""
+        if self.precision == "bitplane":
+            return "bitplane"
         return "fused" if self.fused else "per_phase"
 
     def _lut_for(self, table: np.ndarray) -> jnp.ndarray:
@@ -215,9 +300,43 @@ class LatticeDSIM:
 
     def _halo_shapes(self):
         (X, Y, Z), (kx, ky, kz) = self.p.dims, self.nb
+        if self.precision == "bitplane":
+            # word planes: all 32 replica lanes ride inside each uint32
+            return [(kx, Y, Z), (kx, Y, Z), (X, ky, Z), (X, ky, Z),
+                    (X, Y, kz), (X, Y, kz)]
         R = self.replicas
         return [(R, kx, Y, Z), (R, kx, Y, Z), (R, X, ky, Z), (R, X, ky, Z),
                 (R, X, Y, kz), (R, X, Y, kz)]
+
+    def _halo_shift(self, plane, axis_name, k, up: bool, periodic: bool,
+                    bitpack_pm1: bool):
+        """Ship one face plane to the neighbor along a mesh axis.
+
+        up=True: receive the plane of my -1 neighbor (their high face).
+        The ONE place the neighbor permutation tables and the k==1
+        wrap/zero boundary rule live — both the unpacked (optionally
+        pm1-bitpacked) and the bitplane word exchanges route through it.
+        """
+        if axis_name is None or k == 1:
+            if periodic:
+                return plane  # my own opposite face wraps to me
+            return jnp.zeros_like(plane)
+        if up:
+            perm = [(i, (i + 1) % k) for i in range(k)] if periodic \
+                else [(i, i + 1) for i in range(k - 1)]
+        else:
+            perm = [(i, (i - 1) % k) for i in range(k)] if periodic \
+                else [(i, i - 1) for i in range(1, k)]
+        if not bitpack_pm1:
+            return jax.lax.ppermute(plane, axis_name, perm)
+        shape = plane.shape
+        n = int(np.prod(shape))
+        npad = pad_to_multiple(n, 8)
+        flat = jnp.pad(plane.reshape(-1), (0, npad - n),
+                       constant_values=1)
+        packed = pack_pm1(flat)
+        packed = jax.lax.ppermute(packed, axis_name, perm)
+        return unpack_pm1(packed, n).reshape(shape)
 
     def _exchange_block(self, m):
         """Refresh the six halo planes of this brick via neighbor ppermute.
@@ -228,28 +347,9 @@ class LatticeDSIM:
         ax, ay, az = self.dim_axes
         kx, ky, kz = self.nb
 
-        def shift(plane, axis_name, k, up: bool, periodic: bool):
-            # up=True: receive the plane of my -1 neighbor (their high face)
-            if axis_name is None or k == 1:
-                if periodic:
-                    return plane  # my own opposite face wraps to me
-                return jnp.zeros_like(plane)
-            if up:
-                perm = [(i, (i + 1) % k) for i in range(k)] if periodic \
-                    else [(i, i + 1) for i in range(k - 1)]
-            else:
-                perm = [(i, (i - 1) % k) for i in range(k)] if periodic \
-                    else [(i, i - 1) for i in range(1, k)]
-            if not self.bitpack_halos:
-                return jax.lax.ppermute(plane, axis_name, perm)
-            shape = plane.shape
-            n = int(np.prod(shape))
-            npad = pad_to_multiple(n, 8)
-            flat = jnp.pad(plane.reshape(-1), (0, npad - n),
-                           constant_values=1)
-            packed = pack_pm1(flat)
-            packed = jax.lax.ppermute(packed, axis_name, perm)
-            return unpack_pm1(packed, n).reshape(shape)
+        def shift(plane, axis_name, k, up, periodic):
+            return self._halo_shift(plane, axis_name, k, up, periodic,
+                                    bitpack_pm1=self.bitpack_halos)
 
         xlo = shift(m[:, -1:, :, :], ax, kx, True, False)[:, 0]
         xhi = shift(m[:, :1, :, :], ax, kx, False, False)[:, 0]
@@ -257,6 +357,28 @@ class LatticeDSIM:
         yhi = shift(m[:, :, :1, :], ay, ky, False, False)[:, :, 0, :]
         zlo = shift(m[:, :, :, -1:], az, kz, True, True)[:, :, :, 0]
         zhi = shift(m[:, :, :, :1], az, kz, False, True)[:, :, :, 0]
+        return (xlo, xhi, ylo, yhi, zlo, zhi)
+
+    def _exchange_block_w(self, mw):
+        """Bitplane halo exchange: the face slices of the word brick ARE
+        the packed wire format — 1 bit per boundary p-bit per lane, exactly
+        the paper's traffic, with zero pack/unpack compute.  One ppermute
+        ships all 32 replica lanes of a face; the payload is 8x smaller
+        than the int8 path's unpacked planes at R=32.  Boundary words of
+        zero-coupling directions are inert (the nonzero masks zero them)."""
+        ax, ay, az = self.dim_axes
+        kx, ky, kz = self.nb
+
+        def shift(plane, axis_name, k, up, periodic):
+            return self._halo_shift(plane, axis_name, k, up, periodic,
+                                    bitpack_pm1=False)
+
+        xlo = shift(mw[-1:, :, :], ax, kx, True, False)[0]
+        xhi = shift(mw[:1, :, :], ax, kx, False, False)[0]
+        ylo = shift(mw[:, -1:, :], ay, ky, True, False)[:, 0, :]
+        yhi = shift(mw[:, :1, :], ay, ky, False, False)[:, 0, :]
+        zlo = shift(mw[:, :, -1:], az, kz, True, True)[:, :, 0]
+        zhi = shift(mw[:, :, :1], az, kz, False, True)[:, :, 0]
         return (xlo, xhi, ylo, yhi, zlo, zhi)
 
     # -- block step -------------------------------------------------------------------
@@ -396,6 +518,64 @@ class LatticeDSIM:
         self._chunk_cache[key] = run
         return run
 
+    def _run_chunk_bp(self, iters: int, S: int):
+        """Bitplane chunk runner: words sweep via the multi-spin-coded op;
+        halos are native word planes (the 1-bit wire format).  Shared-vs-
+        per-lane schedules need no flag here: the sweep op dispatches on
+        the trailing dims of the rows operand (jit retraces per shape)."""
+        key = ("bp", iters, S)
+        if key in self._chunk_cache:
+            return self._chunk_cache[key]
+        spec_w, spec_m = self.spec_flat, self.spec_m
+        spec_masks, spec_flat = self.spec_masks, self.spec_flat
+        hspecs = self.halo_specs
+        axes_all = self._axes_all()
+        R = self.replicas
+
+        def block(mw, s, halos, sched, masks_w, signs, nz, base, lut):
+            # halos arrive as (k?, ...) plane stacks; squeeze the brick dims
+            xlo, xhi, ylo, yhi, zlo, zhi = halos
+            halos = (xlo[0], xhi[0], ylo[:, 0, :], yhi[:, 0, :],
+                     zlo[:, :, 0], zhi[:, :, 0])
+            local = jnp.zeros((R,), jnp.int32)
+
+            def it(carry, b):
+                mw, s, halos, fl = carry
+                mw, s, f = pbit_bitplane_sweep_op(
+                    mw, s, b, masks_w, signs, nz, base, halos, lut,
+                    impl=self.impl)
+                halos = self._exchange_block_w(mw)
+                return (mw, s, halos, fl + f), None
+            (mw, s, halos, local), _ = jax.lax.scan(
+                it, (mw, s, halos, local), sched)
+            flips = jax.lax.psum(local, axes_all) if axes_all else local
+            xlo, xhi, ylo, yhi, zlo, zhi = halos
+            halos = (xlo[None], xhi[None], ylo[:, None, :], yhi[:, None, :],
+                     zlo[:, :, None], zhi[:, :, None])
+            return mw, s, halos, flips
+
+        smapped = shard_map(
+            block, mesh=self.mesh,
+            in_specs=(spec_w, spec_m, hspecs, P(), spec_masks,
+                      tuple(spec_flat for _ in range(6)),
+                      tuple(spec_flat for _ in range(6)), spec_flat, P()),
+            out_specs=(spec_w, spec_m, hspecs, P()),
+            check_vma=False,
+        )
+
+        @jax.jit
+        def run(state: BitplaneLatticeState, sched, masks_w, signs, nz,
+                base, lut):
+            mw, s, halos, fl = smapped(state.m, state.s, state.halos,
+                                       sched, masks_w, signs, nz, base, lut)
+            return BitplaneLatticeState(
+                m=mw, s=s, halos=halos,
+                sweep=state.sweep + sched.shape[0] * sched.shape[1],
+                flips=state.flips + fl)
+
+        self._chunk_cache[key] = run
+        return run
+
     def init_state(self, seed: int = 0,
                    seeds: Optional[Sequence[int]] = None) -> LatticeState:
         """Fresh replicated state.  ``seeds=[...]`` (length R) gives every
@@ -415,27 +595,53 @@ class LatticeDSIM:
             rng = np.random.default_rng(sd)
             ms.append(rng.choice(np.array([-1, 1], np.int8), size=(X, Y, Z)))
             ss.append(np.asarray(lfsr_init(X * Y * Z, sd)).reshape(X, Y, Z))
-        m = jnp.asarray(np.stack(ms))
         s = jnp.asarray(np.stack(ss))
-        halos = tuple(jnp.zeros(sh, jnp.int8) for sh in self._halo_shapes())
-        st = LatticeState(m=m, s=s, halos=halos,
-                          sweep=jnp.zeros((), jnp.int32),
-                          flips=jnp.zeros((R,), jnp.int32))
+        if self.precision == "bitplane":
+            # lane r's spins and LFSR column come from seeds[r] exactly as
+            # replica r of the unpacked engines would — lane r of a packed
+            # run is bit-identical to int8 replica r at matched schedules
+            mw = pack_lanes(jnp.asarray(np.stack(ms)))
+            halos = tuple(jnp.zeros(sh, jnp.uint32)
+                          for sh in self._halo_shapes())
+            st = BitplaneLatticeState(m=mw, s=s, halos=halos,
+                                      sweep=jnp.zeros((), jnp.int32),
+                                      flips=jnp.zeros((R,), jnp.int32))
+        else:
+            m = jnp.asarray(np.stack(ms))
+            halos = tuple(jnp.zeros(sh, jnp.int8)
+                          for sh in self._halo_shapes())
+            st = LatticeState(m=m, s=s, halos=halos,
+                              sweep=jnp.zeros((), jnp.int32),
+                              flips=jnp.zeros((R,), jnp.int32))
         st = self.shard_state(st)
         # one synchronizing exchange so the first sweeps see real halos
         return self._refresh_halos(st)
 
-    def shard_state(self, st: LatticeState) -> LatticeState:
+    def shard_state(self, st):
         put = jax.device_put
-        return LatticeState(
-            m=put(st.m, self._shard(self.spec_m)),
+        cls = type(st)
+        spec_spins = self.spec_flat if self.precision == "bitplane" \
+            else self.spec_m
+        return cls(
+            m=put(st.m, self._shard(spec_spins)),
             s=put(st.s, self._shard(self.spec_m)),
             halos=tuple(put(hh, self._shard(sp))
                         for hh, sp in zip(st.halos, self.halo_specs)),
             sweep=put(st.sweep, self._shard(P())),
             flips=put(st.flips, self._shard(P())))
 
-    def _refresh_halos(self, st: LatticeState) -> LatticeState:
+    def _refresh_halos(self, st):
+        if self.precision == "bitplane":
+            def block(mw):
+                xlo, xhi, ylo, yhi, zlo, zhi = self._exchange_block_w(mw)
+                return (xlo[None], xhi[None],
+                        ylo[:, None, :], yhi[:, None, :],
+                        zlo[:, :, None], zhi[:, :, None])
+            halos = jax.jit(shard_map(
+                block, mesh=self.mesh, in_specs=(self.spec_flat,),
+                out_specs=self.halo_specs, check_vma=False))(st.m)
+            return dataclasses.replace(st, halos=halos)
+
         def block(m):
             xlo, xhi, ylo, yhi, zlo, zhi = self._exchange_block(m)
             return (xlo[:, None], xhi[:, None],
@@ -466,7 +672,16 @@ class LatticeDSIM:
         beta_arr = np.asarray(schedule.beta_array(), np.float32)
         per_rep = beta_arr.ndim == 2
 
-        if self.precision == "int8":
+        if self.precision == "bitplane":
+            table = beta_table(beta_arr)
+            lut = self._lut_for(table)
+            sched = ArraySchedule(beta_row_indices(beta_arr, table))
+
+            def chunk(st, rows2d, iters, S):
+                return self._run_chunk_bp(iters, S)(
+                    st, rows2d, self.masks_w, self.signs6_w, self.nz6_w,
+                    self.base_w, lut)
+        elif self.precision == "int8":
             table = beta_table(beta_arr)
             lut = self._lut_for(table)
             sched = ArraySchedule(beta_row_indices(beta_arr, table))
@@ -498,15 +713,25 @@ class LatticeDSIM:
 
     # -- observables -----------------------------------------------------------------------
 
-    def energy(self, state: LatticeState) -> jnp.ndarray:
+    def energy(self, state) -> jnp.ndarray:
         """True global energies, one per replica (halos refreshed for the
         readout).  Returns (R,) — or a scalar when replicas == 1, keeping
         the legacy contract."""
         if self._energy_fn is None:
             axes_all = self._axes_all()
+            R = self.replicas
+            bitplane = self.precision == "bitplane"
 
             def block(m, active, h, w6):
-                halos = self._exchange_block(m)
+                if bitplane:
+                    # unpack lanes + word halos, then the shared per-replica
+                    # energy readout — identical float ops to the unpacked
+                    # engines, so equal spins give equal energies
+                    halos = tuple(unpack_lanes(hw, R)
+                                  for hw in self._exchange_block_w(m))
+                    m = unpack_lanes(m, R)
+                else:
+                    halos = self._exchange_block(m)
                 e = jax.vmap(
                     lambda mr, hr: brick_energy_op(mr, active, h, w6, hr,
                                                    bx=self.kernel_bx,
@@ -514,32 +739,61 @@ class LatticeDSIM:
                     in_axes=(0, 0))(m, halos)
                 return jax.lax.psum(e, axes_all) if axes_all else e
 
+            spec_spins = self.spec_flat if bitplane else self.spec_m
             self._energy_fn = jax.jit(shard_map(
                 block, mesh=self.mesh,
-                in_specs=(self.spec_m, self.spec_flat, self.spec_flat,
+                in_specs=(spec_spins, self.spec_flat, self.spec_flat,
                           tuple(self.spec_flat for _ in range(6))),
                 out_specs=P(), check_vma=False))
         e = self._energy_fn(state.m, self.p.active, self.p.h, self.p.w6)
         return e[0] if self.replicas == 1 else e
 
-    def global_spins(self, state: LatticeState) -> jnp.ndarray:
+    def global_spins(self, state) -> jnp.ndarray:
         """(R, L^3) active-site spins in ea3d node order ((L,L,L) row-major);
         squeezed to (L^3,) when replicas == 1."""
         L = self.p.L
-        spins = state.m[:, :L, :L, :L].reshape(self.replicas, L ** 3)
+        if self.precision == "bitplane":
+            spins = unpack_lanes(state.m[:L, :L, :L], self.replicas) \
+                .reshape(self.replicas, L ** 3)
+        else:
+            spins = state.m[:, :L, :L, :L].reshape(self.replicas, L ** 3)
         return spins[0] if self.replicas == 1 else spins
 
     # -- dry-run hook -----------------------------------------------------------------------
 
     def lower_chunk(self, iters: int = 2, S: int = 4, lut_rows: int = 10):
-        run = self._run_chunk(iters, S)
-
         def sds(x, spec):
             return jax.ShapeDtypeStruct(x.shape, x.dtype,
                                         sharding=self._shard(spec))
         p = self.p
         X, Y, Z = p.dims
         R = self.replicas
+        if self.precision == "bitplane":
+            run = self._run_chunk_bp(iters, S)
+            st = BitplaneLatticeState(
+                m=jax.ShapeDtypeStruct((X, Y, Z), jnp.uint32,
+                                       sharding=self._shard(self.spec_flat)),
+                s=jax.ShapeDtypeStruct((R, X, Y, Z), jnp.uint32,
+                                       sharding=self._shard(self.spec_m)),
+                halos=tuple(jax.ShapeDtypeStruct(tuple(sh), jnp.uint32,
+                                                 sharding=self._shard(sp))
+                            for sh, sp in zip(self._halo_shapes(),
+                                              self.halo_specs)),
+                sweep=jax.ShapeDtypeStruct((), jnp.int32,
+                                           sharding=self._shard(P())),
+                flips=jax.ShapeDtypeStruct((R,), jnp.int32,
+                                           sharding=self._shard(P())),
+            )
+            rows = jax.ShapeDtypeStruct((iters, S), jnp.int32,
+                                        sharding=self._shard(P()))
+            masks_w = sds(self.masks_w, self.spec_masks)
+            signs = tuple(sds(w, self.spec_flat) for w in self.signs6_w)
+            nz = tuple(sds(w, self.spec_flat) for w in self.nz6_w)
+            base = sds(self.base_w, self.spec_flat)
+            lut = jax.ShapeDtypeStruct((lut_rows, 2 * self.f_max + 1),
+                                       jnp.uint32, sharding=self._shard(P()))
+            return run.lower(st, rows, masks_w, signs, nz, base, lut)
+        run = self._run_chunk(iters, S)
         st = LatticeState(
             m=jax.ShapeDtypeStruct((R, X, Y, Z), jnp.int8,
                                    sharding=self._shard(self.spec_m)),

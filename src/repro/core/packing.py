@@ -1,9 +1,19 @@
-"""1-bit packing of boundary p-bit states.
+"""1-bit packing of p-bit states.
 
-The paper's architecture ships exactly 1 bit per boundary p-bit.  TPU ICI
-moves bytes, so the distributed backend packs +-1 spins into uint8 lanes
-before the boundary all-gather; the roofline collective term then counts the
-packed size (N/8 bytes), faithful to the paper's traffic accounting.
+The paper's architecture keeps every spin as literally one bit — p-bit
+states on chip, 1 bit per boundary p-bit on the wire.  Two packings live
+here:
+
+* **site packing** (``pack_pm1``/``unpack_pm1``): the spins of one chain
+  packed 8-per-uint8 along the site axis — the distributed backend's wire
+  format for boundary all-gathers (the roofline collective term counts the
+  packed N/8 bytes, faithful to the paper's traffic accounting).
+* **lane packing** (``pack_lanes``/``unpack_lanes``): 32 independent
+  *replicas* of one site packed into the bit lanes of a single uint32 word
+  — multi-spin coding, the substrate of the bit-plane engine
+  (``precision="bitplane"``).  Bit r of a word is replica r's spin
+  (1 = +1, 0 = -1); a word-plane slice IS the packed halo payload, so the
+  bit-plane path ships boundaries with zero pack/unpack compute.
 """
 
 from __future__ import annotations
@@ -11,7 +21,8 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-__all__ = ["pad_to_multiple", "pack_pm1", "unpack_pm1"]
+__all__ = ["pad_to_multiple", "pack_pm1", "unpack_pm1",
+           "LANE_WIDTH", "lane_shifts", "pack_lanes", "unpack_lanes"]
 
 # numpy constant: creating a jnp array at import time leaks a tracer if the
 # first import happens inside an active trace (e.g. lazy import under jit)
@@ -37,3 +48,42 @@ def unpack_pm1(p: jnp.ndarray, n: int) -> jnp.ndarray:
     bits = (p[..., :, None] & _POW2) > 0
     out = jnp.where(bits, 1, -1).astype(jnp.int8).reshape(*lead, nb * 8)
     return out[..., :n]
+
+
+# ---------------------------------------------------------------------------
+# lane packing: 32 replicas per uint32 word (multi-spin coding)
+# ---------------------------------------------------------------------------
+
+LANE_WIDTH = 32      # replica lanes per word — the uint32 word width
+
+
+def lane_shifts(n_lanes: int, ndim: int) -> jnp.ndarray:
+    """(n_lanes, 1, ..., 1) uint32 shift amounts broadcasting against an
+    ``ndim``-dimensional word array — the one lane-axis constant every
+    pack/unpack/per-lane-extract shares."""
+    if not 1 <= n_lanes <= LANE_WIDTH:
+        raise ValueError(f"n_lanes must be in [1, {LANE_WIDTH}], "
+                         f"got {n_lanes}")
+    return jnp.arange(n_lanes, dtype=jnp.uint32).reshape(
+        (n_lanes,) + (1,) * ndim)
+
+
+def pack_lanes(x: jnp.ndarray) -> jnp.ndarray:
+    """Pack +-1 spins (leading lane axis, <= 32 lanes) into uint32 words.
+
+    ``x`` is (R, ...) with values in {-1, +1}; returns (...) uint32 where
+    bit r of each word is lane r's spin (1 = +1).  Lanes >= R are zero.
+    """
+    R = int(x.shape[0])
+    sh = lane_shifts(R, x.ndim - 1)
+    bits = (x > 0).astype(jnp.uint32)
+    # lane bits are disjoint, so the sum is a bitwise OR
+    return (bits << sh).sum(axis=0).astype(jnp.uint32)
+
+
+def unpack_lanes(w: jnp.ndarray, n_lanes: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_lanes`: (...) uint32 words -> (n_lanes, ...)
+    +-1 int8 spins."""
+    sh = lane_shifts(n_lanes, w.ndim)
+    bits = (w[None] >> sh) & jnp.uint32(1)
+    return jnp.where(bits != 0, 1, -1).astype(jnp.int8)

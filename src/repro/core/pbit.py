@@ -22,7 +22,8 @@ import numpy as np
 __all__ = ["FixedPoint", "quantize", "pbit_update", "lfsr_init", "lfsr_next",
            "lfsr_uniform", "S41", "S43", "S46",
            "LFSR_UNIFORM_BITS", "quantize_couplings", "field_bound",
-           "threshold_lut", "threshold_lut_cached", "lut_accept"]
+           "threshold_lut", "threshold_lut_cached", "lut_accept",
+           "bitplane_planes"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,6 +185,50 @@ def lut_accept(thr: jnp.ndarray, field: jnp.ndarray, f_off: int,
             count = count + (u >= thr[k]).astype(jnp.int32)
         return idx + count >= lw
     return u >= jnp.take(thr, idx, mode="clip")
+
+
+def bitplane_planes(h_q, w6_q):
+    """Sign-plane quantization: the bit-plane engine's per-site constants.
+
+    With couplings quantized to {-1, 0, +1} (:func:`quantize_couplings` on
+    +-J problems), the product w_d * m_d collapses to one XOR per neighbor
+    bit: encoding spin +1 as bit 1, the contribution of a nonzero coupling
+    is +1 exactly when ``m_bit XOR (w_d < 0)`` is 1.  The integer field of
+    lane r is then
+
+        f = h_q + 2*c - nnz,    c = #{nonzero d : contribution +1}
+
+    so the threshold-LUT column index ``f + f_max`` equals ``base + 2*c``
+    with the lane-independent ``base = h_q - nnz + f_max`` precomputed per
+    site.  Returns ``(signs6, nz6, base, f_max)``:
+
+      signs6: 6 uint32 planes, all-ones words where w_d < 0 (XOR operand,
+        broadcast across the 32 lanes of a word);
+      nz6: 6 uint32 planes, all-ones words where w_d != 0 (AND mask);
+      base: int32 plane, h_q - nnz + f_max (in [0, 2*f_max] by the field
+        bound);
+      f_max: the :func:`field_bound` of the quantized problem.
+
+    Raises ValueError when any |w_q| > 1 — multi-bit couplings have no
+    single sign plane; such problems stay on the int8 path.
+    """
+    ones = np.uint32(0xFFFFFFFF)
+    h_q = np.asarray(h_q, np.int64)
+    ws = [np.asarray(w, np.int64) for w in w6_q]
+    bad = max(int(np.abs(w).max()) for w in ws)
+    if bad > 1:
+        raise ValueError(
+            f"bitplane needs couplings quantized to {{-1, 0, +1}} (one sign "
+            f"bit per neighbor); this problem quantizes to |w_q| up to "
+            f"{bad}.  Use precision='int8' instead.")
+    f_max = field_bound(h_q, ws)
+    signs6 = tuple(jnp.asarray(np.where(w < 0, ones, 0).astype(np.uint32))
+                   for w in ws)
+    nz6 = tuple(jnp.asarray(np.where(w != 0, ones, 0).astype(np.uint32))
+                for w in ws)
+    nnz = sum((w != 0).astype(np.int64) for w in ws)
+    base = jnp.asarray((h_q - nnz + f_max).astype(np.int32))
+    return signs6, nz6, base, f_max
 
 
 def threshold_lut(betas, scale: float, f_max: int,

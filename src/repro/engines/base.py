@@ -26,9 +26,56 @@ import numpy as np
 
 __all__ = ["Engine", "RunRecord", "SyncSpec", "chunk_plan",
            "run_recorded_driver", "RecordedCursor", "spawn_seeds",
-           "stack_states", "flips_chunk_cap"]
+           "stack_states", "flips_chunk_cap", "PRECISIONS",
+           "ENGINE_PRECISIONS", "LANE_WIDTH", "lanes_of", "check_precision"]
 
 SyncSpec = Union[int, str, None]
+
+# ---------------------------------------------------------------------------
+# precision pipelines
+# ---------------------------------------------------------------------------
+#
+# "f32"      — floating reference (tanh + float compare, Philox or LFSR).
+# "int8"     — the hardware's fixed-point pipeline: int8 on-chip couplings,
+#              integer field accumulation, LUT-threshold accepts.
+# "bitplane" — multi-spin coding over the int8 substrate: spins as uint32
+#              bit-planes, 32 replica lanes per word, word-wide field math
+#              with per-lane RNG/accept.  Lattice engine only; replicas are
+#              lanes, so R <= LANE_WIDTH.
+#
+# One shared table so the registry, the serving layer, and the engines all
+# reject an unsupported (engine, precision) pair with the same clear error
+# — a scheduler-level shape error is never the first symptom.
+
+PRECISIONS = ("f32", "int8", "bitplane")
+ENGINE_PRECISIONS = {
+    "gibbs": ("f32",),
+    "dsim": ("f32", "int8"),
+    "dsim_dist": ("f32",),
+    "lattice": ("f32", "int8", "bitplane"),
+}
+LANE_WIDTH = 32       # replica lanes per uint32 word on the bitplane path
+
+
+def lanes_of(precision: str) -> int:
+    """Replica lanes one engine call packs per word (1 off the bitplane
+    path) — the quantum the serving scheduler clamps batch widths to."""
+    return LANE_WIDTH if precision == "bitplane" else 1
+
+
+def check_precision(engine: str, precision: str):
+    """Registry-level guard: raise a clear ValueError for an unknown
+    precision or an (engine, precision) pair no backend implements."""
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}; choose from "
+                         f"{PRECISIONS}")
+    ok = ENGINE_PRECISIONS.get(engine, ("f32",))
+    if precision not in ok:
+        raise ValueError(
+            f"precision={precision!r} is not supported on engine "
+            f"{engine!r} (supported: {', '.join(ok)})"
+            + ("; bit-plane multi-spin coding is a lattice-engine path"
+               if precision == "bitplane" else ""))
 
 
 @runtime_checkable

@@ -27,7 +27,7 @@ from repro.core.lattice import LatticeProblem, build_ea3d_lattice
 from repro.core.lattice_dsim import LatticeDSIM
 from repro.compat import make_mesh, auto_axes
 from repro.core.snapshot import restore_state, snapshot_state
-from .base import RunRecord, SyncSpec
+from .base import LANE_WIDTH, RunRecord, SyncSpec, check_precision
 
 __all__ = ["ENGINE_NAMES", "make_engine", "HandleCursor"]
 
@@ -305,19 +305,23 @@ def make_engine(name: str, graph=None, *, coloring: Optional[Coloring] = None,
 
     ``precision="int8"`` selects the fixed-point update pipeline (int8
     on-chip couplings, integer field accumulation, LUT-threshold accepts)
-    on the dsim and lattice engines; ``"f32"`` (default) is the floating
-    reference the integer path is statistically compared against.
+    on the dsim and lattice engines; ``precision="bitplane"`` (lattice
+    only) multi-spin-codes that pipeline — spins stored as uint32
+    bit-planes with up to 32 replica lanes per word, word-wide field math,
+    per-lane RNG; lane r is bit-identical to int8 replica r.  ``"f32"``
+    (default) is the floating reference the integer paths are
+    statistically compared against.
     """
     if name not in ENGINE_NAMES:
         raise ValueError(f"unknown engine {name!r}; choose from {ENGINE_NAMES}")
     if replicas < 1:
         raise ValueError("replicas must be >= 1")
-    if precision not in ("f32", "int8"):
-        raise ValueError(f"unknown precision {precision!r}")
-    if precision != "f32" and name in ("gibbs", "dsim_dist"):
+    check_precision(name, precision)
+    if precision == "bitplane" and replicas > LANE_WIDTH:
         raise ValueError(
-            f"precision={precision!r} is not supported on {name!r} yet "
-            "(use 'dsim' or 'lattice')")
+            f"precision='bitplane' packs replicas into the {LANE_WIDTH} "
+            f"bit lanes of one uint32 word; replicas must be in "
+            f"[1, {LANE_WIDTH}], got {replicas}")
 
     if name == "gibbs":
         if not isinstance(graph, IsingGraph):

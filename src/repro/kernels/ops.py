@@ -14,10 +14,11 @@ from typing import Optional
 import jax
 
 from repro.core.pbit import FixedPoint
-from . import pbit_lattice, lattice_energy, ref as _ref
+from . import pbit_bitplane, pbit_lattice, lattice_energy, ref as _ref
 
 __all__ = ["pbit_update_op", "pbit_sweep_op", "pbit_update_int_op",
-           "pbit_sweep_int_op", "brick_energy_op", "default_impl"]
+           "pbit_sweep_int_op", "pbit_bitplane_sweep_op", "brick_energy_op",
+           "default_impl"]
 
 
 def default_impl() -> str:
@@ -75,6 +76,25 @@ def pbit_sweep_int_op(m, s, rows, masks, h_q, w6_q, halos, lut,
                                              halos, lut)
     return pbit_lattice.pbit_brick_sweep_int(
         m, s, rows, masks, h_q, w6_q, halos, lut,
+        interpret=(impl == "interpret"))
+
+
+def pbit_bitplane_sweep_op(mw, s, rows, masks_w, signs6, nz6, base, halos_w,
+                           lut, impl: str = "auto"):
+    """Multi-spin-coded fused sweep: 32 replica lanes per uint32 word, one
+    launch per ``sync_every`` sweeps.  ``rows`` is (S,) shared or (S, R)
+    per-lane LUT row indices.  Returns (mw, s, flips:(R,) int32)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.pbit_bitplane_sweep_ref(mw, s, rows, masks_w, signs6,
+                                            nz6, base, halos_w, lut)
+    import jax.numpy as jnp
+    rows = jnp.asarray(rows, jnp.int32)
+    if rows.ndim == 1:
+        rows = jnp.broadcast_to(rows[:, None],
+                                (rows.shape[0], int(s.shape[0])))
+    return pbit_bitplane.pbit_bitplane_sweep(
+        mw, s, rows, masks_w, signs6, nz6, base, halos_w, lut,
         interpret=(impl == "interpret"))
 
 

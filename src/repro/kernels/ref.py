@@ -15,6 +15,7 @@ from repro.core.pbit import FixedPoint, lut_accept
 
 __all__ = ["pbit_brick_update_ref", "pbit_brick_sweep_ref",
            "pbit_brick_update_int_ref", "pbit_brick_sweep_int_ref",
+           "pbit_bitplane_sweep_ref", "bitplane_ones_count_ref",
            "brick_energy_ref", "neighbor_sums_ref", "int_field_ref"]
 
 
@@ -144,6 +145,139 @@ def pbit_brick_sweep_int_ref(m, s, rows, masks, h_q, w6_q, halos, lut):
             flips = flips + (m2 != m).sum().astype(jnp.int32)
             m = m2
     return m, s, flips
+
+
+# ---------------------------------------------------------------------------
+# bit-plane (multi-spin-coded) oracle: 32 replicas per uint32 word
+# ---------------------------------------------------------------------------
+#
+# Spins live as bit-planes — bit r of word [x, y, z] is replica r's spin
+# (1 = +1) — so one word op advances 32 independent chains at once.  The
+# +-J field needs only the *count* of +1 neighbor contributions: each
+# nonzero coupling contributes +1 exactly when (m_bit XOR sign_bit) is 1,
+# and the six contribution planes are summed with a bit-sliced carry-save
+# adder tree (c in [0, 6] fits 3 bit-slices; with the sign/carry structure
+# of the +-J field, 4 slices bound the 13-value field).  Only the RNG and
+# the threshold compare are per-lane: packed chains draw from their own
+# LFSR columns (no shared randomness — lanes must stay statistically
+# independent), and lane r of a bit-plane run is bit-identical to replica r
+# of the int8 engine at matched seeds/schedules.
+
+def _shifted_words(mw, halos_w):
+    """Six neighbor word-planes of a brick of packed words."""
+    xlo, xhi, ylo, yhi, zlo, zhi = halos_w
+    xm = jnp.concatenate([xlo[None], mw[:-1]], axis=0)
+    xp = jnp.concatenate([mw[1:], xhi[None]], axis=0)
+    ym = jnp.concatenate([ylo[:, None, :], mw[:, :-1]], axis=1)
+    yp = jnp.concatenate([mw[:, 1:], yhi[:, None, :]], axis=1)
+    zm = jnp.concatenate([zlo[:, :, None], mw[:, :, :-1]], axis=2)
+    zp = jnp.concatenate([mw[:, :, 1:], zhi[:, :, None]], axis=2)
+    return xm, xp, ym, yp, zm, zp
+
+
+def _full_add(a, b, c):
+    """Bit-sliced full adder: per-lane a + b + c as (sum, carry) planes."""
+    s = a ^ b
+    return s ^ c, (a & b) | (c & s)
+
+
+def bitplane_ones_count_ref(mw, signs6, nz6, halos_w):
+    """Per-lane count of +1 neighbor contributions, as 3 bit-slice planes.
+
+    Returns (b0, b1, b2) uint32 planes: lane r's count is
+    ``b0[r] + 2*b1[r] + 4*b2[r]`` (in [0, 6] — six neighbors).  This is the
+    carry-save adder tree: two 3:2 full adders over the six contribution
+    planes, then a bit-sliced combine of the two (sum, carry) pairs.
+    """
+    nbs = _shifted_words(mw, halos_w)
+    t = [(nb ^ sg) & nz for nb, sg, nz in zip(nbs, signs6, nz6)]
+    s1, c1 = _full_add(t[0], t[1], t[2])
+    s2, c2 = _full_add(t[3], t[4], t[5])
+    b0 = s1 ^ s2
+    k = s1 & s2
+    b1, b2 = _full_add(c1, c2, k)[0], (c1 & c2) | (k & (c1 ^ c2))
+    return b0, b1, b2
+
+
+def pbit_bitplane_sweep_ref(mw, s, rows, masks_w, signs6, nz6, base,
+                            halos_w, lut):
+    """Oracle for the multi-spin-coded sweep kernel.
+
+    Args:
+      mw: (Bx, By, Bz) uint32 spin words (bit r = replica lane r).
+      s: (R, Bx, By, Bz) uint32 per-lane LFSR states (R <= 32).
+      rows: (S,) or (S, R) int32 LUT row indices — one per sweep, shared
+        or per lane (the per-replica staircase fan).
+      masks_w: (n_colors, Bx, By, Bz) uint32 color masks — the lane mask
+        ((1 << R) - 1) is folded in, so lanes >= R never update.
+      signs6 / nz6 / base: :func:`repro.core.pbit.bitplane_planes`.
+      halos_w: 6 packed word halo planes (held fixed across the S sweeps).
+      lut: (n_rows, 2*f_max+1) uint32 thresholds; rows must be narrow
+        enough for the rank-count accept (monotone rows).
+
+    Returns (mw_new, s_new, flips) with flips the (R,) int32 per-lane
+    accepted-change counts.  Lane r is bit-identical to replica r of
+    :func:`pbit_brick_sweep_int_ref` on the unpacked problem.
+    """
+    R = int(s.shape[0])
+    n_colors = int(masks_w.shape[0])
+    lw = int(lut.shape[1])
+    rows = jnp.asarray(rows, jnp.int32)
+    per_lane_rows = rows.ndim == 2
+    # Per-lane work runs LANE-LAST: the 32 uint32 lanes of a site are
+    # contiguous innermost, so every per-lane op (xorshift, compare, bit
+    # extract) vectorizes across the lanes of one site — measured ~2x the
+    # lane-leading layout on CPU.  The (R, ...) state layout is restored
+    # on exit.
+    s = jnp.moveaxis(s, 0, -1)                     # (Bx, By, Bz, R)
+    lanes = jnp.arange(R, dtype=jnp.uint32)        # innermost broadcast
+    one = jnp.uint32(1)
+    i32 = jnp.int32
+    # per-lane accept:  u >= thr[idx],  idx = base + 2c  (in range by the
+    # field bound, so lut_accept's clip is a no-op) — in rank-count form
+    # 2c + count >= lw - base  (monotone rows)
+    rhs = (lw - base.astype(i32))[..., None]
+    flips = jnp.zeros((R,), i32)
+    for t in range(rows.shape[0]):
+        if per_lane_rows:
+            thr = lut[rows[t]]                     # (R, lw) per-lane rows
+        else:
+            # shared staircase entry: hoist the 7 reachable per-site
+            # thresholds T_v = thr[base + 2v] once per sweep (c <= 6), so
+            # each phase needs one where-chain select + ONE compare per
+            # lane instead of the lw-wide rank count — the hot path the
+            # engine benchmark runs
+            thr_row = lut[rows[t]]
+            Ts = [jnp.take(thr_row, jnp.clip(base + 2 * v, 0, lw - 1))
+                  [..., None] for v in range(7)]
+        for c in range(n_colors):
+            b0, b1, b2 = bitplane_ones_count_ref(mw, signs6, nz6, halos_w)
+            # free-running per-lane LFSR columns (no shared randomness)
+            s = s ^ (s << jnp.uint32(13))
+            s = s ^ (s >> jnp.uint32(17))
+            s = s ^ (s << jnp.uint32(5))
+            u = s >> jnp.uint32(8)
+            cnt = (((b0[..., None] >> lanes) & one)
+                   + (((b1[..., None] >> lanes) & one) << one)
+                   + (((b2[..., None] >> lanes) & one) << jnp.uint32(2)))
+            if per_lane_rows:
+                count = jnp.zeros(u.shape, i32)
+                for k in range(lw):
+                    count = count + (u >= thr[:, k]).astype(i32)
+                accept = 2 * cnt.astype(i32) + count >= rhs
+            else:
+                tsel = Ts[6]
+                for v in range(5, -1, -1):
+                    tsel = jnp.where(cnt == jnp.uint32(v), Ts[v], tsel)
+                accept = u >= tsel
+            upd = (accept.astype(jnp.uint32) << lanes).sum(axis=-1) \
+                .astype(jnp.uint32)
+            new = (mw & ~masks_w[c]) | (upd & masks_w[c])
+            diff = mw ^ new
+            flips = flips + ((diff[..., None] >> lanes) & one).astype(i32) \
+                .sum(axis=(0, 1, 2))
+            mw = new
+    return mw, jnp.moveaxis(s, -1, 0), flips
 
 
 def brick_energy_ref(m, active, h, w6, halos):

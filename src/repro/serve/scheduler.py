@@ -18,12 +18,22 @@ Priorities order batch formation (strict: a batch is led by the
 highest-priority queued job, filled only with compatible jobs); FIFO
 within a priority level.  `dsim_dist` derives replica RNG streams jointly
 from one seed, so it is never packed (batches of one).
+
+Bit-plane jobs (``precision="bitplane"``) batch in *lane* units: the
+engine packs replicas into the 32 bit lanes of one uint32 word, so a batch
+never totals more than 32 chains and the executed width clamps up to the
+full word — every bit-plane pack composition reuses the one R=32 compiled
+executable, and pad lanes are throwaway chains exactly like pow2 pad
+replicas.  The precision is already part of :func:`repro.serve.jobs
+.pack_key`, so bit-plane jobs never coalesce with int8/f32 jobs.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, List, Optional, Sequence, Tuple
+
+from repro.engines.base import lanes_of
 
 from .jobs import Job
 
@@ -70,12 +80,16 @@ class Batch:
     def started(self) -> bool:
         return self.cursor is not None
 
-    def relayout(self, pad_pow2: bool, cap: Optional[int] = None):
+    def relayout(self, pad_pow2: bool, cap: Optional[int] = None,
+                 lanes: int = 1):
         """Compute slices / executed width / rank over the batch's jobs
         (called once at formation; batches never shrink — cancelled
         tenants keep their slice and are simply not harvested).  Padding
         never pushes the executed width past ``cap`` — near the cap the
-        batch just runs unpadded."""
+        batch just runs unpadded.  ``lanes > 1`` (the bit-plane word
+        width) additionally clamps the executed width up to a lane
+        multiple, so every pack composition runs the one full-word
+        executable."""
         self.slices, pos = [], 0
         for j in self.jobs:
             self.slices.append((pos, pos + j.spec.replicas))
@@ -83,6 +97,10 @@ class Batch:
         self.r_exec = pos
         if pad_pow2 and (cap is None or ceil_pow2(pos) <= cap):
             self.r_exec = ceil_pow2(pos)
+        if lanes > 1:
+            lane_r = ((self.r_exec + lanes - 1) // lanes) * lanes
+            if cap is None or lane_r <= cap:
+                self.r_exec = lane_r
         self.seq = min(j.seq for j in self.jobs)
         self.priority = max(j.spec.priority for j in self.jobs)
 
@@ -102,14 +120,33 @@ class ReplicaPackingScheduler:
         self.jobs_batched = 0
         self.jobs_packed = 0          # jobs that shared a batch with others
 
-    def r_exec_for(self, engine: str, replicas: int) -> int:
+    def replica_budget(self, precision: str) -> int:
+        """Per-batch (and per-job admission) chain cap: the per-call cap,
+        additionally clamped to the word width for bit-plane jobs (the
+        engine cannot run more lanes than one uint32 word holds).  The
+        server's ``submit`` validates against this same number, so
+        admission never accepts a job the scheduler can't batch."""
+        lanes = lanes_of(precision)
+        if lanes > 1:
+            return min(self.max_replicas_per_call, lanes)
+        return self.max_replicas_per_call
+
+    def r_exec_for(self, engine: str, replicas: int,
+                   precision: str = "f32") -> int:
         """Executed batch width for a pack totalling ``replicas`` chains —
         the pool-key bucketing ``prewarm`` must agree with.  Clamped like
-        :meth:`Batch.relayout`: never padded past the per-call cap."""
+        :meth:`Batch.relayout`: never padded past the per-call cap, and
+        clamped up to a lane multiple for bit-plane jobs."""
+        r = int(replicas)
         if self.pad_pow2 and engine in PACKABLE_ENGINES \
-                and ceil_pow2(replicas) <= self.max_replicas_per_call:
-            return ceil_pow2(replicas)
-        return int(replicas)
+                and ceil_pow2(r) <= self.max_replicas_per_call:
+            r = ceil_pow2(r)
+        lanes = lanes_of(precision)
+        if lanes > 1:
+            lane_r = ((r + lanes - 1) // lanes) * lanes
+            if lane_r <= self.max_replicas_per_call:
+                r = lane_r
+        return r
 
     def next_batch(self, queued: Sequence[Job]) -> Optional[Batch]:
         """The single next batch to run, or None.
@@ -125,11 +162,12 @@ class ReplicaPackingScheduler:
         lead = order[0]
         group = [lead]
         total = lead.spec.replicas
+        budget = self.replica_budget(lead.spec.precision)
         if self.pack and lead.spec.engine in PACKABLE_ENGINES:
             for j in order[1:]:
                 if j.pack_key != lead.pack_key:
                     continue
-                if total + j.spec.replicas > self.max_replicas_per_call:
+                if total + j.spec.replicas > budget:
                     continue
                 group.append(j)
                 total += j.spec.replicas
@@ -138,7 +176,8 @@ class ReplicaPackingScheduler:
         # non-packable engines derive all replica streams from one seed, so
         # pad replicas would perturb the tenant's chains — never pad them
         b.relayout(self.pad_pow2 and lead.spec.engine in PACKABLE_ENGINES,
-                   cap=self.max_replicas_per_call)
+                   cap=self.max_replicas_per_call,
+                   lanes=lanes_of(lead.spec.precision))
         self.batches_formed += 1
         self.jobs_batched += len(group)
         if len(group) > 1:

@@ -42,7 +42,8 @@ import numpy as np
 
 from repro.core.annealing import ea_schedule
 from repro.engines import make_engine
-from repro.engines.base import quantize_record_points, spawn_seeds
+from repro.engines.base import (check_precision, lanes_of,
+                                quantize_record_points, spawn_seeds)
 
 from .jobs import Job, JobSpec, JobStatus, problem_fingerprint, \
     schedule_fingerprint
@@ -139,15 +140,16 @@ class SampleServer:
         if engine != "lattice" and prob.graph is None:
             raise ValueError(f"{engine!r} engine needs a graph-registered "
                              "problem")
-        if precision not in ("f32", "int8"):
-            raise ValueError(f"unknown precision {precision!r}")
-        if precision != "f32" and engine not in ("dsim", "lattice"):
-            raise ValueError(f"precision={precision!r} not supported on "
-                             f"{engine!r}")
-        if replicas < 1 or replicas > self.scheduler.max_replicas_per_call:
+        # same guard the registry applies, surfaced at admission so an
+        # unsupported (engine, precision) pair is a clear submit error,
+        # not a failed job (let alone a downstream shape error)
+        check_precision(engine, precision)
+        r_cap = self.scheduler.replica_budget(precision)
+        if replicas < 1 or replicas > r_cap:
             raise ValueError(
-                f"replicas must be in [1, "
-                f"{self.scheduler.max_replicas_per_call}]")
+                f"replicas must be in [1, {r_cap}]"
+                + (" (bit-plane jobs pack into the 32 lanes of one "
+                   "uint32 word)" if lanes_of(precision) > 1 else ""))
         if sync_every not in ("phase", None) and int(sync_every) < 1:
             raise ValueError(f"sync_every must be >= 1, 'phase', or None; "
                              f"got {sync_every!r}")
@@ -526,7 +528,7 @@ class SampleServer:
         spec = JobSpec(problem=problem, engine=engine, sweeps=int(sweeps),
                        replicas=int(replicas), precision=precision,
                        sync_every=sync_every, schedule=schedule)
-        r_exec = self.scheduler.r_exec_for(engine, replicas)
+        r_exec = self.scheduler.r_exec_for(engine, replicas, precision)
         key, builder = self._engine_key_builder(prob, spec, r_exec)
         sched = schedule if schedule is not None else ea_schedule(int(sweeps))
         pts = self._record_points([None], int(sched.total_sweeps))

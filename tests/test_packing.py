@@ -1,0 +1,102 @@
+"""Property tests for core.packing: the 1-bit wire/site format and the
+32-lane multi-spin word format.
+
+Previously only exercised indirectly through dsim_dist's boundary
+all-gather; these pin the round-trip contract directly — arbitrary (incl.
+non-multiple-of-32 and non-multiple-of-8) lengths via pad_to_multiple,
+empty inputs, and dtype stability.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.packing import (LANE_WIDTH, pack_lanes, pack_pm1,
+                                pad_to_multiple, unpack_lanes, unpack_pm1)
+
+RNG = np.random.default_rng(5)
+
+
+# -- site packing (pack_pm1 / unpack_pm1) -------------------------------------
+
+@pytest.mark.parametrize("n", [1, 5, 7, 8, 9, 24, 31, 33, 100, 257])
+def test_pack_pm1_round_trip_any_length(n):
+    """Non-multiple-of-8 (and of-32) lengths round-trip through the
+    pad-pack-unpack pipeline the halo exchange uses."""
+    x = RNG.choice([-1, 1], size=n).astype(np.int8)
+    npad = pad_to_multiple(n, 8)
+    padded = np.pad(x, (0, npad - n), constant_values=1)
+    packed = pack_pm1(jnp.asarray(padded))
+    assert packed.dtype == jnp.uint8
+    assert packed.shape == (npad // 8,)
+    out = unpack_pm1(packed, n)
+    assert out.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(out), x)
+
+
+def test_pack_pm1_empty():
+    packed = pack_pm1(jnp.zeros((0,), jnp.int8))
+    assert packed.shape == (0,) and packed.dtype == jnp.uint8
+    out = unpack_pm1(packed, 0)
+    assert out.shape == (0,) and out.dtype == jnp.int8
+
+
+def test_pack_pm1_leading_dims_and_reject_ragged():
+    x = jnp.asarray(RNG.choice([-1, 1], size=(3, 2, 16)).astype(np.int8))
+    out = unpack_pm1(pack_pm1(x), 16)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+    with pytest.raises(ValueError):
+        pack_pm1(jnp.zeros((4, 13), jnp.int8))
+
+
+def test_pack_pm1_dtype_stability():
+    """int32 +-1 input still packs to uint8 and unpacks to int8 — the
+    wire dtypes never follow the caller's."""
+    x = jnp.asarray(RNG.choice([-1, 1], size=24).astype(np.int32))
+    packed = pack_pm1(x)
+    assert packed.dtype == jnp.uint8
+    assert unpack_pm1(packed, 24).dtype == jnp.int8
+
+
+# -- lane packing (pack_lanes / unpack_lanes) ---------------------------------
+
+@pytest.mark.parametrize("R", [1, 2, 7, 31, 32])
+def test_pack_lanes_round_trip(R):
+    x = RNG.choice([-1, 1], size=(R, 4, 3, 5)).astype(np.int8)
+    w = pack_lanes(jnp.asarray(x))
+    assert w.dtype == jnp.uint32
+    assert w.shape == (4, 3, 5)
+    out = unpack_lanes(w, R)
+    assert out.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(out), x)
+
+
+def test_pack_lanes_empty_sites():
+    w = pack_lanes(jnp.zeros((4, 0), jnp.int8))
+    assert w.shape == (0,) and w.dtype == jnp.uint32
+    out = unpack_lanes(w, 4)
+    assert out.shape == (4, 0) and out.dtype == jnp.int8
+
+
+def test_pack_lanes_unused_lanes_zero():
+    """Lanes >= R pack to 0 bits — the word tail is inert, so growing the
+    lane count later never reinterprets old words."""
+    x = jnp.asarray(np.ones((3, 8), np.int8))
+    w = np.asarray(pack_lanes(x))
+    assert (w == 0b111).all()
+
+
+def test_pack_lanes_rejects_too_many():
+    with pytest.raises(ValueError):
+        pack_lanes(jnp.ones((LANE_WIDTH + 1, 4), jnp.int8))
+    with pytest.raises(ValueError):
+        unpack_lanes(jnp.zeros((4,), jnp.uint32), LANE_WIDTH + 1)
+
+
+def test_pack_lanes_lane_bit_identity():
+    """Bit r of every word is exactly lane r's spin sign."""
+    R = 9
+    x = RNG.choice([-1, 1], size=(R, 17)).astype(np.int8)
+    w = np.asarray(pack_lanes(jnp.asarray(x)))
+    for r in range(R):
+        np.testing.assert_array_equal((w >> r) & 1, (x[r] > 0))

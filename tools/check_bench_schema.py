@@ -22,16 +22,23 @@ REQUIRED_NUMBERS = [
     "lattice_per_phase_R1_flips_per_s",
     "lattice_fused_R1_flips_per_s",
     "lattice_fused_int8_R1_flips_per_s",
+    "lattice_bitplane_R32_flips_per_s",
     "speedup_fused_R1_vs_seed_dispatch",
     "speedup_int8_vs_f32_fused_R1",
     "engine_speedup_int8_vs_f32_R1",
     "speedup_fused_replica_batch_vs_seed_dispatch",
+    "speedup_bitplane_vs_int8_R8",
+    "speedup_bitplane_vs_int8_R32_per_lane",
 ]
 REQUIRED_KEYS = REQUIRED_NUMBERS + [
     "mode", "problem", "host", "all_paths_flips_per_s",
     "sweeps_per_s_spread", "kernel_int8_vs_f32",
+    "per_lane_flips_per_s", "bitplane_halo_payload",
+    # the aggregate R32-vs-R8 ratio is easy to misread as per-lane; the
+    # record must carry its own disclaimer
+    "speedup_bitplane_vs_int8_R8_note",
 ]
-SPREAD_FIELDS = ("best", "min", "median", "max", "reps")
+SPREAD_FIELDS = ("best", "min", "median", "trimmed_median", "max", "reps")
 
 
 def _finite_positive(name, v, errors):
@@ -66,6 +73,19 @@ def check(payload: dict) -> list:
         if not entry_errors and stats["min"] > stats["best"]:
             entry_errors.append(f"sweeps_per_s_spread[{path}]: min > best")
         errors.extend(entry_errors)
+    for path, v in payload.get("per_lane_flips_per_s", {}).items():
+        _finite_positive(f"per_lane_flips_per_s[{path}]", v, errors)
+    halo = payload.get("bitplane_halo_payload")
+    if isinstance(halo, dict):
+        for f in ("bytes_per_face_site_int8_R32",
+                  "bytes_per_face_site_bitplane_R32", "shrink"):
+            _finite_positive(f"bitplane_halo_payload.{f}", halo.get(f),
+                             errors)
+    # the speedup is only meaningful against a recorded host fingerprint
+    if "speedup_bitplane_vs_int8_R8" in payload and \
+            not isinstance(payload.get("host"), dict):
+        errors.append("speedup_bitplane_vs_int8_R8 recorded without a "
+                      "host fingerprint")
     k2k = payload.get("kernel_int8_vs_f32")
     if isinstance(k2k, dict):
         for side in ("f32_flips_per_s", "int8_flips_per_s"):

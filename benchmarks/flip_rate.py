@@ -133,6 +133,99 @@ def _kernel_head_to_head(L: int, reps: int = 15) -> dict:
     return out
 
 
+def _dist_word_boundary_bench(L: int, sweeps: int, reps: int = 5) -> dict:
+    """Mesh-engine word path: dsim_dist bitplane vs *unpacked* int8 at the
+    same R=32 width on a one-device mesh (measures the engine path without
+    a forced device count; the boundary payload accounting is exact and
+    host-independent).  The bitplane all-gather ships native uint32 words —
+    4 B per boundary site for all 32 chains, zero pack/unpack on the
+    collective path — vs 32 B/site for unpacked int8 planes."""
+    from repro.compat import make_mesh, auto_axes
+    g = ea3d(L, seed=0)
+    col = lattice3d_coloring(L)
+    labels = np.zeros(g.n, np.int32)
+    mesh = make_mesh((1,), ("data",), axis_types=auto_axes(1))
+    mk = lambda prec, **kw: make_engine(
+        "dsim_dist", g, coloring=col, K=1, labels=labels, mesh=mesh,
+        rng="lfsr", precision=prec, replicas=32, **kw)
+    handles = {"dsim_dist_int8_R32": mk("int8", bitpack=False),
+               "dsim_dist_bitplane_R32": mk("bitplane")}
+    sync_of = {k: SYNC for k in handles}
+    spread = _rates_interleaved(handles, sweeps, sync_of, reps=reps)
+    flips = {k: v["best"] * g.n * 32 for k, v in spread.items()}
+    payloads = {k: h.eng.boundary_payload() for k, h in handles.items()}
+    return {
+        "L": L, "N": g.n, "replicas": 32, "sync_every": SYNC,
+        "sweeps_per_s_spread": spread,
+        "lane_flips_per_s": flips,
+        "speedup_bitplane_vs_int8_unpacked":
+            flips["dsim_dist_bitplane_R32"] / flips["dsim_dist_int8_R32"],
+        # the wire format the tentpole gates: bytes one device publishes
+        # per boundary site covering ALL 32 chains
+        "boundary_bytes_per_site_bitplane_R32":
+            payloads["dsim_dist_bitplane_R32"]["bytes_per_site_all_chains"],
+        "boundary_bytes_per_site_int8_unpacked_R32":
+            payloads["dsim_dist_int8_R32"]["bytes_per_site_all_chains"],
+        "boundary_shrink":
+            payloads["dsim_dist_int8_R32"]["bytes_per_site_all_chains"]
+            / payloads["dsim_dist_bitplane_R32"]["bytes_per_site_all_chains"],
+        "payload_dtype": payloads["dsim_dist_bitplane_R32"]["dtype"],
+        "pack_compute_bitplane":
+            payloads["dsim_dist_bitplane_R32"]["pack_compute"],
+    }
+
+
+def _apt_packed_bench(reps: int = 5, sweeps: int = 24) -> dict:
+    """Lane-packed APT+ICM vs the unpacked fixed-point ladder it is
+    bit-identical to: a (chains=4) x (temperatures=8) grid = all 32 word
+    lanes.  Also times the replica-exchange swap move in isolation — the
+    packed move is one lane permutation (bit gather/scatter) per offset
+    pass applied to every word, vs the unpacked (P, T, N) where-chain."""
+    import jax
+    from repro.core.apt_icm import APTICM
+
+    g = ea3d(4, seed=0)
+    col = lattice3d_coloring(4)
+    betas = np.linspace(0.5, 3.0, 8)
+    un = APTICM(g, col, betas, chains=4, rng="lfsr")
+    pk = APTICM(g, col, betas, chains=4, rng="lfsr", packed=True)
+    engines = {"apt_icm_unpacked": un, "apt_icm_packed": pk}
+    for eng in engines.values():                  # compile outside the reps
+        eng.run(eng.init_state(seed=0), 2, icm_every=2, record_every=2)
+    vals = {k: [] for k in engines}
+    for _ in range(reps):
+        for k, eng in engines.items():
+            st = eng.init_state(seed=0)
+            t0 = time.perf_counter()
+            eng.run(st, sweeps, icm_every=8, record_every=sweeps)
+            vals[k].append(sweeps / (time.perf_counter() - t0))
+    # the swap move alone, jitted, per call (best over reps)
+    su, sp = un.init_state(seed=0), pk.init_state(seed=0)
+    f_un = jax.jit(lambda m, E, k, s: un._exchange(m, E, k, s))
+    f_pk = jax.jit(lambda w, E, k, s: pk._exchange_packed(w, E, k, s))
+    jax.block_until_ready(f_un(su.m, su.E, su.key, su.swaps))
+    jax.block_until_ready(f_pk(sp.m, sp.E, sp.key, sp.swaps))
+    swap = {}
+    for name, fn, st in (("unpacked_s", f_un, su), ("packed_s", f_pk, sp)):
+        ts = []
+        for _ in range(max(reps, 3)):
+            t0 = time.perf_counter()
+            for _ in range(16):
+                o = fn(st.m, st.E, st.key, st.swaps)
+            jax.block_until_ready(o[0])
+            ts.append((time.perf_counter() - t0) / 16)
+        swap[name] = float(np.min(ts))
+    return {
+        "N": g.n, "chains": 4, "temperatures": 8, "lanes": 32,
+        "sweeps": sweeps,
+        "packed_sweeps_per_s": _stats(vals["apt_icm_packed"]),
+        "unpacked_sweeps_per_s": _stats(vals["apt_icm_unpacked"]),
+        "speedup_packed_vs_unpacked":
+            max(vals["apt_icm_packed"]) / max(vals["apt_icm_unpacked"]),
+        "swap_move_cost": swap,
+    }
+
+
 def run(quick: bool = True, engine: str = None, replicas: int = 1):
     L = 8 if quick else 16
     sweeps = 1024 if quick else 8192
@@ -210,6 +303,14 @@ def run(quick: bool = True, engine: str = None, replicas: int = 1):
     if engine in (None, "lattice"):
         k2k = _kernel_head_to_head(16 if quick else 32)
 
+    # the word-lane mesh-engine path and the lane-packed tempering ladder
+    # (cheap at quick size; part of the gated record, so they run whenever
+    # the record below will be written)
+    dist_word = apt_packed = None
+    if R == 1 and engine in (None, "lattice"):
+        dist_word = _dist_word_boundary_bench(L, max(sweeps // 4, 256))
+        apt_packed = _apt_packed_bench()
+
     flips = {k: v * n * rep_of[k] for k, v in out.items()}
     detail = {"L": L, "N": n, "replicas": rep_of, "sync_every": sync_used,
               "host": host_fingerprint(),
@@ -220,6 +321,10 @@ def run(quick: bool = True, engine: str = None, replicas: int = 1):
             flips["lattice_kernel"] / flips["lattice_per_phase"])
     if k2k is not None:
         detail["kernel_int8_vs_f32"] = k2k
+    if dist_word is not None:
+        detail["dsim_dist_bitplane"] = dist_word
+    if apt_packed is not None:
+        detail["apt_icm_packed"] = apt_packed
     save_detail("flip_rate", detail)
 
     # the seed-comparison record is only meaningful for the canonical R=1
@@ -306,6 +411,13 @@ def run(quick: bool = True, engine: str = None, replicas: int = 1):
                 "bytes_per_face_site_bitplane_R32": 4,
                 "shrink": 8.0,
             },
+            # the same word wire format on the mesh engine: the boundary
+            # all-gather ships native uint32 words (4 B/site for all 32
+            # chains, zero pack/unpack in the collective chunk) — plus the
+            # lane-packed APT+ICM ladder, whose swap moves are lane
+            # permutations (cost recorded per move)
+            "dsim_dist_bitplane": dist_word,
+            "apt_icm_packed": apt_packed,
             "all_paths_flips_per_s": flips,
             # min/median/max + trimmed median sweeps/s over the interleaved
             # reps of each path: a speedup whose intervals overlap is

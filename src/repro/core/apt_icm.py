@@ -12,6 +12,24 @@ The temperature ladder is placed adaptively (``adapt_ladder``): pilot runs
 estimate the energy fluctuation sigma_E(beta) and betas are spaced so that
 d_beta * sigma_E is roughly constant — the constant-acceptance rule used by
 the APT preprocessing of Ref. [72].
+
+Three execution modes share the algorithm:
+
+* ``rng="philox"`` (default) — the floating reference: f32 fields,
+  tanh + uniform compare.
+* ``rng="lfsr"`` — the fixed-point pipeline: int8 quantized couplings,
+  int32 field accumulation, one per-(p-bit, chain, temperature) xorshift32
+  LFSR, and the accept as a LUT-threshold compare of the raw 24-bit draw
+  (one LUT row per ladder temperature).
+* ``packed=True`` (requires ``rng="lfsr"``) — the whole (chains x
+  temperatures) grid rides the bit lanes of uint32 words: lane
+  ``l = p*T + t`` is chain p at temperature t, the sweep runs the XOR /
+  carry-save-adder word field with a per-lane LUT-row fan, replica-exchange
+  swap moves become *lane permutations* (one bit gather/scatter applied to
+  every word, :func:`repro.core.packing.lane_permute`), and the ICM
+  disagreement set is one XOR of each word against its chain-pair shift.
+  Packed trajectories are bit-identical to the unpacked ``rng="lfsr"`` run
+  at matched seeds.
 """
 
 from __future__ import annotations
@@ -27,8 +45,13 @@ import numpy as np
 from .graph import IsingGraph
 from .coloring import Coloring
 from .gibbs import color_fields
-from .pbit import FixedPoint, quantize
+from .pbit import (FixedPoint, LUT_SELECT_MAX_WIDTH, bitplane_planes,
+                   field_bound, lfsr_init, lfsr_next, quantize,
+                   quantize_couplings, threshold_lut)
+from .packing import LANE_WIDTH, lane_permute, lane_shifts, pack_lanes, \
+    unpack_lanes
 from .energy import energy as direct_energy
+from repro.kernels.ops import bitplane_gather_count_op
 
 __all__ = ["APTICM", "APTState", "adapt_ladder"]
 
@@ -36,46 +59,104 @@ __all__ = ["APTICM", "APTState", "adapt_ladder"]
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class APTState:
-    m: jnp.ndarray       # (P, T, N) int8
+    m: jnp.ndarray       # (P, T, N) int8 — or (N,) uint32 words when packed
     E: jnp.ndarray       # (P, T) f32
-    key: jnp.ndarray
+    key: jnp.ndarray     # philox stream (exchange/ICM draws in every mode)
     sweep: jnp.ndarray
     swaps: jnp.ndarray   # accepted exchange count
     icms: jnp.ndarray    # performed cluster moves
+    lfsr: Optional[jnp.ndarray] = None   # (P, T, N) | (L, N) uint32 states
 
 
 class APTICM:
     def __init__(self, g: IsingGraph, coloring: Coloring, betas: np.ndarray,
-                 chains: int = 2, fmt: Optional[FixedPoint] = None):
+                 chains: int = 2, fmt: Optional[FixedPoint] = None,
+                 rng: str = "philox", packed: bool = False):
         if chains % 2 != 0:
             raise ValueError("chains must be even (ICM pairs)")
+        if rng not in ("philox", "lfsr"):
+            raise ValueError(f"unknown rng {rng!r}")
+        if packed and rng != "lfsr":
+            raise ValueError("packed=True runs the fixed-point word "
+                             "pipeline; it needs rng='lfsr'")
         self.g = g
         self.betas = jnp.asarray(betas, jnp.float32)   # (T,)
         self.T = len(betas)
         self.P = chains
+        self.L = self.P * self.T          # word lanes of the packed grid
         self.fmt = fmt
+        self.rng_kind = rng
+        self.packed = bool(packed)
+        if packed and self.L > LANE_WIDTH:
+            raise ValueError(
+                f"packed mode rides the {LANE_WIDTH} bit lanes of one "
+                f"uint32 word; chains*temperatures = {self.L} exceeds it")
         self.n = g.n
         self._nodes = [jnp.asarray(grp) for grp in coloring.groups]
         self._idx = [jnp.take(g.idx, grp, axis=0) for grp in self._nodes]
         self._w = [jnp.take(g.w, grp, axis=0) for grp in self._nodes]
         self._h = [jnp.take(g.h, grp) for grp in self._nodes]
+        if rng == "lfsr":
+            h_q, (w_q,), self.q_scale = quantize_couplings(g.h, (g.w,))
+            wq = np.asarray(w_q)
+            dirs = tuple(wq[:, d] for d in range(wq.shape[-1]))
+            self.f_max = field_bound(h_q, dirs)
+            lut = threshold_lut(np.asarray(betas), self.q_scale, self.f_max,
+                                fmt=fmt)
+            self._lut = jnp.asarray(lut)               # (T, 2*f_max+1)
+            self._w_q = [jnp.take(w_q, grp, axis=0) for grp in self._nodes]
+            self._h_q = [jnp.take(h_q, grp) for grp in self._nodes]
+            # unpacked per-temperature threshold rows, broadcast-ready
+            # against (P, T, nc) fields
+            self._thr_T = self._lut[None, :, None, :]
+        if packed:
+            signs, nz, base, _ = bitplane_planes(h_q, dirs)
+            signs_nd = jnp.stack(signs, axis=-1)       # (N, D) uint32
+            nz_nd = jnp.stack(nz, axis=-1)
+            self._signs = [jnp.take(signs_nd, grp, axis=0)
+                           for grp in self._nodes]
+            self._nz = [jnp.take(nz_nd, grp, axis=0) for grp in self._nodes]
+            self._base = [jnp.take(base, grp) for grp in self._nodes]
+            # per-lane LUT-row fan: lane l = p*T + t reads row t
+            lane_rows = np.tile(np.arange(self.T), self.P)
+            self._thr_lanes = self._lut[jnp.asarray(lane_rows)][:, None, :]
+            # even-chain lane ids (the ICM pair anchors): lane(2p, t); the
+            # paired chain sits T lanes up — lane(2p+1, t) = lane(2p, t) + T
+            even = np.asarray([[2 * p * self.T + t for t in range(self.T)]
+                               for p in range(self.P // 2)], np.uint32)
+            self._even_sh = jnp.asarray(even)[:, :, None]    # (P/2, T, 1)
+            self._even_mask = jnp.uint32(
+                int(np.bitwise_or.reduce(np.uint64(1) << even.reshape(-1)
+                                         .astype(np.uint64))))
         self._step = jax.jit(self._step_impl, static_argnames=("do_icm",))
 
     # -- init ------------------------------------------------------------------
 
     def init_state(self, seed: int = 0) -> APTState:
+        """Fresh state; the initial spins (and hence energies) are derived
+        identically in every mode, so packed and unpacked-lfsr runs start
+        from the same configurations at the same seed."""
         key = jax.random.PRNGKey(seed)
         key, sub = jax.random.split(key)
         m = jnp.where(jax.random.bernoulli(sub, 0.5, (self.P, self.T, self.n)),
                       1, -1).astype(jnp.int8)
         E = jax.vmap(jax.vmap(lambda mm: direct_energy(self.g, mm)))(m)
         zero = jnp.zeros((), jnp.int32)
-        return APTState(m=m, E=E, key=key, sweep=zero, swaps=zero, icms=zero)
+        lfsr = None
+        if self.rng_kind == "lfsr":
+            lfsr = lfsr_init(self.L * self.n, seed)
+            lfsr = lfsr.reshape(self.L, self.n) if self.packed else \
+                lfsr.reshape(self.P, self.T, self.n)
+        if self.packed:
+            m = pack_lanes(m.reshape(self.L, self.n))      # (N,) words
+        return APTState(m=m, E=E, key=key, sweep=zero, swaps=zero,
+                        icms=zero, lfsr=lfsr)
 
     # -- one replica-sweep over all (P, T) -----------------------------------------
     # The (P, T) chain/temperature grid IS a replica axis: every color phase
     # rides the same shared gather path as the engine layer's batched chains
-    # (repro.core.gibbs.color_fields), with a per-replica beta.
+    # (repro.core.gibbs.color_fields), with a per-replica beta — and in
+    # packed mode the whole grid is 32 bit lanes of one word per site.
 
     def _gibbs_sweep(self, m, E, key):
         beta = self.betas[None, :, None]                     # (1, T, 1)
@@ -91,6 +172,80 @@ class APTICM:
             E = E - ((new - old).astype(jnp.float32) * field).sum(axis=-1)
             m = m.at[:, :, nodes].set(new)
         return m, E, key
+
+    def _accept_rows(self, thr, field, u):
+        """LUT accept with broadcast per-row thresholds (the per-lane /
+        per-temperature fan form of :func:`repro.core.pbit.lut_accept`):
+        rank-count against each row's entries, valid because rows are
+        monotone nonincreasing in the field index.  Wide rows (non-+-J
+        couplings blow f_max up to int8 magnitudes) fall back to a gather,
+        mirroring ``lut_accept``'s cap, so the unroll never exceeds
+        ``LUT_SELECT_MAX_WIDTH`` compares per phase."""
+        lw = int(thr.shape[-1])
+        idx = jnp.clip(field + self.f_max, 0, lw - 1)
+        if lw <= LUT_SELECT_MAX_WIDTH:
+            count = jnp.zeros(u.shape, jnp.int32)
+            for k in range(lw):
+                count = count + (u >= thr[..., k]).astype(jnp.int32)
+            return idx + count >= lw
+        return u >= jnp.take_along_axis(
+            jnp.broadcast_to(thr, u.shape + (lw,)), idx[..., None],
+            axis=-1)[..., 0]
+
+    def _gibbs_sweep_int(self, m, E, lfsr):
+        """Unpacked fixed-point sweep: integer fields, per-(p,t,site) LFSR
+        draws, per-temperature LUT rows.  The reference the packed word
+        sweep is bit-identical to."""
+        scale = jnp.float32(self.q_scale)
+        i32 = jnp.int32
+        for c in range(len(self._nodes)):
+            nodes, idx = self._nodes[c], self._idx[c]
+            nbr = m[:, :, idx].astype(i32)                   # (P, T, nc, D)
+            field = self._h_q[c].astype(i32) + \
+                (self._w_q[c].astype(i32) * nbr).sum(axis=-1)
+            s = lfsr[:, :, nodes]
+            s = lfsr_next(s)
+            lfsr = lfsr.at[:, :, nodes].set(s)
+            u = s >> jnp.uint32(8)
+            accept = self._accept_rows(self._thr_T, field, u)
+            old = m[:, :, nodes]
+            new = jnp.where(accept, 1, -1).astype(jnp.int8)
+            E = E - ((new - old).astype(jnp.float32)
+                     * field.astype(jnp.float32)).sum(axis=-1) * scale
+            m = m.at[:, :, nodes].set(new)
+        return m, E, lfsr
+
+    def _gibbs_sweep_packed(self, mw, E, lfsr):
+        """Word sweep: XOR sign application + carry-save adder tree for the
+        per-lane field, per-lane LFSR columns, per-lane LUT-row fan."""
+        scale = jnp.float32(self.q_scale)
+        lanes = lane_shifts(self.L, 1)                       # (L, 1)
+        one = jnp.uint32(1)
+        i32 = jnp.int32
+        Ef = E.reshape(-1)                                   # (L,)
+        for c in range(len(self._nodes)):
+            nodes = self._nodes[c]
+            counts = bitplane_gather_count_op(
+                mw, self._idx[c], self._signs[c], self._nz[c])
+            s = lfsr[:, nodes]
+            s = lfsr_next(s)
+            lfsr = lfsr.at[:, nodes].set(s)
+            u = s >> jnp.uint32(8)                           # (L, nc)
+            cnt = jnp.zeros(u.shape, i32)
+            for i, b in enumerate(counts):
+                cnt = cnt + (((b[None, :] >> lanes) & one)
+                             << jnp.uint32(i)).astype(i32)
+            field = self._base[c][None, :] - self.f_max + 2 * cnt
+            accept = self._accept_rows(self._thr_lanes, field, u)
+            oldb = (mw[nodes][None, :] >> lanes) & one
+            old = jnp.where(oldb != 0, 1, -1)
+            new = jnp.where(accept, 1, -1)
+            Ef = Ef - ((new - old).astype(jnp.float32)
+                       * field.astype(jnp.float32)).sum(axis=-1) * scale
+            upd = (accept.astype(jnp.uint32) << lanes).sum(axis=0) \
+                .astype(jnp.uint32)
+            mw = mw.at[nodes].set(upd)
+        return mw, Ef.reshape(self.P, self.T), lfsr
 
     # -- replica exchange ---------------------------------------------------------
 
@@ -112,14 +267,54 @@ class APTICM:
             E = E.at[:, t0].set(e0).at[:, t0 + 1].set(e1)
         return m, E, key, swaps
 
+    def _exchange_packed(self, mw, E, key, swaps):
+        """Replica exchange as a lane permutation: the accepted swap set of
+        one offset pass is ONE permutation of the word lanes (a bit
+        gather/scatter applied to every site's word) plus the matching
+        permutation of the per-lane energies — the per-lane LUT rows stay
+        pinned to their lane's temperature, so no state re-labeling is
+        needed.  Acceptance draws consume the philox key exactly like the
+        unpacked pass (same shapes, same order), keeping the two modes
+        bit-identical."""
+        for offset in (0, 1):
+            t0 = jnp.arange(offset, self.T - 1, 2)
+            b0, b1 = self.betas[t0], self.betas[t0 + 1]
+            E0, E1 = E[:, t0], E[:, t0 + 1]                  # (P, |pairs|)
+            key, sub = jax.random.split(key)
+            u = jax.random.uniform(sub, E0.shape)
+            acc = u < jnp.exp(jnp.clip((b1 - b0) * (E1 - E0), -50.0, 50.0))
+            swaps = swaps + acc.sum().astype(jnp.int32)
+            l0 = (jnp.arange(self.P, dtype=jnp.int32)[:, None] * self.T
+                  + t0[None, :].astype(jnp.int32)).reshape(-1)
+            accf = acc.reshape(-1)
+            perm = jnp.arange(self.L, dtype=jnp.int32)
+            perm = perm.at[l0].set(jnp.where(accf, l0 + 1, l0))
+            perm = perm.at[l0 + 1].set(jnp.where(accf, l0, l0 + 1))
+            mw = lane_permute(mw, perm)
+            E = E.reshape(-1)[perm].reshape(self.P, self.T)
+        return mw, E, key, swaps
+
     # -- isoenergetic cluster move ---------------------------------------------------
+
+    def _grow_cluster(self, cluster0, disagree):
+        """Expand a seed cluster through nonzero couplings, confined to the
+        disagreement set, to a fixed point."""
+        g = self.g
+
+        def grow(state):
+            cl, _ = state
+            src = cl[:, :, g.idx]                            # (P/2, T, N, D)
+            reach = (src & (g.w != 0)[None, None]).any(axis=-1)
+            new = cl | (reach & disagree)
+            return new, (new != cl).any()
+
+        return jax.lax.while_loop(lambda s: s[1], grow,
+                                  (cluster0, jnp.bool_(True)))[0]
 
     def _icm(self, m, E, key, icms):
         """Houdayer move between chain pairs (2p, 2p+1) at every temperature."""
-        g = self.g
         m1, m2 = m[0::2], m[1::2]                            # (P/2, T, N)
-        q = (m1 * m2).astype(jnp.int8)
-        disagree = q < 0                                     # (P/2, T, N)
+        disagree = (m1 * m2) < 0                             # (P/2, T, N)
         key, sub = jax.random.split(key)
         # random seed site among disagreements (fallback 0 if none)
         scores = jax.random.uniform(sub, disagree.shape) * disagree
@@ -128,40 +323,63 @@ class APTICM:
 
         cluster0 = jax.nn.one_hot(seed_site, self.n, dtype=jnp.bool_) \
             & disagree
-
-        def grow(state):
-            cl, _ = state
-            # neighbor expansion through nonzero couplings
-            nbr_any = jnp.zeros_like(cl)
-            src = cl[:, :, g.idx]                            # (P/2, T, N, D)
-            reach = (src & (g.w != 0)[None, None]).any(axis=-1)
-            new = cl | (reach & disagree)
-            return new, (new != cl).any()
-
-        def cond(state):
-            return state[1]
-
-        cluster, _ = jax.lax.while_loop(cond, grow, (cluster0, jnp.bool_(True)))
+        cluster = self._grow_cluster(cluster0, disagree)
         flip = cluster & any_dis[:, :, None]
         fl = jnp.where(flip, -1, 1).astype(jnp.int8)
         m1n, m2n = m1 * fl, m2 * fl
         mn = m.at[0::2].set(m1n).at[1::2].set(m2n)
-        En = jax.vmap(jax.vmap(lambda mm: direct_energy(self.g, mm)))(
-            mn.reshape(-1, self.n).reshape(self.P, self.T, self.n))
+        En = jax.vmap(jax.vmap(lambda mm: direct_energy(self.g, mm)))(mn)
         icms = icms + any_dis.sum().astype(jnp.int32)
         return mn, En, key, icms
+
+    def _icm_packed(self, mw, E, key, icms):
+        """Houdayer move on XOR'd disagreement words: bit l (an even-chain
+        lane) of ``mw ^ (mw >> T)`` is set exactly where chain pair
+        (2p, 2p+1) disagrees at temperature t — one shift+XOR per word
+        replaces the (P/2, T, N) spin-product of the unpacked path.  The
+        cluster flip is one more XOR against both lanes of each pair."""
+        T = self.T
+        one = jnp.uint32(1)
+        dw = (mw ^ (mw >> jnp.uint32(T))) & self._even_mask  # (N,)
+        disagree = ((dw[None, None, :] >> self._even_sh) & one) \
+            .astype(bool)                                    # (P/2, T, N)
+        key, sub = jax.random.split(key)
+        scores = jax.random.uniform(sub, disagree.shape) * disagree
+        seed_site = jnp.argmax(scores.reshape(*disagree.shape[:2], -1),
+                               axis=-1)
+        any_dis = disagree.any(axis=-1)
+        cluster0 = jax.nn.one_hot(seed_site, self.n, dtype=jnp.bool_) \
+            & disagree
+        cluster = self._grow_cluster(cluster0, disagree)
+        flip = cluster & any_dis[:, :, None]
+        fw = (flip.astype(jnp.uint32) << self._even_sh).sum(axis=(0, 1))
+        mw = mw ^ (fw | (fw << jnp.uint32(T)))               # flip both lanes
+        spins = unpack_lanes(mw, self.L).reshape(self.P, self.T, self.n)
+        En = jax.vmap(jax.vmap(lambda mm: direct_energy(self.g, mm)))(spins)
+        icms = icms + any_dis.sum().astype(jnp.int32)
+        return mw, En, key, icms
 
     # -- scan step --------------------------------------------------------------------
 
     def _step_impl(self, state: APTState, do_icm: bool) -> APTState:
-        m, E, key = state.m, state.E, state.key
-        m, E, key = self._gibbs_sweep(m, E, key)
-        m, E, key, swaps = self._exchange(m, E, key, state.swaps)
-        icms = state.icms
-        if do_icm:
-            m, E, key, icms = self._icm(m, E, key, icms)
+        m, E, key, lfsr = state.m, state.E, state.key, state.lfsr
+        if self.packed:
+            m, E, lfsr = self._gibbs_sweep_packed(m, E, lfsr)
+            m, E, key, swaps = self._exchange_packed(m, E, key, state.swaps)
+            icms = state.icms
+            if do_icm:
+                m, E, key, icms = self._icm_packed(m, E, key, icms)
+        else:
+            if self.rng_kind == "lfsr":
+                m, E, lfsr = self._gibbs_sweep_int(m, E, lfsr)
+            else:
+                m, E, key = self._gibbs_sweep(m, E, key)
+            m, E, key, swaps = self._exchange(m, E, key, state.swaps)
+            icms = state.icms
+            if do_icm:
+                m, E, key, icms = self._icm(m, E, key, icms)
         return APTState(m=m, E=E, key=key, sweep=state.sweep + 1,
-                        swaps=swaps, icms=icms)
+                        swaps=swaps, icms=icms, lfsr=lfsr)
 
     def run(self, state: APTState, sweeps: int, icm_every: int = 10,
             record_every: int = 10):
@@ -174,10 +392,17 @@ class APTICM:
                 ts.append(t)
         return state, (np.asarray(ts), np.asarray(best))
 
+    def spins(self, state: APTState) -> jnp.ndarray:
+        """(P, T, N) int8 spins in every mode (packed states unpack)."""
+        if self.packed:
+            return unpack_lanes(state.m, self.L).reshape(
+                self.P, self.T, self.n)
+        return state.m
+
     def best_config(self, state: APTState) -> Tuple[np.ndarray, float]:
         E = np.asarray(state.E)
         p, t = np.unravel_index(np.argmin(E), E.shape)
-        return np.asarray(state.m[p, t]), float(E[p, t])
+        return np.asarray(self.spins(state)[p, t]), float(E[p, t])
 
 
 def adapt_ladder(g: IsingGraph, coloring: Coloring, beta_min: float,

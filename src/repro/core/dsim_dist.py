@@ -2,7 +2,7 @@
 
 Each mesh device hosts one partition: local spins, shadow weights, and ghost
 slots live device-local; the *only* collective during sampling is the
-boundary-state exchange — an all-gather of 1-bit-packed boundary spins, every
+boundary-state exchange — an all-gather of the boundary spins, every
 ``sync_every`` sweeps.  This is the TPU-native realization of the paper's
 "devices exchange nothing but 1-bit boundary states".
 
@@ -15,6 +15,26 @@ construction).  The replica axis sits between the partition axis and the
 site axis — (K, R, n_max) — so the partition axis stays the sharded leading
 dim and all R boundary payloads of one exchange travel in a single
 all-gather.  R=1 states are bitwise identical to the legacy layout.
+
+Precisions (mirroring the stacked engine plus the lattice engine's word
+format):
+
+* ``"f32"`` — floating reference (tanh + float compare; Philox or LFSR;
+  boundary payloads bit-packed uint8 per replica by default).
+* ``"int8"`` — the fixed-point pipeline: int8 shadow couplings, int32 field
+  accumulation, LUT-threshold accepts against the raw 24-bit LFSR draw.
+  Replica streams are seeded per replica (:func:`spawn_seeds`), so replica
+  r is bitwise identical to replica r of the stacked int8 engine and is
+  *prefix-stable* in R (growing the batch never reshuffles existing
+  chains).
+* ``"bitplane"`` — multi-spin coding over the int8 substrate: spins stored
+  as (K, n_max) uint32 word planes with up to 32 replica lanes per word.
+  The boundary all-gather ships the *native words* — 4 B per boundary site
+  for all 32 chains, with ZERO pack/unpack compute on the collective path
+  (a word slice IS the wire payload) — and the phase update runs the
+  bit-sliced carry-save adder tree over XOR'd sign planes with per-lane
+  LFSR columns and the same LUT accept.  Lane r is bit-identical to
+  replica r of the unpacked int8 path at matched seeds.
 """
 
 from __future__ import annotations
@@ -29,11 +49,17 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .dsim import PartitionedProblem, DSIMState
-from .pbit import FixedPoint, quantize, lfsr_init, lfsr_next, lfsr_uniform
-from .packing import pack_pm1, unpack_pm1, pad_to_multiple
+from .annealing import ArraySchedule, beta_row_indices, beta_table
+from .pbit import (FixedPoint, bitplane_planes, field_bound, lfsr_init,
+                   lfsr_next, lfsr_uniform, lut_accept, quantize,
+                   quantize_couplings, threshold_lut_cached)
+from .packing import pack_pm1, unpack_pm1, pad_to_multiple, pack_lanes, \
+    unpack_lanes, lane_shifts
 from .energy import energy as direct_energy
 from repro.compat import shard_map
-from repro.engines.base import RecordedCursor, run_recorded_driver
+from repro.engines.base import (LANE_WIDTH, RecordedCursor,
+                                run_recorded_driver, spawn_seeds)
+from repro.kernels.ops import bitplane_gather_count_op
 
 __all__ = ["DistDSIMEngine"]
 
@@ -47,7 +73,7 @@ class DistDSIMEngine:
                  axis: Union[str, tuple] = "data",
                  rng: str = "philox", fmt: Optional[FixedPoint] = None,
                  mode: str = "dsim", bitpack: bool = True,
-                 replicas: int = 1):
+                 replicas: int = 1, precision: str = "f32"):
         axis_tuple = (axis,) if isinstance(axis, str) else tuple(axis)
         ndev = int(np.prod([mesh.shape[a] for a in axis_tuple]))
         if ndev != prob.K:
@@ -56,17 +82,32 @@ class DistDSIMEngine:
             raise ValueError(mode)
         if replicas < 1:
             raise ValueError("replicas must be >= 1")
+        if precision not in ("f32", "int8", "bitplane"):
+            raise ValueError(f"unknown precision {precision!r}")
+        if precision != "f32" and (rng != "lfsr" or mode != "dsim"):
+            # the fixed-point/word paths are the hardware pipeline: per-p-bit
+            # LFSRs (the LUT thresholds the raw 24-bit draw) and
+            # instantaneous +-1 ghosts (cmft's fractional window-means fit
+            # neither integer fields nor 1-bit lanes)
+            raise ValueError(
+                f"precision={precision!r} needs rng='lfsr', mode='dsim'")
+        if precision == "bitplane" and replicas > LANE_WIDTH:
+            raise ValueError(
+                f"precision='bitplane' packs replicas into the {LANE_WIDTH} "
+                f"bit lanes of one uint32 word; replicas must be in "
+                f"[1, {LANE_WIDTH}], got {replicas}")
         self.p = prob
         self.mesh = mesh
         self.axis = axis_tuple if len(axis_tuple) > 1 else axis_tuple[0]
         self.rng_kind = rng
         self.fmt = fmt
         self.mode = mode
+        self.precision = precision
         self.replicas = int(replicas)
         self.n_sites = prob.n
         # bit-packing needs b_max % 8 == 0; re-pad the packed pool coords
         self.b_pad = pad_to_multiple(prob.b_max, 8)
-        self.bitpack = bitpack and mode == "dsim"
+        self.bitpack = bitpack and mode == "dsim" and precision == "f32"
         self._shard = NamedSharding(mesh, P(self.axis))
         self._repl = NamedSharding(mesh, P())
         self._chunk_cache = {}
@@ -80,15 +121,70 @@ class DistDSIMEngine:
         self._ghost_src_pool = jnp.asarray((gk * self.b_pad + gc).astype(np.int32))
 
         self._consts = dict(
-            local_idx=prob.local_idx, local_w=prob.local_w, local_h=prob.local_h,
+            local_idx=prob.local_idx,
             color_slots=prob.color_slots, color_mask=prob.color_mask,
             bnd_slots=self._bnd_slots, ghost_src_pool=self._ghost_src_pool,
         )
+        if precision == "f32":
+            self._consts.update(local_w=prob.local_w, local_h=prob.local_h)
+        else:
+            h_q, (w_q,), self.q_scale = quantize_couplings(
+                prob.local_h, (prob.local_w,))
+            wq = np.asarray(w_q)
+            self.f_max = field_bound(
+                h_q, tuple(wq[..., d] for d in range(wq.shape[-1])))
+            self._lut_cache = {}
+            if precision == "int8":
+                self._consts.update(local_h_q=h_q, local_w_q=w_q)
+            else:
+                # per-direction sign/nonzero word planes + the lane-
+                # independent LUT-column base (validates |w_q| <= 1)
+                signs, nz, base, _ = bitplane_planes(
+                    h_q, tuple(wq[..., d] for d in range(wq.shape[-1])))
+                self._consts.update(
+                    bp_signs=jnp.stack(signs, axis=-1),   # (K, n_max, D)
+                    bp_nz=jnp.stack(nz, axis=-1),
+                    bp_base=base)                          # (K, n_max)
+
+    def _lut_for(self, table: np.ndarray) -> jnp.ndarray:
+        return threshold_lut_cached(self._lut_cache, table, self.q_scale,
+                                    self.f_max, fmt=self.fmt)
 
     # -- state ------------------------------------------------------------------
 
     def init_state(self, seed: int = 0) -> DSIMState:
         p, R = self.p, self.replicas
+        if self.precision != "f32":
+            # per-replica seeding: replica r's spins and LFSR column depend
+            # on spawn_seeds(seed, R)[r] alone, exactly like the stacked
+            # int8 engine's batched init — so dist int8 replica r is
+            # bitwise the stacked replica r, bitplane lane r is bitwise the
+            # unpacked replica r, and lanes are prefix-stable in R
+            ms, rngs = [], []
+            for s_r in spawn_seeds(seed, R):
+                key, sub = jax.random.split(jax.random.PRNGKey(s_r))
+                ms.append(jnp.where(
+                    jax.random.bernoulli(sub, 0.5, (p.K, p.n_max)),
+                    1, -1).astype(jnp.int8))
+                rngs.append(lfsr_init(p.K * p.n_max, s_r).reshape(p.K,
+                                                                  p.n_max))
+            m_r = jnp.stack(ms)                              # (R, K, n_max)
+            rng = jnp.stack(rngs).transpose(1, 0, 2)         # (K, R, n_max)
+            zero = jnp.zeros((), dtype=jnp.int32)
+            flips = jnp.zeros((R,), jnp.int32)
+            if self.precision == "bitplane":
+                mw = pack_lanes(m_r)                         # (K, n_max)
+                ghosts = mw.reshape(-1)[p.ghost_src]         # (K, g_max)
+                st = DSIMState(m=mw, ghosts=ghosts,
+                               macc=jnp.zeros((p.K, 1), jnp.float32),
+                               rng=rng, sweep=zero, flips=flips)
+            else:
+                m = m_r.transpose(1, 0, 2)                   # (K, R, n_max)
+                st = DSIMState(m=m, ghosts=self._exchange_host(m),
+                               macc=jnp.zeros((p.K, R, p.n_max),
+                                              jnp.float32),
+                               rng=rng, sweep=zero, flips=flips)
+            return self.shard_state(st)
         key = jax.random.PRNGKey(seed)
         key, sub = jax.random.split(key)
         m = jnp.where(jax.random.bernoulli(sub, 0.5, (p.K, R, p.n_max)), 1, -1)
@@ -121,14 +217,23 @@ class DistDSIMEngine:
         return ghosts.transpose(1, 0, 2)              # (K, R, g_max)
 
     # -- device-local block functions (run inside shard_map) -----------------------
-    # All block arrays have their partition dim squeezed away: m (R, n_max),
-    # ghosts (R, g_max), rng (R,) keys | (R, n_max) LFSR, consts rows (…).
+    # All block arrays have their partition dim squeezed away: m (R, n_max)
+    # int8 — or (n_max,) uint32 words on the bitplane path —, ghosts
+    # (R, g_max) | (g_max,) words, rng (R,) keys | (R, n_max) LFSR, consts
+    # rows (…).
 
-    def _exchange_block(self, m, macc, S, consts):
-        """Publish boundary states, all-gather, gather this device's ghosts."""
+    def _exchange_block(self, m, macc, S, consts, inst: bool = False):
+        """Publish boundary states, all-gather, gather this device's ghosts.
+
+        ``inst`` forces instantaneous +-1 states even in cmft mode — the
+        per-phase refresh path, matching the stacked engine's
+        ``_exchange_inst``.  (Publishing ``macc/1`` there was wrong: the
+        accumulator is zeroed at every S-sweep boundary, so the first
+        phases of each iteration would broadcast all-zero ghost means.)
+        """
         R = self.replicas
         bnd_slots = consts["bnd_slots"]                       # (b_pad,)
-        if self.mode == "cmft":
+        if self.mode == "cmft" and not inst:
             vals = (macc / jnp.float32(S))[:, bnd_slots]      # (R, b_pad)
             pool = jax.lax.all_gather(vals, self.axis, tiled=True)
         elif self.bitpack:
@@ -145,12 +250,26 @@ class DistDSIMEngine:
         pool = pool.transpose(1, 0, 2).reshape(R, -1)
         return pool[:, consts["ghost_src_pool"]]              # (R, g_max)
 
-    def _phase_block(self, c, m, ghosts, rng, beta, consts):
+    def _exchange_block_w(self, mw, consts):
+        """Native-word boundary exchange: a slice of the spin words IS the
+        wire payload — 4 B/site for all 32 lanes, no pack/unpack compute
+        anywhere on the collective path."""
+        bnd = mw[consts["bnd_slots"]]                         # (b_pad,) words
+        pool = jax.lax.all_gather(bnd, self.axis, tiled=True)  # (K*b_pad,)
+        return pool[consts["ghost_src_pool"]]                 # (g_max,) words
+
+    def _phase_block(self, c, m, ghosts, rng, beta, consts, lut=None):
+        """One color phase; ``beta`` is the f32 inverse temperature — or,
+        with ``lut``, the int32 LUT row index the staircase resolved to."""
         slots, mask = consts["color_slots"][c], consts["color_mask"][c]  # (nc,)
-        mext = jnp.concatenate([m.astype(jnp.float32), ghosts], axis=1)
         idx_c = consts["local_idx"][slots]                    # (nc, D)
-        w_c = consts["local_w"][slots]
-        h_c = consts["local_h"][slots]
+        int8 = lut is not None
+        acc = jnp.int32 if int8 else jnp.float32
+        h_c = (consts["local_h_q"] if int8 else consts["local_h"])[slots] \
+            .astype(acc)
+        w_c = (consts["local_w_q"] if int8 else consts["local_w"])[slots] \
+            .astype(acc)
+        mext = jnp.concatenate([m.astype(acc), ghosts.astype(acc)], axis=1)
         nbr = jnp.take(mext, idx_c, axis=1)                   # (R, nc, D)
         field = h_c + (w_c * nbr).sum(axis=-1)                # (R, nc)
         if self.rng_kind == "philox":
@@ -164,24 +283,72 @@ class DistDSIMEngine:
             s = lfsr_next(s)
             r = lfsr_uniform(s)
             rng = rng.at[:, slots].set(s)
-        act = quantize(beta * field, self.fmt)
         old = m[:, slots]
-        new = jnp.where(jnp.tanh(act) + r >= 0, 1, -1).astype(jnp.int8)
+        if int8:
+            # pure-integer accept: raw 24-bit draw vs tabulated threshold
+            u = s >> jnp.uint32(8)
+            thr = jax.lax.dynamic_index_in_dim(
+                lut, jnp.asarray(beta, jnp.int32), axis=0, keepdims=False)
+            new = jnp.where(lut_accept(thr, field, self.f_max, u),
+                            1, -1).astype(jnp.int8)
+        else:
+            act = quantize(beta * field, self.fmt)
+            new = jnp.where(jnp.tanh(act) + r >= 0, 1, -1).astype(jnp.int8)
         new = jnp.where(mask, new, old)
         flips = (new != old).sum(axis=1).astype(jnp.int32)    # (R,)
         m = m.at[:, slots].set(new)
         return m, rng, flips
 
-    def _iteration_block(self, m, ghosts, macc, rng, flips, betas_S, sync, consts):
+    def _phase_block_w(self, c, mw, ghosts_w, rng, row, consts, lut):
+        """One color phase on packed words: XOR sign application, bit-sliced
+        adder tree for the +1-contribution count, per-lane LFSR draw + LUT
+        accept.  Lane r is bit-identical to replica r of
+        :meth:`_phase_block` on the int8 path (same integer field, same
+        LFSR column, same threshold compare)."""
+        slots, mask = consts["color_slots"][c], consts["color_mask"][c]
+        mext = jnp.concatenate([mw, ghosts_w])
+        counts = bitplane_gather_count_op(
+            mext, consts["local_idx"][slots], consts["bp_signs"][slots],
+            consts["bp_nz"][slots])
+        R = self.replicas
+        lanes = lane_shifts(R, 1)                             # (R, 1)
+        one = jnp.uint32(1)
+        s = rng[:, slots]
+        s = lfsr_next(s)
+        rng = rng.at[:, slots].set(s)
+        u = s >> jnp.uint32(8)                                # (R, nc)
+        cnt = jnp.zeros(u.shape, jnp.int32)
+        for i, b in enumerate(counts):
+            cnt = cnt + (((b[None, :] >> lanes) & one)
+                         << jnp.uint32(i)).astype(jnp.int32)
+        # f = h_q + 2c - nnz = (base - f_max) + 2c, per lane
+        field = consts["bp_base"][slots][None, :] - self.f_max + 2 * cnt
+        thr = jax.lax.dynamic_index_in_dim(
+            lut, jnp.asarray(row, jnp.int32), axis=0, keepdims=False)
+        accept = lut_accept(thr, field, self.f_max, u)        # (R, nc)
+        upd = (accept.astype(jnp.uint32) << lanes).sum(axis=0) \
+            .astype(jnp.uint32)                               # (nc,)
+        old = mw[slots]
+        new = jnp.where(mask, upd, old)
+        diff = old ^ new
+        flips = ((diff[None, :] >> lanes) & one).astype(jnp.int32) \
+            .sum(axis=1)                                      # (R,)
+        mw = mw.at[slots].set(new)
+        return mw, rng, flips
+
+    def _iteration_block(self, m, ghosts, macc, rng, flips, betas_S, sync,
+                         consts, lut=None):
         S = betas_S.shape[0]
 
         def body(carry, beta):
             m, ghosts, macc, rng, flips = carry
             for c in range(len(consts["color_slots"])):
                 if sync == "phase":
-                    ghosts = self._exchange_block(m, macc, 1, consts)
-                m, rng, f = self._phase_block(c, m, ghosts, rng, beta, consts)
-                flips = flips + f
+                    ghosts = self._exchange_block(m, macc, 1, consts,
+                                                  inst=True)
+                m, rng, f = self._phase_block(c, m, ghosts, rng, beta,
+                                              consts, lut)
+                flips = flips + f.astype(flips.dtype)
             macc = macc + m.astype(jnp.float32)
             return (m, ghosts, macc, rng, flips), None
 
@@ -192,6 +359,24 @@ class DistDSIMEngine:
         macc = jnp.zeros_like(macc)
         return m, ghosts, macc, rng, flips
 
+    def _iteration_block_w(self, mw, ghosts, macc, rng, flips, rows_S, sync,
+                           consts, lut):
+        def body(carry, row):
+            mw, ghosts, rng, flips = carry
+            for c in range(len(consts["color_slots"])):
+                if sync == "phase":
+                    ghosts = self._exchange_block_w(mw, consts)
+                mw, rng, f = self._phase_block_w(c, mw, ghosts, rng, row,
+                                                 consts, lut)
+                flips = flips + f.astype(flips.dtype)
+            return (mw, ghosts, rng, flips), None
+
+        (mw, ghosts, rng, flips), _ = jax.lax.scan(
+            body, (mw, ghosts, rng, flips), rows_S)
+        if sync not in ("phase", None):
+            ghosts = self._exchange_block_w(mw, consts)
+        return mw, ghosts, macc, rng, flips
+
     # -- runners --------------------------------------------------------------------
 
     def _run_chunk(self, iters: int, S: int, sync: SyncSpec):
@@ -200,42 +385,53 @@ class DistDSIMEngine:
             return self._chunk_cache[key]
 
         spec_m = P(self.axis)
-        rng_spec = P(self.axis)
-        cspec = dict(
-            local_idx=spec_m, local_w=spec_m, local_h=spec_m,
-            color_slots=tuple(spec_m for _ in self.p.color_slots),
-            color_mask=tuple(spec_m for _ in self.p.color_mask),
-            bnd_slots=spec_m, ghost_src_pool=spec_m,
-        )
+        cspec = jax.tree.map(lambda _: spec_m, self._consts)
+        has_lut = self.precision != "f32"
+        word = self.precision == "bitplane"
 
-        def block(m, ghosts, macc, rng, flips_in, betas, consts):
+        def block(m, ghosts, macc, rng, flips_in, betas, consts, *lut_opt):
             # squeeze the device-local partition dim from state and consts
             m, ghosts, macc, rng = m[0], ghosts[0], macc[0], rng[0]
             consts = jax.tree.map(lambda x: x[0], consts)
-            local = jnp.zeros_like(flips_in)
+            lut = lut_opt[0] if lut_opt else None
+            # per-chunk flips accumulate in uint32 (modular-exact at any
+            # magnitude): the old int32 accumulator overflowed *within* a
+            # single long chunk at ~2.1e9 lane-flips, before the psum and
+            # the driver's mod-2^32 odometer read ever saw it
+            local = jnp.zeros(flips_in.shape, jnp.uint32)
 
             def it(carry, b):
                 m, ghosts, macc, rng, fl = carry
-                out = self._iteration_block(m, ghosts, macc, rng, fl, b,
-                                            sync, consts)
+                if word:
+                    out = self._iteration_block_w(m, ghosts, macc, rng, fl,
+                                                  b, sync, consts, lut)
+                else:
+                    out = self._iteration_block(m, ghosts, macc, rng, fl, b,
+                                                sync, consts, lut)
                 return out, None
             (m, ghosts, macc, rng, local), _ = jax.lax.scan(
                 it, (m, ghosts, macc, rng, local), betas)
-            flips = flips_in + jax.lax.psum(local, self.axis)
+            total = jax.lax.psum(local, self.axis)
+            flips = jax.lax.bitcast_convert_type(
+                jax.lax.bitcast_convert_type(flips_in, jnp.uint32) + total,
+                jnp.int32)
             return m[None], ghosts[None], macc[None], rng[None], flips
 
+        in_specs = (spec_m, spec_m, spec_m, spec_m, P(), P(), cspec)
+        if has_lut:
+            in_specs = in_specs + (P(),)
         smapped = shard_map(
             block, mesh=self.mesh,
-            in_specs=(spec_m, spec_m, spec_m, rng_spec, P(), P(), cspec),
-            out_specs=(spec_m, spec_m, spec_m, rng_spec, P()),
+            in_specs=in_specs,
+            out_specs=(spec_m, spec_m, spec_m, spec_m, P()),
             check_vma=False,
         )
 
         @jax.jit
-        def run(state: DSIMState, betas, consts):
+        def run(state: DSIMState, betas, consts, *lut_opt):
             m, ghosts, macc, rng, flips = smapped(
                 state.m, state.ghosts, state.macc, state.rng, state.flips,
-                betas, consts)
+                betas, consts, *lut_opt)
             return DSIMState(m=m, ghosts=ghosts, macc=macc, rng=rng,
                              sweep=state.sweep + betas.shape[0] * betas.shape[1],
                              flips=flips)
@@ -251,11 +447,25 @@ class DistDSIMEngine:
         ``cursor=True``, the resumable RecordedCursor."""
         sync = sync_every if sync_every in ("phase", None) else int(sync_every)
 
-        def chunk(st, betas2d, iters, S):
-            return self._run_chunk(iters, S, sync)(st, betas2d, self._consts)
+        if self.precision != "f32":
+            # the staircase becomes LUT row indices (beta is in the table)
+            beta_arr = np.asarray(schedule.beta_array(), np.float32)
+            table = beta_table(beta_arr)
+            lut = self._lut_for(table)
+            sched = ArraySchedule(beta_row_indices(beta_arr, table))
+
+            def chunk(st, rows2d, iters, S):
+                return self._run_chunk(iters, S, sync)(st, rows2d,
+                                                       self._consts, lut)
+        else:
+            sched = schedule
+
+            def chunk(st, betas2d, iters, S):
+                return self._run_chunk(iters, S, sync)(st, betas2d,
+                                                       self._consts)
 
         kw = dict(
-            state=state, schedule=schedule, record_points=record_points,
+            state=state, schedule=sched, record_points=record_points,
             chunk_fn=chunk, record_fn=self.energy, sync_every=sync_every,
             flips_of=lambda st: st.flips,
             flips_per_sweep=self.p.n * self.replicas)
@@ -280,7 +490,11 @@ class DistDSIMEngine:
             buf = buf.at[p.global_ids.reshape(-1)].set(m_r.reshape(-1))
             return buf[: p.n]
 
-        spins = jax.vmap(one)(state.m.transpose(1, 0, 2))
+        if self.precision == "bitplane":
+            m_r = unpack_lanes(state.m, R)                # (R, K, n_max)
+        else:
+            m_r = state.m.transpose(1, 0, 2)
+        spins = jax.vmap(one)(m_r)
         return spins[0] if R == 1 else spins
 
     def _energy_impl(self, state: DSIMState) -> jnp.ndarray:
@@ -293,6 +507,28 @@ class DistDSIMEngine:
         """(R,) true global energies (scalar when replicas == 1)."""
         return self._energy(state)
 
+    def boundary_payload(self) -> dict:
+        """Wire-format accounting of one boundary publication per device:
+        dtype, total bytes, and bytes per boundary site covering ALL
+        replicas/lanes (the roofline collective term and the benchmark's
+        recorded payload)."""
+        R = self.replicas
+        if self.precision == "bitplane":
+            return {"dtype": "uint32", "bytes": 4 * self.b_pad,
+                    "bytes_per_site_all_chains": 4.0, "chains": R,
+                    "pack_compute": "none"}
+        if self.mode == "cmft":
+            return {"dtype": "float32", "bytes": 4 * R * self.b_pad,
+                    "bytes_per_site_all_chains": 4.0 * R, "chains": R,
+                    "pack_compute": "none"}
+        if self.bitpack:
+            return {"dtype": "uint8-bitmap", "bytes": R * self.b_pad // 8,
+                    "bytes_per_site_all_chains": R / 8.0, "chains": R,
+                    "pack_compute": "pack+unpack per exchange"}
+        return {"dtype": "int8", "bytes": R * self.b_pad,
+                "bytes_per_site_all_chains": float(R), "chains": R,
+                "pack_compute": "none"}
+
     # -- dry-run hook --------------------------------------------------------------------
 
     def lower_chunk(self, iters: int = 4, S: int = 4, sync: SyncSpec = 4):
@@ -303,18 +539,44 @@ class DistDSIMEngine:
         def sds(x, shard):
             return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=shard)
 
-        rng_t = jax.random.split(jax.random.PRNGKey(0), p.K * R).reshape(p.K, R) \
-            if self.rng_kind == "philox" else \
-            jnp.zeros((p.K, R, p.n_max), jnp.uint32)
         zero = jnp.zeros((), jnp.int32)
-        st = DSIMState(
-            m=jax.ShapeDtypeStruct((p.K, R, p.n_max), jnp.int8, sharding=self._shard),
-            ghosts=jax.ShapeDtypeStruct((p.K, R, p.g_max), jnp.float32, sharding=self._shard),
-            macc=jax.ShapeDtypeStruct((p.K, R, p.n_max), jnp.float32, sharding=self._shard),
-            rng=sds(rng_t, self._shard),
-            sweep=sds(zero, self._repl),
-            flips=sds(jnp.zeros((R,), jnp.int32), self._repl),
-        )
-        betas = jax.ShapeDtypeStruct((iters, S), jnp.float32, sharding=self._repl)
+        flips = jnp.zeros((R,), jnp.int32)
+        if self.precision == "bitplane":
+            st = DSIMState(
+                m=jax.ShapeDtypeStruct((p.K, p.n_max), jnp.uint32,
+                                       sharding=self._shard),
+                ghosts=jax.ShapeDtypeStruct((p.K, p.g_max), jnp.uint32,
+                                            sharding=self._shard),
+                macc=jax.ShapeDtypeStruct((p.K, 1), jnp.float32,
+                                          sharding=self._shard),
+                rng=jax.ShapeDtypeStruct((p.K, R, p.n_max), jnp.uint32,
+                                         sharding=self._shard),
+                sweep=sds(zero, self._repl),
+                flips=sds(flips, self._repl),
+            )
+        else:
+            rng_t = jax.random.split(jax.random.PRNGKey(0),
+                                     p.K * R).reshape(p.K, R) \
+                if self.rng_kind == "philox" else \
+                jnp.zeros((p.K, R, p.n_max), jnp.uint32)
+            st = DSIMState(
+                m=jax.ShapeDtypeStruct((p.K, R, p.n_max), jnp.int8,
+                                       sharding=self._shard),
+                ghosts=jax.ShapeDtypeStruct((p.K, R, p.g_max), jnp.float32,
+                                            sharding=self._shard),
+                macc=jax.ShapeDtypeStruct((p.K, R, p.n_max), jnp.float32,
+                                          sharding=self._shard),
+                rng=sds(rng_t, self._shard),
+                sweep=sds(zero, self._repl),
+                flips=sds(flips, self._repl),
+            )
         consts = jax.tree.map(lambda x: sds(x, self._shard), self._consts)
+        if self.precision != "f32":
+            rows = jax.ShapeDtypeStruct((iters, S), jnp.int32,
+                                        sharding=self._repl)
+            lut = jax.ShapeDtypeStruct((1, 2 * self.f_max + 1), jnp.uint32,
+                                       sharding=self._repl)
+            return run.lower(st, rows, consts, lut)
+        betas = jax.ShapeDtypeStruct((iters, S), jnp.float32,
+                                     sharding=self._repl)
         return run.lower(st, betas, consts)

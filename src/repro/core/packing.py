@@ -22,7 +22,8 @@ import numpy as np
 import jax.numpy as jnp
 
 __all__ = ["pad_to_multiple", "pack_pm1", "unpack_pm1",
-           "LANE_WIDTH", "lane_shifts", "pack_lanes", "unpack_lanes"]
+           "LANE_WIDTH", "lane_shifts", "pack_lanes", "unpack_lanes",
+           "lane_permute", "lane_swap"]
 
 # numpy constant: creating a jnp array at import time leaks a tracer if the
 # first import happens inside an active trace (e.g. lazy import under jit)
@@ -87,3 +88,34 @@ def unpack_lanes(w: jnp.ndarray, n_lanes: int) -> jnp.ndarray:
     sh = lane_shifts(n_lanes, w.ndim)
     bits = (w[None] >> sh) & jnp.uint32(1)
     return jnp.where(bits != 0, 1, -1).astype(jnp.int8)
+
+
+def lane_permute(w: jnp.ndarray, perm) -> jnp.ndarray:
+    """Permute the replica lanes of packed words: out bit i = in bit perm[i].
+
+    ``perm`` is an (L,) integer array (static or traced), L <= 32 — the
+    bit-gather/scatter a replica-exchange swap move compiles to: a swap of
+    temperatures t and t+1 is the transposition perm = id[..t+1, t..], and a
+    whole accepted-swap set is ONE permutation applied to every word.  Lanes
+    >= L of the output are cleared (the packed convention: unused lanes hold
+    zero)."""
+    perm = jnp.asarray(perm, jnp.uint32)
+    L = int(perm.shape[0])
+    if not 1 <= L <= LANE_WIDTH:
+        raise ValueError(f"perm must have 1..{LANE_WIDTH} lanes, got {L}")
+    src = perm.reshape((L,) + (1,) * w.ndim)
+    bits = (w[None] >> src) & jnp.uint32(1)
+    return (bits << lane_shifts(L, w.ndim)).sum(axis=0).astype(jnp.uint32)
+
+
+def lane_swap(w: jnp.ndarray, i: int, j: int, accept=None) -> jnp.ndarray:
+    """Exchange bit lanes i and j of every word (in place of a gather of
+    the two configurations): d = bit_i XOR bit_j, XORed back into both
+    lanes — a no-op exactly where the lanes already agree.  ``accept``
+    (bool, broadcastable against ``w``) gates the swap; the common case is
+    a scalar Metropolis verdict applied to all sites of a replica pair."""
+    si, sj = jnp.uint32(i), jnp.uint32(j)
+    d = ((w >> si) ^ (w >> sj)) & jnp.uint32(1)
+    if accept is not None:
+        d = jnp.where(accept, d, jnp.uint32(0))
+    return w ^ ((d << si) | (d << sj))

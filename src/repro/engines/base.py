@@ -40,7 +40,8 @@ SyncSpec = Union[int, str, None]
 #              integer field accumulation, LUT-threshold accepts.
 # "bitplane" — multi-spin coding over the int8 substrate: spins as uint32
 #              bit-planes, 32 replica lanes per word, word-wide field math
-#              with per-lane RNG/accept.  Lattice engine only; replicas are
+#              with per-lane RNG/accept.  Lattice engine (halo planes) and
+#              mesh engine (native-word boundary all-gather); replicas are
 #              lanes, so R <= LANE_WIDTH.
 #
 # One shared table so the registry, the serving layer, and the engines all
@@ -51,7 +52,7 @@ PRECISIONS = ("f32", "int8", "bitplane")
 ENGINE_PRECISIONS = {
     "gibbs": ("f32",),
     "dsim": ("f32", "int8"),
-    "dsim_dist": ("f32",),
+    "dsim_dist": ("f32", "int8", "bitplane"),
     "lattice": ("f32", "int8", "bitplane"),
 }
 LANE_WIDTH = 32       # replica lanes per uint32 word on the bitplane path
@@ -74,7 +75,7 @@ def check_precision(engine: str, precision: str):
         raise ValueError(
             f"precision={precision!r} is not supported on engine "
             f"{engine!r} (supported: {', '.join(ok)})"
-            + ("; bit-plane multi-spin coding is a lattice-engine path"
+            + ("; bit-plane multi-spin coding is a lattice/dsim_dist path"
                if precision == "bitplane" else ""))
 
 

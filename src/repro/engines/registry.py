@@ -246,14 +246,17 @@ class _DSIMHandle(_BatchedStateHandle):
 
 class _DistHandle(_Handle):
     name = "dsim_dist"
-    # the mesh engine derives all replica RNG streams jointly from one
-    # seed, so per-replica explicit seeding (packing) isn't available
+    # the mesh engine's f32 path derives all replica RNG streams jointly
+    # from one seed; the int8/bitplane paths spawn per-replica streams
+    # (prefix-stable lanes) but the handle still runs one tenant per call —
+    # the serving scheduler never packs dist jobs, so per-job seed lists
+    # are not exposed here
     supports_packing = False
 
     def init_state_packed(self, seeds: Sequence[int]):
         raise NotImplementedError(
-            "dsim_dist derives replica streams jointly from one seed; "
-            "replica packing needs per-replica seeding")
+            "dsim_dist runs one tenant per batched call (no replica "
+            "packing); submit with replicas=R and a single seed instead")
 
 
 class _LatticeHandle(_Handle):
@@ -305,12 +308,14 @@ def make_engine(name: str, graph=None, *, coloring: Optional[Coloring] = None,
 
     ``precision="int8"`` selects the fixed-point update pipeline (int8
     on-chip couplings, integer field accumulation, LUT-threshold accepts)
-    on the dsim and lattice engines; ``precision="bitplane"`` (lattice
-    only) multi-spin-codes that pipeline — spins stored as uint32
-    bit-planes with up to 32 replica lanes per word, word-wide field math,
-    per-lane RNG; lane r is bit-identical to int8 replica r.  ``"f32"``
-    (default) is the floating reference the integer paths are
-    statistically compared against.
+    on the dsim, dsim_dist, and lattice engines; ``precision="bitplane"``
+    (lattice and dsim_dist) multi-spin-codes that pipeline — spins stored
+    as uint32 bit-planes with up to 32 replica lanes per word, word-wide
+    field math, per-lane RNG; lane r is bit-identical to int8 replica r.
+    On dsim_dist the boundary all-gather ships the native words (4 B per
+    boundary site for all 32 chains, zero pack/unpack on the collective
+    path).  ``"f32"`` (default) is the floating reference the integer
+    paths are statistically compared against.
     """
     if name not in ENGINE_NAMES:
         raise ValueError(f"unknown engine {name!r}; choose from {ENGINE_NAMES}")
@@ -347,7 +352,8 @@ def make_engine(name: str, graph=None, *, coloring: Optional[Coloring] = None,
                     f"{axis!r} (have {ndev}); pass mesh= explicitly")
             mesh = make_mesh((prob.K,), (axis,), axis_types=auto_axes(1))
         eng = DistDSIMEngine(prob, mesh, axis=axis, rng=rng, fmt=fmt,
-                             mode=mode, bitpack=bitpack, replicas=replicas)
+                             mode=mode, bitpack=bitpack, replicas=replicas,
+                             precision=precision)
         return _DistHandle(eng, replicas, prob.n)
 
     # name == "lattice"

@@ -17,7 +17,8 @@ from repro.core.pbit import FixedPoint
 from . import pbit_bitplane, pbit_lattice, lattice_energy, ref as _ref
 
 __all__ = ["pbit_update_op", "pbit_sweep_op", "pbit_update_int_op",
-           "pbit_sweep_int_op", "pbit_bitplane_sweep_op", "brick_energy_op",
+           "pbit_sweep_int_op", "pbit_bitplane_sweep_op",
+           "bitplane_gather_count_op", "brick_energy_op",
            "default_impl"]
 
 
@@ -96,6 +97,16 @@ def pbit_bitplane_sweep_op(mw, s, rows, masks_w, signs6, nz6, base, halos_w,
     return pbit_bitplane.pbit_bitplane_sweep(
         mw, s, rows, masks_w, signs6, nz6, base, halos_w, lut,
         interpret=(impl == "interpret"))
+
+
+def bitplane_gather_count_op(mext_w, idx_c, signs_c, nz_c, impl: str = "auto"):
+    """Per-lane +1-contribution bit-slice planes for a gather-graph (ELL)
+    site set — the D-neighbor word-field accumulator shared by the mesh
+    engine's bitplane path and the lane-packed APT ladder.  Runs inside
+    shard_map / jit bodies, so only the jnp formulation exists today; a
+    Mosaic lowering of the gather+CSA chain would slot in here."""
+    del impl    # ref-only: the gather path has no Pallas lowering yet
+    return _ref.bitplane_gather_count_ref(mext_w, idx_c, signs_c, nz_c)
 
 
 def brick_energy_op(m, active, h, w6, halos, bx: Optional[int] = None,

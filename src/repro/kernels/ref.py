@@ -16,6 +16,7 @@ from repro.core.pbit import FixedPoint, lut_accept
 __all__ = ["pbit_brick_update_ref", "pbit_brick_sweep_ref",
            "pbit_brick_update_int_ref", "pbit_brick_sweep_int_ref",
            "pbit_bitplane_sweep_ref", "bitplane_ones_count_ref",
+           "bitplane_count_planes_ref", "bitplane_gather_count_ref",
            "brick_energy_ref", "neighbor_sums_ref", "int_field_ref"]
 
 
@@ -181,6 +182,30 @@ def _full_add(a, b, c):
     return s ^ c, (a & b) | (c & s)
 
 
+def bitplane_count_planes_ref(planes):
+    """Per-lane count of set bits across an arbitrary list of word planes.
+
+    The general-degree form of the carry-save adder tree: each plane is a
+    1-bit contribution per lane, and the running count lives as bit-slice
+    planes — ripple-adding plane k costs ``len(slices)`` AND/XOR pairs, and
+    a new slice is appended only when the count can actually reach the next
+    power of two, so the result has exactly ``ceil(log2(D+1))`` slices for
+    D planes.  Lane r's count is ``sum_i 2**i * bit_r(slices[i])``.  This is
+    the field accumulator of the gather-graph bit-plane paths (the mesh
+    engine's D-neighbor update, the lane-packed tempering ladder), where the
+    neighbor degree is not the lattice's fixed six.
+    """
+    slices = []
+    for n, plane in enumerate(planes, start=1):
+        carry = plane
+        for i, s in enumerate(slices):
+            slices[i] = s ^ carry
+            carry = s & carry
+        if (1 << len(slices)) <= n:
+            slices.append(carry)
+    return slices
+
+
 def bitplane_ones_count_ref(mw, signs6, nz6, halos_w):
     """Per-lane count of +1 neighbor contributions, as 3 bit-slice planes.
 
@@ -197,6 +222,22 @@ def bitplane_ones_count_ref(mw, signs6, nz6, halos_w):
     k = s1 & s2
     b1, b2 = _full_add(c1, c2, k)[0], (c1 & c2) | (k & (c1 ^ c2))
     return b0, b1, b2
+
+
+def bitplane_gather_count_ref(mext_w, idx_c, signs_c, nz_c):
+    """Per-lane +1-contribution count for a gather-graph (ELL) site set.
+
+    ``mext_w`` is the (n_local + n_ghost,) packed word pool, ``idx_c``
+    (nc, D) int32 neighbor slots, ``signs_c``/``nz_c`` (nc, D) uint32 sign /
+    nonzero planes (:func:`repro.core.pbit.bitplane_planes` per direction).
+    Returns the bit-slice planes of :func:`bitplane_count_planes_ref` — the
+    D-neighbor analogue of the lattice tree above, shared by the word-lane
+    mesh engine and the lane-packed tempering ladder.
+    """
+    nbr = jnp.take(mext_w, idx_c, axis=0)            # (nc, D) words
+    planes = [(nbr[:, d] ^ signs_c[:, d]) & nz_c[:, d]
+              for d in range(int(idx_c.shape[1]))]
+    return bitplane_count_planes_ref(planes)
 
 
 def pbit_bitplane_sweep_ref(mw, s, rows, masks_w, signs6, nz6, base,

@@ -16,8 +16,9 @@ compiled handle — a 3+2 pack and a 4+1 pack both run the R=8 executable.
 
 Priorities order batch formation (strict: a batch is led by the
 highest-priority queued job, filled only with compatible jobs); FIFO
-within a priority level.  `dsim_dist` derives replica RNG streams jointly
-from one seed, so it is never packed (batches of one).
+within a priority level.  `dsim_dist` runs one tenant per batched call
+(its handle exposes no per-replica seed lists), so it is never packed
+(batches of one).
 
 Bit-plane jobs (``precision="bitplane"``) batch in *lane* units: the
 engine packs replicas into the 32 bit lanes of one uint32 word, so a batch
@@ -25,7 +26,12 @@ never totals more than 32 chains and the executed width clamps up to the
 full word — every bit-plane pack composition reuses the one R=32 compiled
 executable, and pad lanes are throwaway chains exactly like pow2 pad
 replicas.  The precision is already part of :func:`repro.serve.jobs
-.pack_key`, so bit-plane jobs never coalesce with int8/f32 jobs.
+.pack_key`, so bit-plane jobs never coalesce with int8/f32 jobs.  The lane
+clamp also applies to ``dsim_dist`` bit-plane jobs (one tenant per batch,
+but the executed width still pads to the full word): the mesh engine's
+int8/bitplane lanes are *prefix-stable* — lane r depends on
+spawn_seeds(seed)[r] alone — so pad lanes never perturb the tenant's
+chains.
 """
 
 from __future__ import annotations
@@ -41,7 +47,7 @@ __all__ = ["Batch", "ReplicaPackingScheduler", "PACKABLE_ENGINES",
            "ceil_pow2"]
 
 # engines whose init_state takes per-replica seeds (see registry handles'
-# ``supports_packing``); dsim_dist seeds all replicas jointly
+# ``supports_packing``); dsim_dist runs one tenant per call
 PACKABLE_ENGINES = frozenset({"gibbs", "dsim", "lattice"})
 
 

@@ -32,6 +32,7 @@ test-friendly); ``start()`` runs the same loop on a background thread.
 
 from __future__ import annotations
 
+import hashlib
 import itertools
 import threading
 import time
@@ -42,7 +43,7 @@ import numpy as np
 
 from repro.core.annealing import ea_schedule
 from repro.engines import make_engine
-from repro.engines.base import (check_precision, lanes_of,
+from repro.engines.base import (LANE_WIDTH, check_precision, lanes_of,
                                 quantize_record_points, spawn_seeds)
 
 from .jobs import Job, JobSpec, JobStatus, problem_fingerprint, \
@@ -53,6 +54,26 @@ from .scheduler import Batch, ReplicaPackingScheduler
 __all__ = ["SampleServer", "QueueFull"]
 
 _FILLER_SEED = 1_000_003      # namespace for pad-replica seed spawning
+
+
+def _hashable_kw(kw: Dict[str, Any]) -> tuple:
+    """Engine kwargs as a hashable pool-key component.  Graph-registered
+    problems carry arrays (``labels`` partitions, meshes) in their
+    ``engine_kw``; a raw ``tuple(sorted(kw.items()))`` made the pool key
+    unhashable, so every mesh-engine job died at the cache probe.  Arrays
+    key by content digest (same partition -> same executable, regardless
+    of array identity); anything else non-primitive keys by ``repr``."""
+    items = []
+    for k, v in sorted(kw.items()):
+        if isinstance(v, np.ndarray) or hasattr(v, "__array__"):
+            a = np.asarray(v)
+            v = ("ndarray", a.dtype.str, a.shape,
+                 hashlib.sha1(a.tobytes()).hexdigest())
+        elif not isinstance(v, (int, float, str, bool, bytes, frozenset,
+                                tuple, type(None))):
+            v = ("repr", repr(v))
+        items.append((k, v))
+    return tuple(items)
 
 
 class QueueFull(RuntimeError):
@@ -100,6 +121,8 @@ class SampleServer:
         self._seq = itertools.count()
         self._thread: Optional[threading.Thread] = None
         self._stop = False
+        # register-time bit-plane prewarm threads (join to block on warmth)
+        self.prewarm_threads: List[threading.Thread] = []
         # counters
         self.submitted = 0
         self.completed = 0
@@ -113,14 +136,31 @@ class SampleServer:
 
     def register_problem(self, name: str, *, graph=None, coloring=None,
                          L: Optional[int] = None, seed: int = 0,
+                         prewarm_bitplane: bool = False,
                          **engine_kw) -> str:
         """Register a problem instance under ``name``; returns its content
-        fingerprint (the packing/pool identity)."""
+        fingerprint (the packing/pool identity).
+
+        ``prewarm_bitplane=True`` builds + warm-compiles the one R=32
+        bit-plane executable on a daemon thread at register time: every
+        bit-plane pack composition buckets to that single full-word key
+        (the scheduler clamps executed widths up to the word), so bit-plane
+        tenants of this problem see zero cold starts.  Lattice-registered
+        problems prewarm the lattice engine; graph-registered problems the
+        mesh engine (which must be buildable on this host's device count —
+        pass K/labels in ``engine_kw`` as needed).  The prewarm thread is
+        appended to :attr:`prewarm_threads` (join it to block on warmth).
+        """
         if (graph is None) == (L is None):
             raise ValueError("register exactly one of graph= or L=")
         p = _Problem(name, graph, coloring, L, seed, engine_kw)
         with self._lock:
             self._problems[name] = p
+        if prewarm_bitplane:
+            engine = "lattice" if L is not None else "dsim_dist"
+            self.prewarm_threads.append(
+                self.prewarm(name, engine=engine, replicas=LANE_WIDTH,
+                             precision="bitplane"))
         return p.fingerprint
 
     # -- submission ------------------------------------------------------------
@@ -328,7 +368,7 @@ class SampleServer:
 
     def _engine_key_builder(self, prob: _Problem, spec: JobSpec, r_exec: int):
         key = (prob.fingerprint, spec.engine, spec.precision, r_exec,
-               tuple(sorted(prob.engine_kw.items())))
+               _hashable_kw(prob.engine_kw))
 
         def builder():
             kw = dict(prob.engine_kw)
@@ -337,10 +377,10 @@ class SampleServer:
                                    replicas=r_exec,
                                    precision=spec.precision, **kw)
             kw.setdefault("coloring", prob.coloring)
-            if spec.engine == "dsim":
-                return make_engine("dsim", prob.graph, replicas=r_exec,
+            if spec.engine in ("dsim", "dsim_dist"):
+                return make_engine(spec.engine, prob.graph, replicas=r_exec,
                                    precision=spec.precision, **kw)
-            # gibbs / dsim_dist (f32-only, enforced at submit)
+            # gibbs (f32-only, enforced at submit)
             return make_engine(spec.engine, prob.graph, replicas=r_exec,
                                **kw)
 

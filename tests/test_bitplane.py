@@ -333,8 +333,8 @@ def test_registry_guards():
     from repro.core.coloring import lattice3d_coloring
     g = ea3d(4, seed=0)
     col = lattice3d_coloring(4)
-    for eng_name in ("gibbs", "dsim", "dsim_dist"):
-        with pytest.raises(ValueError, match="lattice-engine path"):
+    for eng_name in ("gibbs", "dsim"):
+        with pytest.raises(ValueError, match="lattice/dsim_dist path"):
             make_engine(eng_name, g, coloring=col, K=2,
                         labels=np.zeros(g.n, np.int32),
                         precision="bitplane")
@@ -403,7 +403,7 @@ def test_server_bitplane_jobs_pack_and_guard():
                          labels=slab_partition(4, 2), rng="lfsr")
     # unsupported engine/precision pair: clear error at submit, not a
     # failed job (let alone a packing shape error)
-    with pytest.raises(ValueError, match="lattice-engine path"):
+    with pytest.raises(ValueError, match="lattice/dsim_dist path"):
         srv.submit("g4", engine="dsim", precision="bitplane", sweeps=16)
     with pytest.raises(ValueError, match=r"\[1, 32\]"):
         srv.submit("lat6", engine="lattice", precision="bitplane",

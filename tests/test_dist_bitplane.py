@@ -1,0 +1,317 @@
+"""Word-lane mesh engine: dsim_dist precision="int8"/"bitplane".
+
+In-process tests run on a K=1 mesh (one partition on the default single
+device — the shard_map path without a forced device count); the
+multi-device boundary-exchange tests run in SUBPROCESSES with a forced
+host device count, like tests/test_dist.py.
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.graph import ea3d
+from repro.core.coloring import lattice3d_coloring
+from repro.core.partition import slab_partition
+from repro.core.dsim import build_partitioned, DSIMEngine
+from repro.core.dsim_dist import DistDSIMEngine
+from repro.core.annealing import ea_schedule
+from repro.compat import make_mesh, auto_axes
+from repro.engines import make_engine
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_py(code: str, devices: int = 2, timeout: int = 420) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+def _k1(L=4, seed=7):
+    g = ea3d(L, seed=seed)
+    col = lattice3d_coloring(L)
+    prob = build_partitioned(g, col, np.zeros(g.n, np.int32), 1)
+    mesh = make_mesh((1,), ("data",), axis_types=auto_axes(1))
+    return g, prob, mesh
+
+
+# -- guards -------------------------------------------------------------------
+
+def test_dist_precision_guards():
+    g, prob, mesh = _k1()
+    with pytest.raises(ValueError, match="rng='lfsr'"):
+        DistDSIMEngine(prob, mesh, rng="philox", precision="int8")
+    with pytest.raises(ValueError, match="rng='lfsr'"):
+        DistDSIMEngine(prob, mesh, rng="lfsr", mode="cmft",
+                       precision="bitplane")
+    with pytest.raises(ValueError, match="32"):
+        DistDSIMEngine(prob, mesh, rng="lfsr", precision="bitplane",
+                       replicas=33)
+    with pytest.raises(ValueError, match="unknown precision"):
+        DistDSIMEngine(prob, mesh, precision="fp4")
+
+
+def test_registry_dist_precisions():
+    g, prob, mesh = _k1()
+    h = make_engine("dsim_dist", prob, mesh=mesh, rng="lfsr",
+                    precision="bitplane", replicas=4)
+    assert h.precision == "bitplane"
+    with pytest.raises(ValueError, match="bit lanes"):
+        make_engine("dsim_dist", prob, mesh=mesh, rng="lfsr",
+                    precision="bitplane", replicas=64)
+    with pytest.raises(ValueError, match="not supported"):
+        make_engine("gibbs", ea3d(4, seed=0), precision="bitplane")
+
+
+# -- K=1 bit-identity chain: stacked int8 == dist int8 == bitplane lanes -----
+
+def test_dist_int8_matches_stacked_int8():
+    g, prob, mesh = _k1()
+    sch = ea_schedule(96)
+    R = 3
+    s = DSIMEngine(prob, rng="lfsr", precision="int8")
+    ss = s.init_state(seed=3, replicas=R)
+    ss, (_, Es) = s.run_recorded(ss, sch, [32, 96], sync_every=4)
+    d = DistDSIMEngine(prob, mesh, rng="lfsr", precision="int8", replicas=R)
+    sd = d.init_state(seed=3)
+    sd, (_, Ed) = d.run_recorded(sd, sch, [32, 96], sync_every=4)
+    assert (np.asarray(s.global_spins(ss)) ==
+            np.asarray(d.global_spins(sd))).all()
+    np.testing.assert_array_equal(np.asarray(Es), np.asarray(Ed))
+
+
+@pytest.mark.parametrize("R", [1, 5, 32])
+def test_dist_bitplane_lanes_match_int8_replicas(R):
+    g, prob, mesh = _k1()
+    sch = ea_schedule(64)
+    outs = {}
+    for prec in ("int8", "bitplane"):
+        e = DistDSIMEngine(prob, mesh, rng="lfsr", precision=prec,
+                           replicas=R)
+        st = e.init_state(seed=11)
+        st, rec = e.run_recorded_full(st, sch, [64], sync_every=4)
+        outs[prec] = (np.asarray(e.global_spins(st)),
+                      np.asarray(rec.energies), rec.flips)
+    m8, E8, f8 = outs["int8"]
+    mw, Ew, fw = outs["bitplane"]
+    assert (m8 == mw).all()
+    np.testing.assert_array_equal(E8, Ew)
+    assert f8 == fw
+
+
+def test_dist_bitplane_lane_prefix_stability():
+    """Lane r depends on spawn_seeds(seed)[r] alone: growing the lane batch
+    never reshuffles existing chains (what lets the serving scheduler pad
+    every dist bit-plane job up to the one R=32 executable)."""
+    g, prob, mesh = _k1()
+    sch = ea_schedule(48)
+    spins = {}
+    for R in (4, 8):
+        e = DistDSIMEngine(prob, mesh, rng="lfsr", precision="bitplane",
+                           replicas=R)
+        st = e.init_state(seed=5)
+        st, _ = e.run_recorded(st, sch, [48], sync_every=4)
+        spins[R] = np.asarray(e.global_spins(st))
+    assert (spins[4] == spins[8][:4]).all()
+
+
+# -- satellite: per-chunk flip accumulation survives int32 overflow ----------
+
+def test_dist_flip_odometer_exact_across_int32_wrap():
+    """Regression for the per-chunk accumulator: seeded just below 2^31,
+    the counter crosses the int32 sign boundary inside one chunk, and the
+    driver's exact host-side total must not care (uint32 modular
+    accumulation + mod-2^32 odometer read)."""
+    g, prob, mesh = _k1()
+    sch = ea_schedule(64)
+    R = 2
+    e = DistDSIMEngine(prob, mesh, rng="lfsr", precision="int8", replicas=R)
+    st0 = e.init_state(seed=1)
+    _, ref = e.run_recorded_full(st0, sch, [64], sync_every=4)
+    st = e.init_state(seed=1)
+    near = np.full((R,), (1 << 31) - 7, np.int64).astype(np.int32)
+    st = e.shard_state(dataclasses.replace(st, flips=jnp.asarray(near)))
+    st, rec = e.run_recorded_full(st, sch, [64], sync_every=4)
+    # same chains, same flips — the exact total ignores the counter origin
+    assert rec.flips == ref.flips
+    assert ref.flips > 0
+
+
+# -- wire format --------------------------------------------------------------
+
+def test_dist_boundary_payload_accounting():
+    g, prob, mesh = _k1()
+    bp = DistDSIMEngine(prob, mesh, rng="lfsr", precision="bitplane",
+                        replicas=32).boundary_payload()
+    assert bp["dtype"] == "uint32"
+    assert bp["bytes_per_site_all_chains"] == 4.0
+    assert bp["pack_compute"] == "none"
+    i8 = DistDSIMEngine(prob, mesh, rng="lfsr", precision="int8",
+                        replicas=32).boundary_payload()
+    assert i8["bytes_per_site_all_chains"] == 32.0
+    assert i8["bytes_per_site_all_chains"] / \
+        bp["bytes_per_site_all_chains"] == 8.0
+    f32 = DistDSIMEngine(prob, mesh, rng="lfsr",
+                         replicas=32).boundary_payload()
+    assert f32["dtype"] == "uint8-bitmap"
+    assert "pack" in f32["pack_compute"]
+
+
+def test_dist_bitplane_lowered_chunk_is_word_native():
+    """The lowered collective chunk must contain no 8-bit tensors at all:
+    spins, ghosts, and the all-gathered boundary payload are uint32 words
+    end to end — there is nothing to pack or unpack."""
+    g, prob, mesh = _k1()
+    e = DistDSIMEngine(prob, mesh, rng="lfsr", precision="bitplane",
+                       replicas=32)
+    txt = e.lower_chunk(iters=2, S=2, sync=2).as_text()
+    assert "all_gather" in txt
+    # every all-gather in the chunk ships uint32 words
+    ag = [ln for ln in txt.splitlines() if "all_gather" in ln]
+    assert ag and all("ui32" in ln for ln in ag)
+    assert "xi8" not in txt and "xui8" not in txt
+    assert "tensor<i8>" not in txt and "tensor<ui8>" not in txt
+    # the f32 path, by contrast, bit-packs into uint8 bitmaps (pack compute
+    # on the collective path) — the compute the word format deletes
+    f = DistDSIMEngine(prob, mesh, rng="lfsr", replicas=2)
+    ftxt = f.lower_chunk(iters=2, S=2, sync=2).as_text()
+    assert "xui8" in ftxt or "xi8" in ftxt
+
+
+def test_dist_bitplane_snapshot_restore_roundtrip():
+    from repro.core.snapshot import snapshot_state, restore_state
+    g, prob, mesh = _k1()
+    e = DistDSIMEngine(prob, mesh, rng="lfsr", precision="bitplane",
+                       replicas=4)
+    sch = ea_schedule(32)
+    st, _ = e.run_recorded(e.init_state(seed=2), sch, [16], sync_every=4)
+    snap = snapshot_state(st)
+    st2 = e.shard_state(restore_state(snap))
+    a, _ = e.run_recorded(st, sch, [16], sync_every=4)
+    b, _ = e.run_recorded(st2, sch, [16], sync_every=4)
+    assert (np.asarray(e.global_spins(a)) ==
+            np.asarray(e.global_spins(b))).all()
+
+
+# -- serving --------------------------------------------------------------------
+
+def test_server_dist_bitplane_job_and_register_time_prewarm():
+    """Graph-registered problems carry array kwargs (labels); the pool key
+    must hash them by content (regression: every mesh-engine job used to
+    die at the cache probe with 'unhashable type: numpy.ndarray').  With
+    ``prewarm_bitplane=True`` the one R=32 word executable is built at
+    register time, so the first bit-plane tenant is not a cold start, and
+    its lanes are its own chains (prefix-stable padding to the word)."""
+    from repro.serve.server import SampleServer
+    g = ea3d(4, seed=0)
+    srv = SampleServer(pack=True, warm_compile=False)
+    srv.register_problem("g4", graph=g, coloring=lattice3d_coloring(4),
+                         K=1, labels=np.zeros(g.n, np.int32), rng="lfsr",
+                         prewarm_bitplane=True)
+    assert len(srv.prewarm_threads) == 1
+    srv.prewarm_threads[0].join(timeout=400)
+    assert not srv.prewarm_threads[0].is_alive()
+    j = srv.submit("g4", engine="dsim_dist", precision="bitplane",
+                   replicas=8, sweeps=16, sync_every=4, seed=2)
+    r = srv.result(j)
+    assert r["status"] == "done"
+    assert r["cold_start"] is False          # register-time prewarm hit
+    assert r["energies"].shape[1] == 8       # own lanes only, pad dropped
+    # the engine ran at the full word width (one executable for all packs)
+    e = make_engine("dsim_dist", g, coloring=lattice3d_coloring(4), K=1,
+                    labels=np.zeros(g.n, np.int32), rng="lfsr",
+                    precision="bitplane", replicas=8)
+    st = e.init_state(seed=2)
+    st, rec = e.run_recorded(st, ea_schedule(16), [16], sync_every=4)
+    np.testing.assert_array_equal(np.asarray(rec.energies[-1]),
+                                  r["energies"][-1])
+    # the f32 dist path serves through the same (now hashable) pool key
+    j2 = srv.submit("g4", engine="dsim_dist", sweeps=16, sync_every=4,
+                    seed=3)
+    assert srv.result(j2)["status"] == "done"
+
+
+# -- multi-device subprocess tests (forced host device count) ----------------
+
+def test_2dev_word_boundaries_bit_equal_to_int8_across_sync():
+    """Satellite: on a real 2-device mesh, the native-word boundary
+    all-gather reproduces the unpacked int8 dist path bit-for-bit on all
+    32 lanes, for every exchange cadence {1, 4, 'phase'}."""
+    out = run_py("""
+        import numpy as np
+        from repro.core.graph import ea3d
+        from repro.core.coloring import lattice3d_coloring
+        from repro.core.partition import slab_partition
+        from repro.core.dsim import build_partitioned
+        from repro.core.dsim_dist import DistDSIMEngine
+        from repro.core.annealing import ea_schedule
+        from repro.compat import make_mesh, auto_axes
+        L = 4
+        g = ea3d(L, seed=7); col = lattice3d_coloring(L)
+        prob = build_partitioned(g, col, slab_partition(L, 2), 2)
+        mesh = make_mesh((2,), ("data",), axis_types=auto_axes(1))
+        sch = ea_schedule(96)
+        for sync in (1, 4, "phase"):
+            outs = {}
+            for prec in ("int8", "bitplane"):
+                e = DistDSIMEngine(prob, mesh, rng="lfsr", precision=prec,
+                                   replicas=32)
+                st = e.init_state(seed=3)
+                st, rec = e.run_recorded_full(st, sch, [32, 96],
+                                              sync_every=sync)
+                outs[prec] = (np.asarray(e.global_spins(st)),
+                              np.asarray(rec.energies), rec.flips)
+            m8, E8, f8 = outs["int8"]; mw, Ew, fw = outs["bitplane"]
+            ok = bool((m8 == mw).all()) and bool((E8 == Ew).all()) \\
+                and f8 == fw
+            print(f"SYNC {sync} BITWISE {ok} flips {fw}")
+    """)
+    assert out.count("BITWISE True") == 3
+
+
+def test_2dev_cmft_phase_publishes_instantaneous_boundaries():
+    """Satellite regression: cmft mode with sync_every='phase' used to
+    publish macc/1 — all-zero ghost means right after every window reset.
+    Per-phase refreshes must publish the instantaneous states (exactly the
+    stacked engine's semantics), and no all-zero ghost payload may ever be
+    exchanged after init."""
+    out = run_py("""
+        import numpy as np
+        from repro.core.graph import ea3d
+        from repro.core.coloring import lattice3d_coloring
+        from repro.core.partition import slab_partition
+        from repro.core.dsim import build_partitioned, DSIMEngine
+        from repro.core.dsim_dist import DistDSIMEngine
+        from repro.core.annealing import ea_schedule
+        from repro.compat import make_mesh, auto_axes
+        L = 4
+        g = ea3d(L, seed=5); col = lattice3d_coloring(L)
+        prob = build_partitioned(g, col, slab_partition(L, 2), 2)
+        mesh = make_mesh((2,), ("data",), axis_types=auto_axes(1))
+        sch = ea_schedule(64)
+        d = DistDSIMEngine(prob, mesh, rng="lfsr", mode="cmft")
+        sd = d.init_state(seed=3)
+        sd, (_, Ed) = d.run_recorded(sd, sch, [64], sync_every="phase")
+        s = DSIMEngine(prob, rng="lfsr", mode="cmft")
+        ss = s.init_state(seed=3)
+        ss, (_, Es) = s.run_recorded(ss, sch, [64], sync_every="phase")
+        md = np.asarray(d.global_spins(sd)); ms = np.asarray(s.global_spins(ss))
+        print("BITWISE", bool((md == ms).all()))
+        gh = np.asarray(sd.ghosts)
+        print("GHOSTS_PM1", bool((np.abs(gh) == 1.0).all()))
+    """)
+    assert "BITWISE True" in out
+    assert "GHOSTS_PM1 True" in out

@@ -11,8 +11,9 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core.packing import (LANE_WIDTH, pack_lanes, pack_pm1,
-                                pad_to_multiple, unpack_lanes, unpack_pm1)
+from repro.core.packing import (LANE_WIDTH, lane_permute, lane_swap,
+                                pack_lanes, pack_pm1, pad_to_multiple,
+                                unpack_lanes, unpack_pm1)
 
 RNG = np.random.default_rng(5)
 
@@ -100,3 +101,77 @@ def test_pack_lanes_lane_bit_identity():
     w = np.asarray(pack_lanes(jnp.asarray(x)))
     for r in range(R):
         np.testing.assert_array_equal((w >> r) & 1, (x[r] > 0))
+
+
+# -- lane permutation (lane_permute / lane_swap) ------------------------------
+# the replica-exchange swap move of the packed tempering ladder: one bit
+# gather/scatter applied to every word
+
+@pytest.mark.parametrize("L", [1, 2, 7, 31, 32])
+def test_lane_permute_matches_unpacked_gather(L):
+    """lane_permute on words == the same permutation on unpacked lanes."""
+    x = RNG.choice([-1, 1], size=(L, 5, 3)).astype(np.int8)
+    perm = RNG.permutation(L)
+    w = pack_lanes(jnp.asarray(x))
+    out = unpack_lanes(lane_permute(w, perm), L)
+    np.testing.assert_array_equal(np.asarray(out), x[perm])
+
+
+@pytest.mark.parametrize("L", [1, 6, 32])
+def test_lane_permute_inverse_round_trip(L):
+    """Applying a permutation then its inverse restores every word (on the
+    live lanes; lanes >= L are cleared by convention)."""
+    x = RNG.choice([-1, 1], size=(L, 11)).astype(np.int8)
+    w = pack_lanes(jnp.asarray(x))
+    perm = RNG.permutation(L)
+    inv = np.argsort(perm)
+    back = lane_permute(lane_permute(w, perm), inv)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+
+def test_lane_permute_identity_clears_dead_lanes():
+    """The identity permutation of L lanes zeroes bits >= L — the packed
+    convention that keeps unused lanes inert."""
+    w = jnp.full((4,), 0xFFFFFFFF, jnp.uint32)
+    out = np.asarray(lane_permute(w, np.arange(5)))
+    assert (out == 0b11111).all()
+
+
+def test_lane_permute_rejects_bad_width():
+    with pytest.raises(ValueError):
+        lane_permute(jnp.zeros((3,), jnp.uint32), np.arange(LANE_WIDTH + 1))
+    with pytest.raises(ValueError):
+        lane_permute(jnp.zeros((3,), jnp.uint32), np.arange(0))
+
+
+def test_lane_swap_is_transposition():
+    """lane_swap(i, j) == lane_permute with the (i j) transposition on the
+    live lanes, and is an involution (swap twice = identity)."""
+    L = 16
+    x = RNG.choice([-1, 1], size=(L, 9)).astype(np.int8)
+    w = pack_lanes(jnp.asarray(x))
+    i, j = 3, 12
+    perm = np.arange(L)
+    perm[[i, j]] = perm[[j, i]]
+    np.testing.assert_array_equal(np.asarray(lane_swap(w, i, j)),
+                                  np.asarray(lane_permute(w, perm)))
+    np.testing.assert_array_equal(np.asarray(lane_swap(lane_swap(w, i, j),
+                                                       i, j)),
+                                  np.asarray(w))
+
+
+def test_lane_swap_accept_gated():
+    """A False accept is a no-op; a per-site accept vector swaps exactly
+    the accepted sites (the Metropolis gate of a packed exchange pass)."""
+    L = 8
+    x = RNG.choice([-1, 1], size=(L, 10)).astype(np.int8)
+    w = pack_lanes(jnp.asarray(x))
+    np.testing.assert_array_equal(
+        np.asarray(lane_swap(w, 1, 5, accept=jnp.bool_(False))),
+        np.asarray(w))
+    acc = jnp.asarray(RNG.random(10) < 0.5)
+    out = unpack_lanes(lane_swap(w, 1, 5, accept=acc), L)
+    want = x.copy()
+    accn = np.asarray(acc)
+    want[1, accn], want[5, accn] = x[5, accn], x[1, accn]
+    np.testing.assert_array_equal(np.asarray(out), want)

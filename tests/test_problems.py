@@ -161,6 +161,134 @@ def test_apt_icm_invariants():
     np.testing.assert_allclose(before, after, atol=1e-3)
 
 
+def _apt_spins(apt, m):
+    """(P, T, N) int8 view of a raw state array in either mode."""
+    if apt.packed:
+        from repro.core.packing import unpack_lanes
+        return np.asarray(unpack_lanes(m, apt.L)).reshape(apt.P, apt.T,
+                                                          apt.n)
+    return np.asarray(m)
+
+
+def test_apt_packed_guards():
+    g = ea3d(4, seed=0)
+    col = lattice3d_coloring(4)
+    betas = np.linspace(0.5, 3.0, 8)
+    with pytest.raises(ValueError, match="rng='lfsr'"):
+        APTICM(g, col, betas, chains=4, packed=True)
+    with pytest.raises(ValueError, match="bit lanes"):
+        # chains * temperatures = 40 > 32 word lanes
+        APTICM(g, col, np.linspace(0.5, 3.0, 10), chains=4, rng="lfsr",
+               packed=True)
+    with pytest.raises(ValueError, match="unknown rng"):
+        APTICM(g, col, betas, chains=4, rng="pcg")
+
+
+def test_apt_packed_bitwise_matches_unpacked_lfsr():
+    """The lane-packed ladder (4 chains x 8 temperatures = 32 word lanes)
+    is bit-identical to the unpacked fixed-point run at matched seeds:
+    same spins, same energies, same best-energy trajectory, same swap and
+    ICM counters — swap moves as lane permutations included."""
+    g = ea3d(4, seed=1)
+    col = lattice3d_coloring(4)
+    betas = np.linspace(0.5, 3.0, 8)
+    un = APTICM(g, col, betas, chains=4, rng="lfsr")
+    pk = APTICM(g, col, betas, chains=4, rng="lfsr", packed=True)
+    su, sp = un.init_state(seed=0), pk.init_state(seed=0)
+    np.testing.assert_array_equal(np.asarray(un.spins(su)),
+                                  np.asarray(pk.spins(sp)))
+    su, (_, bu) = un.run(su, 12, icm_every=4, record_every=4)
+    sp, (_, bp) = pk.run(sp, 12, icm_every=4, record_every=4)
+    np.testing.assert_array_equal(bu, bp)
+    np.testing.assert_array_equal(np.asarray(un.spins(su)),
+                                  np.asarray(pk.spins(sp)))
+    np.testing.assert_array_equal(np.asarray(su.E), np.asarray(sp.E))
+    assert int(su.swaps) == int(sp.swaps) > 0
+    assert int(su.icms) == int(sp.icms) > 0
+    cu, eu = un.best_config(su)
+    cp, ep = pk.best_config(sp)
+    assert eu == ep
+    np.testing.assert_array_equal(cu, cp)
+
+
+def test_apt_packed_incremental_energy_exact():
+    """Packed-sweep incremental energies stay exact against direct
+    recomputation from the unpacked lanes (XOR field + LUT accept feed the
+    same per-flip delta as the integer reference)."""
+    g = ea3d(4, seed=2)
+    col = lattice3d_coloring(4)
+    pk = APTICM(g, col, np.linspace(0.4, 2.5, 8), chains=4, rng="lfsr",
+                packed=True)
+    st = pk.init_state(seed=3)
+    st, _ = pk.run(st, 10, icm_every=3, record_every=5)
+    Edir = jax.vmap(jax.vmap(lambda mm: energy(g, mm)))(pk.spins(st))
+    assert float(jnp.abs(Edir - st.E).max()) == 0.0
+
+
+@pytest.mark.parametrize("f_max", [6, 70])
+def test_apt_accept_rows_narrow_and_wide_agree_with_gather(f_max):
+    """Both branches of _accept_rows (rank-count unroll for narrow rows,
+    take_along_axis fallback for rows wider than LUT_SELECT_MAX_WIDTH —
+    non-+-J couplings blow f_max up to int8 magnitudes) implement the same
+    accept test ``u >= thr[field + f_max]``."""
+    from repro.core.pbit import LUT_SELECT_MAX_WIDTH
+    g = ea3d(4, seed=0)
+    col = lattice3d_coloring(4)
+    apt = APTICM(g, col, np.linspace(0.5, 2.0, 4), chains=2, rng="lfsr")
+    rng = np.random.default_rng(7)
+    lw = 2 * f_max + 1
+    assert (lw <= LUT_SELECT_MAX_WIDTH) == (f_max == 6)
+    # monotone nonincreasing rows, like threshold_lut guarantees
+    rows = np.sort(rng.integers(0, 1 << 24, size=(4, lw)),
+                   axis=-1)[:, ::-1].astype(np.uint32)
+    thr = jnp.asarray(rows[None, :, None, :])            # (1, T, 1, lw)
+    field = jnp.asarray(rng.integers(-f_max, f_max + 1, size=(3, 4, 10)),
+                        jnp.int32)
+    u = jnp.asarray(rng.integers(0, 1 << 24,
+                                 size=(3, 4, 10)).astype(np.uint32))
+    apt.f_max = f_max
+    got = np.asarray(apt._accept_rows(thr, field, u))
+    idx = np.clip(np.asarray(field) + f_max, 0, lw - 1)
+    want = np.asarray(u) >= np.take_along_axis(
+        np.broadcast_to(rows[None, :, None, :], (3, 4, 10, lw)),
+        idx[..., None], axis=-1)[..., 0]
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("packed", [False, True])
+def test_apt_icm_move_invariants(packed):
+    """Satellite invariants of the Houdayer move, in both modes: the
+    cluster flip (a) touches identical site sets in both chains of a pair,
+    (b) stays confined to the pair's disagreement set, and (c) preserves
+    E1+E2 per (pair, temperature) exactly up to f32 recomputation."""
+    g = ea3d(4, seed=3)
+    col = lattice3d_coloring(4)
+    kw = dict(rng="lfsr", packed=True) if packed else {}
+    apt = APTICM(g, col, np.linspace(0.5, 3.0, 8), chains=4, **kw)
+    st = apt.init_state(seed=1)
+    st, _ = apt.run(st, 6, icm_every=0, record_every=6)   # decorrelate
+    m0 = _apt_spins(apt, st.m)
+    E0 = np.asarray(st.E)
+    if packed:
+        m, E, _, icms = apt._icm_packed(st.m, st.E, st.key, st.icms)
+    else:
+        m, E, _, icms = apt._icm(st.m, st.E, st.key, st.icms)
+    m1 = _apt_spins(apt, m)
+    flipped = m0 != m1                                    # (P, T, N)
+    disagree = m0[0::2] != m0[1::2]                       # (P/2, T, N)
+    # same cluster flips in both chains of each pair
+    np.testing.assert_array_equal(flipped[0::2], flipped[1::2])
+    # cluster confined to the disagreement set
+    assert not (flipped[0::2] & ~disagree).any()
+    # pair-sum energies preserved (isoenergetic move)
+    pair0 = E0[0::2] + E0[1::2]
+    pair1 = np.asarray(E)[0::2] + np.asarray(E)[1::2]
+    np.testing.assert_allclose(pair1, pair0, atol=1e-3)
+    # the move counter advances by the pairs that had any disagreement
+    assert int(icms) - int(st.icms) == int(disagree.any(axis=-1).sum())
+    assert int(icms) > int(st.icms)
+
+
 def test_apt_beats_plain_annealing_on_hard_instance():
     g = ea3d(5, seed=9)
     col = lattice3d_coloring(5)

@@ -37,6 +37,8 @@ REQUIRED_KEYS = REQUIRED_NUMBERS + [
     # the aggregate R32-vs-R8 ratio is easy to misread as per-lane; the
     # record must carry its own disclaimer
     "speedup_bitplane_vs_int8_R8_note",
+    # the word wire format on the mesh engine + the lane-packed ladder
+    "dsim_dist_bitplane", "apt_icm_packed",
 ]
 SPREAD_FIELDS = ("best", "min", "median", "trimmed_median", "max", "reps")
 
@@ -86,6 +88,51 @@ def check(payload: dict) -> list:
             not isinstance(payload.get("host"), dict):
         errors.append("speedup_bitplane_vs_int8_R8 recorded without a "
                       "host fingerprint")
+    dist = payload.get("dsim_dist_bitplane")
+    if isinstance(dist, dict):
+        for f in ("boundary_bytes_per_site_bitplane_R32",
+                  "boundary_bytes_per_site_int8_unpacked_R32",
+                  "boundary_shrink", "speedup_bitplane_vs_int8_unpacked"):
+            _finite_positive(f"dsim_dist_bitplane.{f}", dist.get(f), errors)
+        for path, v in dist.get("lane_flips_per_s", {}).items():
+            _finite_positive(f"dsim_dist_bitplane.lane_flips_per_s[{path}]",
+                             v, errors)
+        if dist.get("payload_dtype") != "uint32":
+            errors.append("dsim_dist_bitplane.payload_dtype: expected "
+                          f"'uint32', got {dist.get('payload_dtype')!r} — "
+                          "the boundary all-gather must ship native words")
+        if dist.get("pack_compute_bitplane") != "none":
+            errors.append("dsim_dist_bitplane.pack_compute_bitplane: the "
+                          "word path must ship boundaries with zero "
+                          "pack/unpack compute")
+    elif "dsim_dist_bitplane" in payload:
+        errors.append(f"dsim_dist_bitplane: expected a dict, got {dist!r}")
+    apt = payload.get("apt_icm_packed")
+    if isinstance(apt, dict):
+        for side in ("packed_sweeps_per_s", "unpacked_sweeps_per_s"):
+            stats = apt.get(side)
+            if not isinstance(stats, dict):
+                errors.append(f"apt_icm_packed.{side}: expected a spread "
+                              f"dict, got {stats!r}")
+                continue
+            for f in SPREAD_FIELDS:
+                v = stats.get(f)
+                if v is None:
+                    errors.append(f"apt_icm_packed.{side} missing {f!r}")
+                else:
+                    _finite_positive(f"apt_icm_packed.{side}.{f}", v, errors)
+        _finite_positive("apt_icm_packed.speedup_packed_vs_unpacked",
+                         apt.get("speedup_packed_vs_unpacked"), errors)
+        swap = apt.get("swap_move_cost")
+        if not isinstance(swap, dict):
+            errors.append(f"apt_icm_packed.swap_move_cost: expected a dict, "
+                          f"got {swap!r}")
+        else:
+            for f in ("packed_s", "unpacked_s"):
+                _finite_positive(f"apt_icm_packed.swap_move_cost.{f}",
+                                 swap.get(f), errors)
+    elif "apt_icm_packed" in payload:
+        errors.append(f"apt_icm_packed: expected a dict, got {apt!r}")
     k2k = payload.get("kernel_int8_vs_f32")
     if isinstance(k2k, dict):
         for side in ("f32_flips_per_s", "int8_flips_per_s"):

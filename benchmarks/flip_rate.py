@@ -133,6 +133,83 @@ def _kernel_head_to_head(L: int, reps: int = 15) -> dict:
     return out
 
 
+def _bitplane_word_scaling_bench(L: int, reps: int = 9) -> dict:
+    """Per-lane cost of the word sweep across stacked word planes, at the
+    kernel layer (W in {1, 2, 4} interleaved, halos fixed) — the gate that
+    stacking planes does not tax the lanes.
+
+    Kernel-layer like ``_kernel_head_to_head`` and for the same reason:
+    the end-to-end engine numbers fold per-chunk dispatch and this host's
+    scheduler swings into every path, drowning the W-scaling signal; the
+    word loop itself is what the multi-word fabric adds, so it is what
+    gets measured.  (The engine-level aggregates at R=32/64/128 ride the
+    interleaved rep loop and land in ``all_paths_flips_per_s``.)
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.lattice import build_ea3d_lattice
+    from repro.core.packing import pack_lanes
+    from repro.core.pbit import (bitplane_planes, field_bound,
+                                 quantize_couplings, threshold_lut)
+    from repro.kernels.ref import pbit_bitplane_sweep_ref
+
+    p = build_ea3d_lattice(L)
+    rng = np.random.default_rng(0)
+    h_q, w6_q, scale = quantize_couplings(p.h, p.w6)
+    signs6, nz6, base, _ = bitplane_planes(h_q, w6_q)
+    lut = jnp.asarray(threshold_lut([3.0], scale, field_bound(h_q, w6_q)))
+    rows = jnp.zeros((SYNC,), jnp.int32)
+    masks = np.asarray(p.masks)
+    widths, fns, inputs = (1, 2, 4), {}, {}
+    for W in widths:
+        R = 32 * W
+        mw = pack_lanes(jnp.asarray(
+            rng.choice([-1, 1], size=(R,) + p.dims).astype(np.int8)))
+        s = jnp.asarray(rng.integers(1, 2 ** 32, size=(R,) + p.dims,
+                                     dtype=np.uint32))
+        # every lane live (R is a word multiple): full masks on all planes
+        masks_w = jnp.asarray(
+            np.where(masks[:, None] != 0, np.uint32(0xFFFFFFFF),
+                     np.uint32(0))[:, [0] * W])
+        halos_w = tuple(jnp.zeros((W, L, L), jnp.uint32) for _ in range(6))
+        fns[W] = jax.jit(lambda mw, s, mk=masks_w, hl=halos_w:
+                         pbit_bitplane_sweep_ref(mw, s, rows, mk, signs6,
+                                                 nz6, base, hl, lut))
+        inputs[W] = (mw, s)
+        jax.block_until_ready(fns[W](mw, s)[0])   # compile outside reps
+    calls = max(1, (1 << 19) // (L ** 3 * SYNC))
+    rates = {W: [] for W in widths}                # AGGREGATE lane-flips/s
+    for _ in range(reps):
+        for W in widths:                           # interleaved
+            mw, s = inputs[W]
+            t0 = time.perf_counter()
+            for _ in range(calls):
+                o = fns[W](mw, s)
+            jax.block_until_ready(o[0])
+            rates[W].append(L ** 3 * SYNC * 32 * W * calls
+                            / (time.perf_counter() - t0))
+    spread = {W: _stats(v) for W, v in rates.items()}
+    agg = {f"W{W}_R{32 * W}": spread[W]["best"] for W in widths}
+    return {
+        "L": L, "sweeps_per_call": SYNC, "calls_per_rep": calls,
+        "layer": "kernel (jitted word sweep, halos fixed, interleaved)",
+        "note": ("lane_efficiency is PER-LANE COST: aggregate lane-flips/s "
+                 "at W planes over aggregate at one plane (on this serial "
+                 "host total throughput is the conserved quantity, so the "
+                 "wall-clock rate of any single lane divides by W by "
+                 "construction; ~1.0 means stacking planes taxes no lane)"),
+        "aggregate_lane_flips_per_s": agg,
+        "aggregate_lane_flips_per_s_spread":
+            {f"W{W}_R{32 * W}": spread[W] for W in widths},
+        "per_lane_flips_per_s":
+            {f"W{W}_R{32 * W}": agg[f"W{W}_R{32 * W}"] / (32 * W)
+             for W in widths},
+        "lane_efficiency_vs_one_word": {
+            f"W{W}_R{32 * W}": agg[f"W{W}_R{32 * W}"] / agg["W1_R32"]
+            for W in widths if W > 1},
+    }
+
+
 def _dist_word_boundary_bench(L: int, sweeps: int, reps: int = 5) -> dict:
     """Mesh-engine word path: dsim_dist bitplane vs *unpacked* int8 at the
     same R=32 width on a one-device mesh (measures the engine path without
@@ -279,8 +356,9 @@ def run(quick: bool = True, engine: str = None, replicas: int = 1):
     # the replica-parallel production paths: one fused call drives R_BATCH
     # independent chains of the SAME instance (the paper's many-anneals-
     # per-machine operating point; the seed had neither fusion nor
-    # replicas), and the bit-plane path packs 32 lanes into every uint32
-    # word — the multi-spin-coded operating point this benchmark gates
+    # replicas), and the bit-plane paths pack 32 lanes into every uint32
+    # word — one, two, and four stacked word planes (the multi-word fabric
+    # this benchmark gates: per-lane rate must hold as W grows)
     R_BATCH = max(R, 8)
     R_LANES = 32
     if engine in (None, "lattice"):
@@ -288,7 +366,11 @@ def run(quick: bool = True, engine: str = None, replicas: int = 1):
                 (f"lattice_fused_R{R_BATCH}", "f32", R_BATCH),
                 (f"lattice_fused_int8_R{R_BATCH}", "int8", R_BATCH),
                 (f"lattice_fused_int8_R{R_LANES}", "int8", R_LANES),
-                (f"lattice_bitplane_R{R_LANES}", "bitplane", R_LANES)]:
+                (f"lattice_bitplane_R{R_LANES}", "bitplane", R_LANES),
+                (f"lattice_bitplane_R{2 * R_LANES}", "bitplane",
+                 2 * R_LANES),
+                (f"lattice_bitplane_R{4 * R_LANES}", "bitplane",
+                 4 * R_LANES)]:
             handles[name] = make_engine("lattice", L=L, seed=0, impl="ref",
                                         precision=prec, replicas=rr)
             sync_used[name] = SYNC
@@ -306,10 +388,11 @@ def run(quick: bool = True, engine: str = None, replicas: int = 1):
     # the word-lane mesh-engine path and the lane-packed tempering ladder
     # (cheap at quick size; part of the gated record, so they run whenever
     # the record below will be written)
-    dist_word = apt_packed = None
+    dist_word = apt_packed = word_scaling = None
     if R == 1 and engine in (None, "lattice"):
         dist_word = _dist_word_boundary_bench(L, max(sweeps // 4, 256))
         apt_packed = _apt_packed_bench()
+        word_scaling = _bitplane_word_scaling_bench(L)
 
     flips = {k: v * n * rep_of[k] for k, v in out.items()}
     detail = {"L": L, "N": n, "replicas": rep_of, "sync_every": sync_used,
@@ -325,6 +408,8 @@ def run(quick: bool = True, engine: str = None, replicas: int = 1):
         detail["dsim_dist_bitplane"] = dist_word
     if apt_packed is not None:
         detail["apt_icm_packed"] = apt_packed
+    if word_scaling is not None:
+        detail["bitplane_word_scaling"] = word_scaling
     save_detail("flip_rate", detail)
 
     # the seed-comparison record is only meaningful for the canonical R=1
@@ -334,6 +419,8 @@ def run(quick: bool = True, engine: str = None, replicas: int = 1):
         best_batch = max((flips[k] for k in batch_keys),
                          default=flips["lattice_kernel"])
         bp_key = f"lattice_bitplane_R{R_LANES}"
+        bp64_key = f"lattice_bitplane_R{2 * R_LANES}"
+        bp128_key = f"lattice_bitplane_R{4 * R_LANES}"
         i8_key = f"lattice_fused_int8_R{R_BATCH}"
         bench = {
             "mode": "quick" if quick else "full",
@@ -385,6 +472,15 @@ def run(quick: bool = True, engine: str = None, replicas: int = 1):
             # on this 2-core container (per-replica rate FALLS with R for
             # the unpacked paths, while the word path holds at 32)
             f"{bp_key}_flips_per_s": flips[bp_key],
+            f"{bp64_key}_flips_per_s": flips[bp64_key],
+            f"{bp128_key}_flips_per_s": flips[bp128_key],
+            # the multi-word fabric: stacking word planes multiplies the
+            # lane count (W=2 -> 64 lanes, W=4 -> 128) with one word loop
+            # around the same one-word kernel; lane_efficiency is the
+            # per-lane rate at W words over the per-lane rate at one word
+            # (the gate: stacking planes must not tax the lanes), measured
+            # at the kernel layer with interleaved reps
+            "bitplane_word_scaling": word_scaling,
             "speedup_bitplane_vs_int8_R8": flips[bp_key] / flips[i8_key],
             "speedup_bitplane_vs_int8_R8_note": (
                 "AGGREGATE lane-flips ratio of one 32-lane word call vs "

@@ -82,10 +82,11 @@ def main():
     print(f"lattice x{R} replicas (int8 pipeline, {eng.kernel_path}): "
           f"best E = {Es.min():9.1f}, per-replica {np.round(Es, 1)}")
 
-    # ... and the bit-plane form of the same pipeline: 32 independent
-    # replicas packed into the bit lanes of one uint32 word per site —
-    # multi-spin coding, the paper's one-bit-per-spin claim in software
-    # (DESIGN.md "Bit-plane replica pipeline")
+    # ... and the bit-plane form of the same pipeline: independent
+    # replicas packed into the bit lanes of stacked uint32 word planes
+    # (32 per word, up to 8 words) — multi-spin coding, the paper's
+    # one-bit-per-spin claim in software (DESIGN.md "Bit-plane replica
+    # pipeline")
     eng = make_engine("lattice", L=L, seed=0, replicas=32,
                       precision="bitplane")
     st = eng.init_state(seed=0)
@@ -96,20 +97,23 @@ def main():
           f"best E = {Es.min():9.1f} ({rec.flips:,} lane-flips)")
 
     # lane-packed APT+ICM: the (chains x temperatures) tempering grid of
-    # the G81 workload rides the 32 word lanes — replica-exchange swap
-    # moves are lane permutations (one bit gather/scatter per word), ICM
-    # disagreement is one XOR of each word against its chain-pair shift;
-    # bit-identical to the unpacked fixed-point ladder at matched seeds
+    # the G81 workload rides the word lanes — the paper's full T=64
+    # ladder at 2 chains is 128 lanes across 4 stacked word planes.
+    # Replica-exchange swap moves are lane permutations (a bit
+    # gather/scatter across the word stack, cross-word moves included),
+    # ICM disagreement is a per-pair (word, bit) extraction; bit-identical
+    # to the unpacked fixed-point ladder at matched seeds
     # (DESIGN.md "The word wire format across engines")
     from repro.core.apt_icm import APTICM
     gs = ea3d(6, seed=0)
     cols = lattice3d_coloring(6)
-    betas = np.linspace(0.3, 3.0, 8)           # 4 chains x 8 temps = 32 lanes
-    apt = APTICM(gs, cols, betas, chains=4, rng="lfsr", packed=True)
+    betas = np.geomspace(0.3, 3.0, 64)         # 2 chains x 64 temps = 128 lanes
+    apt = APTICM(gs, cols, betas, chains=2, rng="lfsr", packed=True)
     stp, (_, best) = apt.run(apt.init_state(seed=0), 60, icm_every=10,
                              record_every=20)
     _, e_best = apt.best_config(stp)
-    print(f"\nAPT+ICM packed (L=6, {apt.L} lanes): best E = {e_best:9.1f}, "
+    print(f"\nAPT+ICM packed (L=6, {apt.L} lanes / {apt.words} words): "
+          f"best E = {e_best:9.1f}, "
           f"{int(stp.swaps)} swaps (lane permutations), "
           f"{int(stp.icms)} cluster moves")
 

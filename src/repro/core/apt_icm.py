@@ -22,14 +22,17 @@ Three execution modes share the algorithm:
   LFSR, and the accept as a LUT-threshold compare of the raw 24-bit draw
   (one LUT row per ladder temperature).
 * ``packed=True`` (requires ``rng="lfsr"``) — the whole (chains x
-  temperatures) grid rides the bit lanes of uint32 words: lane
-  ``l = p*T + t`` is chain p at temperature t, the sweep runs the XOR /
-  carry-save-adder word field with a per-lane LUT-row fan, replica-exchange
-  swap moves become *lane permutations* (one bit gather/scatter applied to
-  every word, :func:`repro.core.packing.lane_permute`), and the ICM
-  disagreement set is one XOR of each word against its chain-pair shift.
-  Packed trajectories are bit-identical to the unpacked ``rng="lfsr"`` run
-  at matched seeds.
+  temperatures) grid rides the bit lanes of stacked uint32 word planes:
+  lane ``l = p*T + t`` is chain p at temperature t, living at word plane
+  ``l // 32``, bit ``l % 32`` — so a ladder of up to
+  ``MAX_LANE_WORDS * 32`` lanes (G81-class T = 64 ladders included) packs
+  into W = ceil(P*T/32) planes.  The sweep runs the XOR / carry-save-adder
+  word field with a per-lane LUT-row fan, replica-exchange swap moves
+  become *lane permutations* — cross-word transpositions are the same one
+  bit gather/scatter applied to every site
+  (:func:`repro.core.packing.lane_permute`) — and the ICM disagreement set
+  is a per-pair bit extraction across the planes.  Packed trajectories are
+  bit-identical to the unpacked ``rng="lfsr"`` run at matched seeds.
 """
 
 from __future__ import annotations
@@ -48,9 +51,10 @@ from .gibbs import color_fields
 from .pbit import (FixedPoint, LUT_SELECT_MAX_WIDTH, bitplane_planes,
                    field_bound, lfsr_init, lfsr_next, quantize,
                    quantize_couplings, threshold_lut)
-from .packing import LANE_WIDTH, lane_permute, lane_shifts, pack_lanes, \
+from .packing import LANE_WIDTH, lane_coords, lane_permute, pack_lanes, \
     unpack_lanes
 from .energy import energy as direct_energy
+from repro.engines.base import check_lanes
 from repro.kernels.ops import bitplane_gather_count_op
 
 __all__ = ["APTICM", "APTState", "adapt_ladder"]
@@ -59,7 +63,7 @@ __all__ = ["APTICM", "APTState", "adapt_ladder"]
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class APTState:
-    m: jnp.ndarray       # (P, T, N) int8 — or (N,) uint32 words when packed
+    m: jnp.ndarray       # (P, T, N) int8 — or (W, N) uint32 word planes when packed
     E: jnp.ndarray       # (P, T) f32
     key: jnp.ndarray     # philox stream (exchange/ICM draws in every mode)
     sweep: jnp.ndarray
@@ -87,10 +91,9 @@ class APTICM:
         self.fmt = fmt
         self.rng_kind = rng
         self.packed = bool(packed)
-        if packed and self.L > LANE_WIDTH:
-            raise ValueError(
-                f"packed mode rides the {LANE_WIDTH} bit lanes of one "
-                f"uint32 word; chains*temperatures = {self.L} exceeds it")
+        # packed grids stack word planes: lane l -> (word l//32, bit l%32)
+        self.words = check_lanes("bitplane", self.L,
+                                 what="chains*temperatures") if packed else 1
         self.n = g.n
         self._nodes = [jnp.asarray(grp) for grp in coloring.groups]
         self._idx = [jnp.take(g.idx, grp, axis=0) for grp in self._nodes]
@@ -120,14 +123,21 @@ class APTICM:
             # per-lane LUT-row fan: lane l = p*T + t reads row t
             lane_rows = np.tile(np.arange(self.T), self.P)
             self._thr_lanes = self._lut[jnp.asarray(lane_rows)][:, None, :]
+            # per-lane (word, bit) coordinates for the gather/scatter fans
+            self._lane_w, self._lane_b = lane_coords(self.L, 1)
             # even-chain lane ids (the ICM pair anchors): lane(2p, t); the
-            # paired chain sits T lanes up — lane(2p+1, t) = lane(2p, t) + T
+            # paired chain sits T lanes up — lane(2p+1, t) = lane(2p, t) + T.
+            # Pairs may straddle word boundaries, so each side carries its
+            # own (word, bit) coordinates.
             even = np.asarray([[2 * p * self.T + t for t in range(self.T)]
-                               for p in range(self.P // 2)], np.uint32)
-            self._even_sh = jnp.asarray(even)[:, :, None]    # (P/2, T, 1)
-            self._even_mask = jnp.uint32(
-                int(np.bitwise_or.reduce(np.uint64(1) << even.reshape(-1)
-                                         .astype(np.uint64))))
+                               for p in range(self.P // 2)], np.int64)
+            odd = even + self.T
+            self._ev_w = jnp.asarray((even // LANE_WIDTH).astype(np.int32))
+            self._ev_b = jnp.asarray(
+                (even % LANE_WIDTH).astype(np.uint32))[:, :, None]
+            self._od_w = jnp.asarray((odd // LANE_WIDTH).astype(np.int32))
+            self._od_b = jnp.asarray(
+                (odd % LANE_WIDTH).astype(np.uint32))[:, :, None]
         self._step = jax.jit(self._step_impl, static_argnames=("do_icm",))
 
     # -- init ------------------------------------------------------------------
@@ -148,7 +158,7 @@ class APTICM:
             lfsr = lfsr.reshape(self.L, self.n) if self.packed else \
                 lfsr.reshape(self.P, self.T, self.n)
         if self.packed:
-            m = pack_lanes(m.reshape(self.L, self.n))      # (N,) words
+            m = pack_lanes(m.reshape(self.L, self.n))      # (W, N) words
         return APTState(m=m, E=E, key=key, sweep=zero, swaps=zero,
                         icms=zero, lfsr=lfsr)
 
@@ -217,9 +227,11 @@ class APTICM:
 
     def _gibbs_sweep_packed(self, mw, E, lfsr):
         """Word sweep: XOR sign application + carry-save adder tree for the
-        per-lane field, per-lane LFSR columns, per-lane LUT-row fan."""
+        per-lane field, per-lane LFSR columns, per-lane LUT-row fan.  Lane
+        l reads bit ``l % 32`` of word plane ``l // 32`` (``mw`` is (W, N));
+        lane scatters land on disjoint bits, so ``.add`` composes them."""
         scale = jnp.float32(self.q_scale)
-        lanes = lane_shifts(self.L, 1)                       # (L, 1)
+        wl, bl = self._lane_w, self._lane_b                  # (L,), (L, 1)
         one = jnp.uint32(1)
         i32 = jnp.int32
         Ef = E.reshape(-1)                                   # (L,)
@@ -232,19 +244,20 @@ class APTICM:
             lfsr = lfsr.at[:, nodes].set(s)
             u = s >> jnp.uint32(8)                           # (L, nc)
             cnt = jnp.zeros(u.shape, i32)
-            for i, b in enumerate(counts):
-                cnt = cnt + (((b[None, :] >> lanes) & one)
+            for i, b in enumerate(counts):                   # b: (W, nc)
+                cnt = cnt + (((b[wl] >> bl) & one)
                              << jnp.uint32(i)).astype(i32)
             field = self._base[c][None, :] - self.f_max + 2 * cnt
             accept = self._accept_rows(self._thr_lanes, field, u)
-            oldb = (mw[nodes][None, :] >> lanes) & one
+            mwn = mw[:, nodes]                               # (W, nc)
+            oldb = (mwn[wl] >> bl) & one
             old = jnp.where(oldb != 0, 1, -1)
             new = jnp.where(accept, 1, -1)
             Ef = Ef - ((new - old).astype(jnp.float32)
                        * field.astype(jnp.float32)).sum(axis=-1) * scale
-            upd = (accept.astype(jnp.uint32) << lanes).sum(axis=0) \
-                .astype(jnp.uint32)
-            mw = mw.at[nodes].set(upd)
+            upd = jnp.zeros(mwn.shape, jnp.uint32) \
+                .at[wl].add(accept.astype(jnp.uint32) << bl)
+            mw = mw.at[:, nodes].set(upd)
         return mw, Ef.reshape(self.P, self.T), lfsr
 
     # -- replica exchange ---------------------------------------------------------
@@ -333,15 +346,15 @@ class APTICM:
         return mn, En, key, icms
 
     def _icm_packed(self, mw, E, key, icms):
-        """Houdayer move on XOR'd disagreement words: bit l (an even-chain
-        lane) of ``mw ^ (mw >> T)`` is set exactly where chain pair
-        (2p, 2p+1) disagrees at temperature t — one shift+XOR per word
-        replaces the (P/2, T, N) spin-product of the unpacked path.  The
-        cluster flip is one more XOR against both lanes of each pair."""
-        T = self.T
+        """Houdayer move on XOR'd disagreement bits: chain pair (2p, 2p+1)
+        at temperature t disagrees exactly where the pair's two lane bits —
+        extracted at each lane's own (word, bit) coordinate, since pairs
+        may straddle word planes — differ.  The cluster flip is one XOR
+        plane scattered back onto both lanes of each pair (disjoint lane
+        bits, so the two scatter-adds compose)."""
         one = jnp.uint32(1)
-        dw = (mw ^ (mw >> jnp.uint32(T))) & self._even_mask  # (N,)
-        disagree = ((dw[None, None, :] >> self._even_sh) & one) \
+        disagree = (((mw[self._ev_w] >> self._ev_b)
+                     ^ (mw[self._od_w] >> self._od_b)) & one) \
             .astype(bool)                                    # (P/2, T, N)
         key, sub = jax.random.split(key)
         scores = jax.random.uniform(sub, disagree.shape) * disagree
@@ -352,8 +365,11 @@ class APTICM:
             & disagree
         cluster = self._grow_cluster(cluster0, disagree)
         flip = cluster & any_dis[:, :, None]
-        fw = (flip.astype(jnp.uint32) << self._even_sh).sum(axis=(0, 1))
-        mw = mw ^ (fw | (fw << jnp.uint32(T)))               # flip both lanes
+        fl = flip.astype(jnp.uint32)
+        fw = jnp.zeros_like(mw) \
+            .at[self._ev_w].add(fl << self._ev_b) \
+            .at[self._od_w].add(fl << self._od_b)
+        mw = mw ^ fw                                         # flip both lanes
         spins = unpack_lanes(mw, self.L).reshape(self.P, self.T, self.n)
         En = jax.vmap(jax.vmap(lambda mm: direct_energy(self.g, mm)))(spins)
         icms = icms + any_dis.sum().astype(jnp.int32)

@@ -28,13 +28,15 @@ format):
   *prefix-stable* in R (growing the batch never reshuffles existing
   chains).
 * ``"bitplane"`` — multi-spin coding over the int8 substrate: spins stored
-  as (K, n_max) uint32 word planes with up to 32 replica lanes per word.
-  The boundary all-gather ships the *native words* — 4 B per boundary site
-  for all 32 chains, with ZERO pack/unpack compute on the collective path
+  as (K, W, n_max) uint32 word planes, 32 replica lanes per word and
+  W = ceil(R/32) stacked planes (lane l = word l//32, bit l%32).  The
+  boundary all-gather ships the *native words* — 4 B per boundary site
+  *per word plane*, with ZERO pack/unpack compute on the collective path
   (a word slice IS the wire payload) — and the phase update runs the
   bit-sliced carry-save adder tree over XOR'd sign planes with per-lane
-  LFSR columns and the same LUT accept.  Lane r is bit-identical to
-  replica r of the unpacked int8 path at matched seeds.
+  LFSR columns and the same LUT accept.  Lane (w, b) is bit-identical to
+  replica ``w*32 + b`` of the unpacked int8 path at matched seeds, and
+  prefix-stable in both b and w.
 """
 
 from __future__ import annotations
@@ -54,10 +56,10 @@ from .pbit import (FixedPoint, bitplane_planes, field_bound, lfsr_init,
                    lfsr_next, lfsr_uniform, lut_accept, quantize,
                    quantize_couplings, threshold_lut_cached)
 from .packing import pack_pm1, unpack_pm1, pad_to_multiple, pack_lanes, \
-    unpack_lanes, lane_shifts
+    unpack_lanes, lane_coords
 from .energy import energy as direct_energy
 from repro.compat import shard_map
-from repro.engines.base import (LANE_WIDTH, RecordedCursor,
+from repro.engines.base import (RecordedCursor, check_lanes,
                                 run_recorded_driver, spawn_seeds)
 from repro.kernels.ops import bitplane_gather_count_op
 
@@ -80,8 +82,6 @@ class DistDSIMEngine:
             raise ValueError(f"mesh axis size {ndev} != K={prob.K}")
         if mode not in ("dsim", "cmft"):
             raise ValueError(mode)
-        if replicas < 1:
-            raise ValueError("replicas must be >= 1")
         if precision not in ("f32", "int8", "bitplane"):
             raise ValueError(f"unknown precision {precision!r}")
         if precision != "f32" and (rng != "lfsr" or mode != "dsim"):
@@ -91,11 +91,8 @@ class DistDSIMEngine:
             # neither integer fields nor 1-bit lanes)
             raise ValueError(
                 f"precision={precision!r} needs rng='lfsr', mode='dsim'")
-        if precision == "bitplane" and replicas > LANE_WIDTH:
-            raise ValueError(
-                f"precision='bitplane' packs replicas into the {LANE_WIDTH} "
-                f"bit lanes of one uint32 word; replicas must be in "
-                f"[1, {LANE_WIDTH}], got {replicas}")
+        # the shared lane-cap guard; W stacked word planes for the word path
+        self.words = check_lanes(precision, replicas)
         self.p = prob
         self.mesh = mesh
         self.axis = axis_tuple if len(axis_tuple) > 1 else axis_tuple[0]
@@ -145,6 +142,8 @@ class DistDSIMEngine:
                     bp_signs=jnp.stack(signs, axis=-1),   # (K, n_max, D)
                     bp_nz=jnp.stack(nz, axis=-1),
                     bp_base=base)                          # (K, n_max)
+                # lane l lives at word plane _lane_w[l], bit _lane_b[l]
+                self._lane_w, self._lane_b = lane_coords(self.replicas, 1)
 
     def _lut_for(self, table: np.ndarray) -> jnp.ndarray:
         return threshold_lut_cached(self._lut_cache, table, self.q_scale,
@@ -173,9 +172,13 @@ class DistDSIMEngine:
             zero = jnp.zeros((), dtype=jnp.int32)
             flips = jnp.zeros((R,), jnp.int32)
             if self.precision == "bitplane":
-                mw = pack_lanes(m_r)                         # (K, n_max)
-                ghosts = mw.reshape(-1)[p.ghost_src]         # (K, g_max)
-                st = DSIMState(m=mw, ghosts=ghosts,
+                W = self.words
+                mw = jnp.swapaxes(pack_lanes(m_r), 0, 1)     # (K, W, n_max)
+                # per-word flat-pool gather, the word analogue of
+                # _exchange_host's per-replica gather
+                pool = jnp.swapaxes(mw, 0, 1).reshape(W, -1)
+                ghosts = jnp.swapaxes(pool[:, p.ghost_src], 0, 1)
+                st = DSIMState(m=mw, ghosts=ghosts,          # (K, W, g_max)
                                macc=jnp.zeros((p.K, 1), jnp.float32),
                                rng=rng, sweep=zero, flips=flips)
             else:
@@ -218,9 +221,9 @@ class DistDSIMEngine:
 
     # -- device-local block functions (run inside shard_map) -----------------------
     # All block arrays have their partition dim squeezed away: m (R, n_max)
-    # int8 — or (n_max,) uint32 words on the bitplane path —, ghosts
-    # (R, g_max) | (g_max,) words, rng (R,) keys | (R, n_max) LFSR, consts
-    # rows (…).
+    # int8 — or (W, n_max) uint32 word planes on the bitplane path —,
+    # ghosts (R, g_max) | (W, g_max) words, rng (R,) keys | (R, n_max)
+    # LFSR, consts rows (…).
 
     def _exchange_block(self, m, macc, S, consts, inst: bool = False):
         """Publish boundary states, all-gather, gather this device's ghosts.
@@ -252,11 +255,16 @@ class DistDSIMEngine:
 
     def _exchange_block_w(self, mw, consts):
         """Native-word boundary exchange: a slice of the spin words IS the
-        wire payload — 4 B/site for all 32 lanes, no pack/unpack compute
-        anywhere on the collective path."""
-        bnd = mw[consts["bnd_slots"]]                         # (b_pad,) words
-        pool = jax.lax.all_gather(bnd, self.axis, tiled=True)  # (K*b_pad,)
-        return pool[consts["ghost_src_pool"]]                 # (g_max,) words
+        wire payload — 4 B per boundary site per word plane (32 lanes each),
+        no pack/unpack compute anywhere on the collective path.  ``mw`` is
+        the device-local (W, n_max); the all-gather ships all W planes of
+        the boundary in one collective."""
+        W = int(mw.shape[0])
+        bnd = mw[:, consts["bnd_slots"]]                      # (W, b_pad)
+        pool = jax.lax.all_gather(bnd, self.axis, tiled=True)  # (K*W, b_pad)
+        pool = pool.reshape(self.p.K, W, self.b_pad)
+        pool = jnp.swapaxes(pool, 0, 1).reshape(W, -1)        # (W, K*b_pad)
+        return pool[:, consts["ghost_src_pool"]]              # (W, g_max)
 
     def _phase_block(self, c, m, ghosts, rng, beta, consts, lut=None):
         """One color phase; ``beta`` is the f32 inverse temperature — or,
@@ -302,16 +310,18 @@ class DistDSIMEngine:
     def _phase_block_w(self, c, mw, ghosts_w, rng, row, consts, lut):
         """One color phase on packed words: XOR sign application, bit-sliced
         adder tree for the +1-contribution count, per-lane LFSR draw + LUT
-        accept.  Lane r is bit-identical to replica r of
-        :meth:`_phase_block` on the int8 path (same integer field, same
-        LFSR column, same threshold compare)."""
+        accept.  ``mw``/``ghosts_w`` carry the leading W word-plane axis;
+        lane l reads word ``_lane_w[l]`` at bit ``_lane_b[l]``, and the
+        accepted bits scatter back per word (disjoint bit positions, so the
+        adds are bitwise ORs).  Lane (w, b) is bit-identical to replica
+        ``w*32 + b`` of :meth:`_phase_block` on the int8 path (same integer
+        field, same LFSR column, same threshold compare)."""
         slots, mask = consts["color_slots"][c], consts["color_mask"][c]
-        mext = jnp.concatenate([mw, ghosts_w])
+        mext = jnp.concatenate([mw, ghosts_w], axis=-1)       # (W, n_ext)
         counts = bitplane_gather_count_op(
             mext, consts["local_idx"][slots], consts["bp_signs"][slots],
-            consts["bp_nz"][slots])
-        R = self.replicas
-        lanes = lane_shifts(R, 1)                             # (R, 1)
+            consts["bp_nz"][slots])                           # (W, nc) each
+        wl, bl = self._lane_w, self._lane_b                   # (R,), (R, 1)
         one = jnp.uint32(1)
         s = rng[:, slots]
         s = lfsr_next(s)
@@ -319,21 +329,21 @@ class DistDSIMEngine:
         u = s >> jnp.uint32(8)                                # (R, nc)
         cnt = jnp.zeros(u.shape, jnp.int32)
         for i, b in enumerate(counts):
-            cnt = cnt + (((b[None, :] >> lanes) & one)
+            cnt = cnt + (((b[wl] >> bl) & one)
                          << jnp.uint32(i)).astype(jnp.int32)
         # f = h_q + 2c - nnz = (base - f_max) + 2c, per lane
         field = consts["bp_base"][slots][None, :] - self.f_max + 2 * cnt
         thr = jax.lax.dynamic_index_in_dim(
             lut, jnp.asarray(row, jnp.int32), axis=0, keepdims=False)
         accept = lut_accept(thr, field, self.f_max, u)        # (R, nc)
-        upd = (accept.astype(jnp.uint32) << lanes).sum(axis=0) \
-            .astype(jnp.uint32)                               # (nc,)
-        old = mw[slots]
+        upd = jnp.zeros((int(mw.shape[0]), u.shape[1]), jnp.uint32) \
+            .at[wl].add(accept.astype(jnp.uint32) << bl)      # (W, nc)
+        old = mw[:, slots]
         new = jnp.where(mask, upd, old)
         diff = old ^ new
-        flips = ((diff[None, :] >> lanes) & one).astype(jnp.int32) \
+        flips = ((diff[wl] >> bl) & one).astype(jnp.int32) \
             .sum(axis=1)                                      # (R,)
-        mw = mw.at[slots].set(new)
+        mw = mw.at[:, slots].set(new)
         return mw, rng, flips
 
     def _iteration_block(self, m, ghosts, macc, rng, flips, betas_S, sync,
@@ -491,7 +501,7 @@ class DistDSIMEngine:
             return buf[: p.n]
 
         if self.precision == "bitplane":
-            m_r = unpack_lanes(state.m, R)                # (R, K, n_max)
+            m_r = unpack_lanes(jnp.swapaxes(state.m, 0, 1), R)  # (R, K, n_max)
         else:
             m_r = state.m.transpose(1, 0, 2)
         spins = jax.vmap(one)(m_r)
@@ -514,8 +524,10 @@ class DistDSIMEngine:
         recorded payload)."""
         R = self.replicas
         if self.precision == "bitplane":
-            return {"dtype": "uint32", "bytes": 4 * self.b_pad,
-                    "bytes_per_site_all_chains": 4.0, "chains": R,
+            W = self.words
+            return {"dtype": "uint32", "bytes": 4 * W * self.b_pad,
+                    "bytes_per_site_all_chains": 4.0 * W, "chains": R,
+                    "word_planes": W, "bytes_per_site_per_word": 4.0,
                     "pack_compute": "none"}
         if self.mode == "cmft":
             return {"dtype": "float32", "bytes": 4 * R * self.b_pad,
@@ -543,9 +555,10 @@ class DistDSIMEngine:
         flips = jnp.zeros((R,), jnp.int32)
         if self.precision == "bitplane":
             st = DSIMState(
-                m=jax.ShapeDtypeStruct((p.K, p.n_max), jnp.uint32,
-                                       sharding=self._shard),
-                ghosts=jax.ShapeDtypeStruct((p.K, p.g_max), jnp.uint32,
+                m=jax.ShapeDtypeStruct((p.K, self.words, p.n_max),
+                                       jnp.uint32, sharding=self._shard),
+                ghosts=jax.ShapeDtypeStruct((p.K, self.words, p.g_max),
+                                            jnp.uint32,
                                             sharding=self._shard),
                 macc=jax.ShapeDtypeStruct((p.K, 1), jnp.float32,
                                           sharding=self._shard),

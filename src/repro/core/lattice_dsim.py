@@ -38,8 +38,8 @@ from .pbit import (FixedPoint, LUT_SELECT_MAX_WIDTH, bitplane_planes,
                    field_bound, lfsr_init, quantize_couplings,
                    threshold_lut_cached)
 from repro.compat import shard_map
-from repro.engines.base import (RecordedCursor, run_recorded_driver,
-                                spawn_seeds)
+from repro.engines.base import (RecordedCursor, check_lanes,
+                                run_recorded_driver, spawn_seeds)
 from repro.kernels.ops import (pbit_update_op, pbit_sweep_op,
                                pbit_update_int_op, pbit_sweep_int_op,
                                pbit_bitplane_sweep_op, brick_energy_op)
@@ -64,7 +64,12 @@ DEFAULT_VMEM_BUDGET = 16 << 20  # 16 MiB/core, the TPU VMEM working budget
 def _per_site_bytes(precision: str, n_colors: int,
                     lanes: int = LANE_WIDTH) -> int:
     if precision == "bitplane":
-        return 60 + 4 * n_colors + 8 * lanes
+        # W stacked word planes: in/out spin words and color masks scale
+        # with W, the 12+1 sign/nonzero/base planes are shared by every
+        # word, LFSR columns are per lane.  W=1 reduces to the PR 4 value
+        # 60 + 4 n_c + 8 lanes.
+        words = max(1, (int(lanes) + LANE_WIDTH - 1) // LANE_WIDTH)
+        return 52 + 8 * words + 4 * n_colors * words + 8 * lanes
     return _PER_SITE_BYTES[precision] + n_colors
 
 
@@ -118,13 +123,14 @@ class LatticeState:
 class BitplaneLatticeState:
     """Multi-spin-coded state: replicas live in the bit lanes of ``m``.
 
-    Bit r of a spin word is replica lane r's spin (1 = +1); only the LFSR
-    columns and flip odometers keep an explicit replica axis — each lane
-    owns its own RNG stream (the lane-independence contract)."""
+    ``m`` stacks W = ceil(R/32) word planes — bit b of plane w is replica
+    lane ``w*32 + b``'s spin (1 = +1); only the LFSR columns and flip
+    odometers keep an explicit replica axis — each lane owns its own RNG
+    stream (the lane-independence contract)."""
 
-    m: jnp.ndarray        # (X, Y, Z) uint32 spin words, bit r = lane r
+    m: jnp.ndarray        # (W, X, Y, Z) uint32 stacked spin word planes
     s: jnp.ndarray        # (R, X, Y, Z) uint32 per-lane LFSR states
-    halos: tuple          # 6 packed word halo planes (see _halo_shapes)
+    halos: tuple          # 6 packed word halo planes, leading W axis
     sweep: jnp.ndarray    # scalar int32
     flips: jnp.ndarray    # (R,) int32 per-lane modular odometers
 
@@ -172,17 +178,11 @@ class LatticeDSIM:
         self.precision = precision
         self.vmem_budget_bytes = int(vmem_budget_bytes)
         self.replicas = int(replicas)
-        if self.replicas < 1:
-            raise ValueError("replicas must be >= 1")
-        if precision == "bitplane":
-            if self.replicas > LANE_WIDTH:
-                raise ValueError(
-                    f"precision='bitplane' packs replicas into the "
-                    f"{LANE_WIDTH} bit lanes of one uint32 word; replicas "
-                    f"must be in [1, {LANE_WIDTH}], got {self.replicas}")
-            if kernel_bx is not None:
-                raise ValueError("kernel_bx (per-phase x-tiling) is not "
-                                 "available on the bitplane path")
+        # the shared lane-cap guard; W word planes for the packed path
+        self.words = check_lanes(precision, self.replicas)
+        if precision == "bitplane" and kernel_bx is not None:
+            raise ValueError("kernel_bx (per-phase x-tiling) is not "
+                             "available on the bitplane path")
         self.n_sites = prob.n_active
         X, Y, Z = prob.dims
         if precision in ("int8", "bitplane"):
@@ -210,14 +210,22 @@ class LatticeDSIM:
             self.q_scale, self.f_max = 1.0, 0
         if precision == "bitplane":
             # sign-plane quantization (validates couplings land on +-1/0)
-            # + lane-masked uint32 color masks: lanes >= R never update
+            # + lane-masked uint32 color masks: lanes >= R never update.
+            # Dead lanes live only in the LAST word plane, so every other
+            # plane carries the full 32-lane mask.
             self.signs6_w, self.nz6_w, self.base_w, _ = bitplane_planes(
                 self.h_q, self.w6_q)
-            self.lane_mask = (1 << self.replicas) - 1 if \
-                self.replicas < LANE_WIDTH else 0xFFFFFFFF
+            W = self.words
+            last = self.replicas - (W - 1) * LANE_WIDTH
+            lane_masks = np.full((W,), 0xFFFFFFFF, np.uint64)
+            lane_masks[-1] = (np.uint64(1) << np.uint64(last)) - \
+                np.uint64(1) if last < LANE_WIDTH else np.uint64(0xFFFFFFFF)
+            self.lane_masks = lane_masks.astype(np.uint32)
+            mk = np.asarray(prob.masks)          # (n_colors, X, Y, Z)
             self.masks_w = jnp.asarray(
-                np.where(np.asarray(prob.masks) != 0, self.lane_mask, 0)
-                .astype(np.uint32))
+                np.where(mk[:, None] != 0,
+                         self.lane_masks[None, :, None, None, None],
+                         0).astype(np.uint32))   # (n_colors, W, X, Y, Z)
         self._lut_cache = {}
         self.nb = tuple(1 if a is None else mesh.shape[a] for a in dim_axes)
         for d, (ext, k) in enumerate(zip(prob.dims, self.nb)):
@@ -230,21 +238,25 @@ class LatticeDSIM:
         # path has exactly one dispatch (the single-block word kernel), so
         # an over-budget brick warns but cannot fall back.
         self.fused_requested = bool(fused)
+        # bitplane launches are per WORD PLANE, so the kernel working set
+        # is bounded by one full word (<= 32 lanes) regardless of W
+        launch_lanes = min(self.replicas, LANE_WIDTH) \
+            if precision == "bitplane" else self.replicas
         self.fused_working_set = fused_working_set_bytes(
             self.brick, prob.n_colors, precision,
-            lut_width=2 * self.f_max + 1, lanes=self.replicas)
+            lut_width=2 * self.f_max + 1, lanes=launch_lanes)
         self.fallback_reason = None
         fused = bool(fused)
         if precision == "bitplane":
             if self.fused_working_set > self.vmem_budget_bytes:
                 ceiling = fused_brick_ceiling(prob.n_colors, precision,
                                               self.vmem_budget_bytes,
-                                              lanes=self.replicas)
+                                              lanes=launch_lanes)
                 warnings.warn(
                     f"bitplane sweep kernel needs "
                     f"{self.fused_working_set:,} B of VMEM for brick "
-                    f"{self.brick} ({self.replicas} lanes, "
-                    f"{prob.n_colors} colors) — over the "
+                    f"{self.brick} ({launch_lanes} lanes per word-plane "
+                    f"launch, {prob.n_colors} colors) — over the "
                     f"{self.vmem_budget_bytes:,} B budget and the word "
                     f"kernel has no per-phase fallback; shard to bricks of "
                     f"~{ceiling}^3 or fewer sites for TPU.",
@@ -271,14 +283,14 @@ class LatticeDSIM:
         self.spec_m = P(None, ax, ay, az)        # leading replica axis
         self.spec_flat = P(ax, ay, az)           # problem constants (no R)
         self.spec_masks = P(None, ax, ay, az)
+        # bitplane color masks carry (n_colors, W, X, Y, Z) — two
+        # replicated leading axes ahead of the lattice dims
+        self.spec_masks_w = P(None, None, ax, ay, az)
         # halo plane specs: (R, nbx, Y, Z), ... each sharded so every device
         # holds exactly its (1-plane) halo slice for all replicas.  On the
-        # bitplane path the replica axis lives inside the words, so halo
-        # planes (and the spin words) shard without a leading R dim.
-        if precision == "bitplane":
-            self.halo_specs = tuple(P(ax, ay, az) for _ in range(6))
-        else:
-            self.halo_specs = tuple(P(None, ax, ay, az) for _ in range(6))
+        # bitplane path the replica axis lives inside the words and the
+        # leading axis is the W stacked word planes.
+        self.halo_specs = tuple(P(None, ax, ay, az) for _ in range(6))
         self._shard = lambda spec: NamedSharding(mesh, spec)
         self._chunk_cache = {}
         self._energy_fn = None
@@ -301,9 +313,11 @@ class LatticeDSIM:
     def _halo_shapes(self):
         (X, Y, Z), (kx, ky, kz) = self.p.dims, self.nb
         if self.precision == "bitplane":
-            # word planes: all 32 replica lanes ride inside each uint32
-            return [(kx, Y, Z), (kx, Y, Z), (X, ky, Z), (X, ky, Z),
-                    (X, Y, kz), (X, Y, kz)]
+            # word planes: 32 replica lanes ride inside each uint32, and
+            # the W stacked planes lead (one face payload per word plane)
+            W = self.words
+            return [(W, kx, Y, Z), (W, kx, Y, Z), (W, X, ky, Z),
+                    (W, X, ky, Z), (W, X, Y, kz), (W, X, Y, kz)]
         R = self.replicas
         return [(R, kx, Y, Z), (R, kx, Y, Z), (R, X, ky, Z), (R, X, ky, Z),
                 (R, X, Y, kz), (R, X, Y, kz)]
@@ -362,9 +376,10 @@ class LatticeDSIM:
     def _exchange_block_w(self, mw):
         """Bitplane halo exchange: the face slices of the word brick ARE
         the packed wire format — 1 bit per boundary p-bit per lane, exactly
-        the paper's traffic, with zero pack/unpack compute.  One ppermute
-        ships all 32 replica lanes of a face; the payload is 8x smaller
-        than the int8 path's unpacked planes at R=32.  Boundary words of
+        the paper's traffic, with zero pack/unpack compute.  ``mw`` is
+        (W, bx, by, bz): one ppermute ships all W word planes of a face
+        (4 B/site *per word plane*); at R=32 the payload is 8x smaller
+        than the int8 path's unpacked planes.  Boundary words of
         zero-coupling directions are inert (the nonzero masks zero them)."""
         ax, ay, az = self.dim_axes
         kx, ky, kz = self.nb
@@ -373,12 +388,12 @@ class LatticeDSIM:
             return self._halo_shift(plane, axis_name, k, up, periodic,
                                     bitpack_pm1=False)
 
-        xlo = shift(mw[-1:, :, :], ax, kx, True, False)[0]
-        xhi = shift(mw[:1, :, :], ax, kx, False, False)[0]
-        ylo = shift(mw[:, -1:, :], ay, ky, True, False)[:, 0, :]
-        yhi = shift(mw[:, :1, :], ay, ky, False, False)[:, 0, :]
-        zlo = shift(mw[:, :, -1:], az, kz, True, True)[:, :, 0]
-        zhi = shift(mw[:, :, :1], az, kz, False, True)[:, :, 0]
+        xlo = shift(mw[:, -1:, :, :], ax, kx, True, False)[:, 0]
+        xhi = shift(mw[:, :1, :, :], ax, kx, False, False)[:, 0]
+        ylo = shift(mw[:, :, -1:, :], ay, ky, True, False)[:, :, 0, :]
+        yhi = shift(mw[:, :, :1, :], ay, ky, False, False)[:, :, 0, :]
+        zlo = shift(mw[:, :, :, -1:], az, kz, True, True)[:, :, :, 0]
+        zhi = shift(mw[:, :, :, :1], az, kz, False, True)[:, :, :, 0]
         return (xlo, xhi, ylo, yhi, zlo, zhi)
 
     # -- block step -------------------------------------------------------------------
@@ -526,17 +541,17 @@ class LatticeDSIM:
         key = ("bp", iters, S)
         if key in self._chunk_cache:
             return self._chunk_cache[key]
-        spec_w, spec_m = self.spec_flat, self.spec_m
-        spec_masks, spec_flat = self.spec_masks, self.spec_flat
+        spec_w, spec_m = self.spec_m, self.spec_m
+        spec_masks, spec_flat = self.spec_masks_w, self.spec_flat
         hspecs = self.halo_specs
         axes_all = self._axes_all()
         R = self.replicas
 
         def block(mw, s, halos, sched, masks_w, signs, nz, base, lut):
-            # halos arrive as (k?, ...) plane stacks; squeeze the brick dims
+            # halos arrive as (W, k?, ...) plane stacks; squeeze brick dims
             xlo, xhi, ylo, yhi, zlo, zhi = halos
-            halos = (xlo[0], xhi[0], ylo[:, 0, :], yhi[:, 0, :],
-                     zlo[:, :, 0], zhi[:, :, 0])
+            halos = (xlo[:, 0], xhi[:, 0], ylo[:, :, 0, :], yhi[:, :, 0, :],
+                     zlo[:, :, :, 0], zhi[:, :, :, 0])
             local = jnp.zeros((R,), jnp.int32)
 
             def it(carry, b):
@@ -550,8 +565,9 @@ class LatticeDSIM:
                 it, (mw, s, halos, local), sched)
             flips = jax.lax.psum(local, axes_all) if axes_all else local
             xlo, xhi, ylo, yhi, zlo, zhi = halos
-            halos = (xlo[None], xhi[None], ylo[:, None, :], yhi[:, None, :],
-                     zlo[:, :, None], zhi[:, :, None])
+            halos = (xlo[:, None], xhi[:, None],
+                     ylo[:, :, None, :], yhi[:, :, None, :],
+                     zlo[:, :, :, None], zhi[:, :, :, None])
             return mw, s, halos, flips
 
         smapped = shard_map(
@@ -620,10 +636,10 @@ class LatticeDSIM:
     def shard_state(self, st):
         put = jax.device_put
         cls = type(st)
-        spec_spins = self.spec_flat if self.precision == "bitplane" \
-            else self.spec_m
+        # bitplane words lead with the W stacked planes, unpacked spins
+        # with R — either way one replicated leading axis
         return cls(
-            m=put(st.m, self._shard(spec_spins)),
+            m=put(st.m, self._shard(self.spec_m)),
             s=put(st.s, self._shard(self.spec_m)),
             halos=tuple(put(hh, self._shard(sp))
                         for hh, sp in zip(st.halos, self.halo_specs)),
@@ -634,11 +650,11 @@ class LatticeDSIM:
         if self.precision == "bitplane":
             def block(mw):
                 xlo, xhi, ylo, yhi, zlo, zhi = self._exchange_block_w(mw)
-                return (xlo[None], xhi[None],
-                        ylo[:, None, :], yhi[:, None, :],
-                        zlo[:, :, None], zhi[:, :, None])
+                return (xlo[:, None], xhi[:, None],
+                        ylo[:, :, None, :], yhi[:, :, None, :],
+                        zlo[:, :, :, None], zhi[:, :, :, None])
             halos = jax.jit(shard_map(
-                block, mesh=self.mesh, in_specs=(self.spec_flat,),
+                block, mesh=self.mesh, in_specs=(self.spec_m,),
                 out_specs=self.halo_specs, check_vma=False))(st.m)
             return dataclasses.replace(st, halos=halos)
 
@@ -739,10 +755,9 @@ class LatticeDSIM:
                     in_axes=(0, 0))(m, halos)
                 return jax.lax.psum(e, axes_all) if axes_all else e
 
-            spec_spins = self.spec_flat if bitplane else self.spec_m
             self._energy_fn = jax.jit(shard_map(
                 block, mesh=self.mesh,
-                in_specs=(spec_spins, self.spec_flat, self.spec_flat,
+                in_specs=(self.spec_m, self.spec_flat, self.spec_flat,
                           tuple(self.spec_flat for _ in range(6))),
                 out_specs=P(), check_vma=False))
         e = self._energy_fn(state.m, self.p.active, self.p.h, self.p.w6)
@@ -753,7 +768,7 @@ class LatticeDSIM:
         squeezed to (L^3,) when replicas == 1."""
         L = self.p.L
         if self.precision == "bitplane":
-            spins = unpack_lanes(state.m[:L, :L, :L], self.replicas) \
+            spins = unpack_lanes(state.m[:, :L, :L, :L], self.replicas) \
                 .reshape(self.replicas, L ** 3)
         else:
             spins = state.m[:, :L, :L, :L].reshape(self.replicas, L ** 3)
@@ -771,8 +786,8 @@ class LatticeDSIM:
         if self.precision == "bitplane":
             run = self._run_chunk_bp(iters, S)
             st = BitplaneLatticeState(
-                m=jax.ShapeDtypeStruct((X, Y, Z), jnp.uint32,
-                                       sharding=self._shard(self.spec_flat)),
+                m=jax.ShapeDtypeStruct((self.words, X, Y, Z), jnp.uint32,
+                                       sharding=self._shard(self.spec_m)),
                 s=jax.ShapeDtypeStruct((R, X, Y, Z), jnp.uint32,
                                        sharding=self._shard(self.spec_m)),
                 halos=tuple(jax.ShapeDtypeStruct(tuple(sh), jnp.uint32,
@@ -786,7 +801,7 @@ class LatticeDSIM:
             )
             rows = jax.ShapeDtypeStruct((iters, S), jnp.int32,
                                         sharding=self._shard(P()))
-            masks_w = sds(self.masks_w, self.spec_masks)
+            masks_w = sds(self.masks_w, self.spec_masks_w)
             signs = tuple(sds(w, self.spec_flat) for w in self.signs6_w)
             nz = tuple(sds(w, self.spec_flat) for w in self.nz6_w)
             base = sds(self.base_w, self.spec_flat)

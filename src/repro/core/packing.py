@@ -8,12 +8,16 @@ here:
   packed 8-per-uint8 along the site axis — the distributed backend's wire
   format for boundary all-gathers (the roofline collective term counts the
   packed N/8 bytes, faithful to the paper's traffic accounting).
-* **lane packing** (``pack_lanes``/``unpack_lanes``): 32 independent
-  *replicas* of one site packed into the bit lanes of a single uint32 word
-  — multi-spin coding, the substrate of the bit-plane engine
-  (``precision="bitplane"``).  Bit r of a word is replica r's spin
-  (1 = +1, 0 = -1); a word-plane slice IS the packed halo payload, so the
-  bit-plane path ships boundaries with zero pack/unpack compute.
+* **lane packing** (``pack_lanes``/``unpack_lanes``): independent
+  *replicas* of one site packed into the bit lanes of stacked uint32 word
+  planes — multi-spin coding, the substrate of the bit-plane engine
+  (``precision="bitplane"``).  A lane count L occupies
+  ``W = ceil(L / 32)`` word planes: lane ``l`` lives at word ``l // 32``,
+  bit ``l % 32`` (1 = +1, 0 = -1), and dead lanes are confined to the tail
+  of the LAST word, so growing the lane count never reinterprets existing
+  words.  A word-plane slice IS the packed halo payload (4 B/site *per
+  word plane*), so the bit-plane path ships boundaries with zero
+  pack/unpack compute at any W.
 """
 
 from __future__ import annotations
@@ -22,7 +26,8 @@ import numpy as np
 import jax.numpy as jnp
 
 __all__ = ["pad_to_multiple", "pack_pm1", "unpack_pm1",
-           "LANE_WIDTH", "lane_shifts", "pack_lanes", "unpack_lanes",
+           "LANE_WIDTH", "MAX_LANE_WORDS", "lane_words", "lane_shifts",
+           "lane_coords", "pack_lanes", "unpack_lanes",
            "lane_permute", "lane_swap"]
 
 # numpy constant: creating a jnp array at import time leaks a tracer if the
@@ -52,16 +57,28 @@ def unpack_pm1(p: jnp.ndarray, n: int) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# lane packing: 32 replicas per uint32 word (multi-spin coding)
+# lane packing: 32 replicas per uint32 word plane, W stacked planes
+# (multi-spin coding across words)
 # ---------------------------------------------------------------------------
 
-LANE_WIDTH = 32      # replica lanes per word — the uint32 word width
+LANE_WIDTH = 32       # replica lanes per word — the uint32 word width
+MAX_LANE_WORDS = 8    # stacked word planes the packed paths accept (W cap)
+
+
+def lane_words(n_lanes: int) -> int:
+    """Word planes needed for ``n_lanes`` lanes: W = ceil(L / 32)."""
+    n = int(n_lanes)
+    if not 1 <= n <= MAX_LANE_WORDS * LANE_WIDTH:
+        raise ValueError(
+            f"n_lanes must be in [1, {MAX_LANE_WORDS * LANE_WIDTH}] "
+            f"({MAX_LANE_WORDS} stacked uint32 word planes), got {n}")
+    return (n + LANE_WIDTH - 1) // LANE_WIDTH
 
 
 def lane_shifts(n_lanes: int, ndim: int) -> jnp.ndarray:
     """(n_lanes, 1, ..., 1) uint32 shift amounts broadcasting against an
-    ``ndim``-dimensional word array — the one lane-axis constant every
-    pack/unpack/per-lane-extract shares."""
+    ``ndim``-dimensional word array — the within-word lane-axis constant
+    (<= 32 lanes; multi-word extraction pairs it with :func:`lane_coords`)."""
     if not 1 <= n_lanes <= LANE_WIDTH:
         raise ValueError(f"n_lanes must be in [1, {LANE_WIDTH}], "
                          f"got {n_lanes}")
@@ -69,53 +86,104 @@ def lane_shifts(n_lanes: int, ndim: int) -> jnp.ndarray:
         (n_lanes,) + (1,) * ndim)
 
 
-def pack_lanes(x: jnp.ndarray) -> jnp.ndarray:
-    """Pack +-1 spins (leading lane axis, <= 32 lanes) into uint32 words.
+def lane_coords(n_lanes: int, ndim: int):
+    """Per-lane (word index, bit shift) for extraction from stacked planes.
 
-    ``x`` is (R, ...) with values in {-1, +1}; returns (...) uint32 where
-    bit r of each word is lane r's spin (1 = +1).  Lanes >= R are zero.
+    Returns ``(word_idx, bit_shift)``: ``word_idx`` is (L,) int32 and
+    ``bit_shift`` is (L, 1, ..., 1) uint32 broadcasting against the
+    ``ndim`` trailing dims of a (W, ...) word array, so lane l's bit of
+    every site is ``(w[word_idx[l]] >> bit_shift[l]) & 1`` — vectorized as
+    ``(w[word_idx] >> bit_shift) & 1``, shape (L, ...)."""
+    L = int(n_lanes)
+    lane_words(L)      # validates the range
+    ids = np.arange(L)
+    word_idx = jnp.asarray((ids // LANE_WIDTH).astype(np.int32))
+    bit_shift = jnp.asarray((ids % LANE_WIDTH).astype(np.uint32)).reshape(
+        (L,) + (1,) * ndim)
+    return word_idx, bit_shift
+
+
+def _scatter_bits(bits: jnp.ndarray, n_words: int) -> jnp.ndarray:
+    """(L, ...) uint32 0/1 bit values -> (W, ...) packed words, dead lanes
+    of the last word zero."""
+    L = int(bits.shape[0])
+    npad = n_words * LANE_WIDTH - L
+    if npad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((npad,) + bits.shape[1:], jnp.uint32)], axis=0)
+    bits = bits.reshape((n_words, LANE_WIDTH) + bits.shape[1:])
+    sh = jnp.arange(LANE_WIDTH, dtype=jnp.uint32).reshape(
+        (1, LANE_WIDTH) + (1,) * (bits.ndim - 2))
+    # lane bits are disjoint, so the sum is a bitwise OR
+    return (bits << sh).sum(axis=1).astype(jnp.uint32)
+
+
+def pack_lanes(x: jnp.ndarray) -> jnp.ndarray:
+    """Pack +-1 spins (leading lane axis) into stacked uint32 word planes.
+
+    ``x`` is (R, ...) with values in {-1, +1}; returns (W, ...) uint32 with
+    W = ceil(R / 32), where bit b of word plane w is lane ``w*32 + b``'s
+    spin (1 = +1).  Lanes >= R (the tail of the last word) are zero.
     """
     R = int(x.shape[0])
-    sh = lane_shifts(R, x.ndim - 1)
-    bits = (x > 0).astype(jnp.uint32)
-    # lane bits are disjoint, so the sum is a bitwise OR
-    return (bits << sh).sum(axis=0).astype(jnp.uint32)
+    W = lane_words(R)
+    return _scatter_bits((x > 0).astype(jnp.uint32), W)
 
 
 def unpack_lanes(w: jnp.ndarray, n_lanes: int) -> jnp.ndarray:
-    """Inverse of :func:`pack_lanes`: (...) uint32 words -> (n_lanes, ...)
-    +-1 int8 spins."""
-    sh = lane_shifts(n_lanes, w.ndim)
-    bits = (w[None] >> sh) & jnp.uint32(1)
+    """Inverse of :func:`pack_lanes`: (W, ...) uint32 word planes ->
+    (n_lanes, ...) +-1 int8 spins."""
+    L = int(n_lanes)
+    W = lane_words(L)
+    if int(w.shape[0]) != W:
+        raise ValueError(f"{L} lanes need {W} word planes, got "
+                         f"leading axis {int(w.shape[0])}")
+    word_idx, sh = lane_coords(L, w.ndim - 1)
+    bits = (w[word_idx] >> sh) & jnp.uint32(1)
     return jnp.where(bits != 0, 1, -1).astype(jnp.int8)
 
 
 def lane_permute(w: jnp.ndarray, perm) -> jnp.ndarray:
-    """Permute the replica lanes of packed words: out bit i = in bit perm[i].
+    """Permute the replica lanes of stacked word planes: out lane i = in
+    lane perm[i].
 
-    ``perm`` is an (L,) integer array (static or traced), L <= 32 — the
-    bit-gather/scatter a replica-exchange swap move compiles to: a swap of
-    temperatures t and t+1 is the transposition perm = id[..t+1, t..], and a
-    whole accepted-swap set is ONE permutation applied to every word.  Lanes
-    >= L of the output are cleared (the packed convention: unused lanes hold
-    zero)."""
-    perm = jnp.asarray(perm, jnp.uint32)
+    ``w`` is (W, ...); ``perm`` is an (L,) integer array (static or
+    traced), L <= W*32 — the bit gather/scatter a replica-exchange swap
+    move compiles to: a swap of temperatures t and t+1 is the transposition
+    perm = id[..t+1, t..], and a whole accepted-swap set is ONE permutation
+    applied to every site's words.  Cross-word moves are the same gather —
+    source bits are read per lane across all planes and re-scattered, so a
+    permutation never costs more than L bit extracts per site regardless of
+    how many word boundaries it crosses.  Lanes >= L of the output are
+    cleared (the packed convention: unused lanes hold zero)."""
+    perm = jnp.asarray(perm, jnp.int32)
     L = int(perm.shape[0])
-    if not 1 <= L <= LANE_WIDTH:
-        raise ValueError(f"perm must have 1..{LANE_WIDTH} lanes, got {L}")
-    src = perm.reshape((L,) + (1,) * w.ndim)
-    bits = (w[None] >> src) & jnp.uint32(1)
-    return (bits << lane_shifts(L, w.ndim)).sum(axis=0).astype(jnp.uint32)
+    W = int(w.shape[0])
+    if not 1 <= L <= W * LANE_WIDTH:
+        raise ValueError(f"perm must have 1..{W * LANE_WIDTH} lanes for "
+                         f"{W} word plane(s), got {L}")
+    src_w = perm // LANE_WIDTH
+    src_b = (perm % LANE_WIDTH).astype(jnp.uint32).reshape(
+        (L,) + (1,) * (w.ndim - 1))
+    bits = (w[src_w] >> src_b) & jnp.uint32(1)       # (L, ...)
+    return _scatter_bits(bits, W)
 
 
 def lane_swap(w: jnp.ndarray, i: int, j: int, accept=None) -> jnp.ndarray:
-    """Exchange bit lanes i and j of every word (in place of a gather of
+    """Exchange bit lanes i and j of every site (in place of a gather of
     the two configurations): d = bit_i XOR bit_j, XORed back into both
-    lanes — a no-op exactly where the lanes already agree.  ``accept``
-    (bool, broadcastable against ``w``) gates the swap; the common case is
-    a scalar Metropolis verdict applied to all sites of a replica pair."""
-    si, sj = jnp.uint32(i), jnp.uint32(j)
-    d = ((w >> si) ^ (w >> sj)) & jnp.uint32(1)
+    lanes — a no-op exactly where the lanes already agree.  Works across
+    word planes (lane l = word l//32, bit l%32).  ``accept`` (bool,
+    broadcastable against one word plane) gates the swap; the common case
+    is a scalar Metropolis verdict applied to all sites of a replica
+    pair."""
+    wi, bi = divmod(int(i), LANE_WIDTH)
+    wj, bj = divmod(int(j), LANE_WIDTH)
+    si, sj = jnp.uint32(bi), jnp.uint32(bj)
+    d = ((w[wi] >> si) ^ (w[wj] >> sj)) & jnp.uint32(1)
     if accept is not None:
         d = jnp.where(accept, d, jnp.uint32(0))
-    return w ^ ((d << si) | (d << sj))
+    if wi == wj:
+        return w.at[wi].set(w[wi] ^ ((d << si) | (d << sj)))
+    w = w.at[wi].set(w[wi] ^ (d << si))
+    return w.at[wj].set(w[wj] ^ (d << sj))

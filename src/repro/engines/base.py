@@ -27,7 +27,8 @@ import numpy as np
 __all__ = ["Engine", "RunRecord", "SyncSpec", "chunk_plan",
            "run_recorded_driver", "RecordedCursor", "spawn_seeds",
            "stack_states", "flips_chunk_cap", "PRECISIONS",
-           "ENGINE_PRECISIONS", "LANE_WIDTH", "lanes_of", "check_precision"]
+           "ENGINE_PRECISIONS", "LANE_WIDTH", "MAX_LANE_WORDS", "lane_words",
+           "lanes_of", "check_precision", "check_lanes"]
 
 SyncSpec = Union[int, str, None]
 
@@ -39,10 +40,11 @@ SyncSpec = Union[int, str, None]
 # "int8"     — the hardware's fixed-point pipeline: int8 on-chip couplings,
 #              integer field accumulation, LUT-threshold accepts.
 # "bitplane" — multi-spin coding over the int8 substrate: spins as uint32
-#              bit-planes, 32 replica lanes per word, word-wide field math
+#              bit-planes, 32 replica lanes per word, stacked into W word
+#              planes (lane l = word l//32, bit l%32), word-wide field math
 #              with per-lane RNG/accept.  Lattice engine (halo planes) and
 #              mesh engine (native-word boundary all-gather); replicas are
-#              lanes, so R <= LANE_WIDTH.
+#              lanes, so R <= MAX_LANE_WORDS * LANE_WIDTH.
 #
 # One shared table so the registry, the serving layer, and the engines all
 # reject an unsupported (engine, precision) pair with the same clear error
@@ -55,13 +57,43 @@ ENGINE_PRECISIONS = {
     "dsim_dist": ("f32", "int8", "bitplane"),
     "lattice": ("f32", "int8", "bitplane"),
 }
-LANE_WIDTH = 32       # replica lanes per uint32 word on the bitplane path
+# canonical word-format constants live next to the packing routines
+from repro.core.packing import LANE_WIDTH, MAX_LANE_WORDS  # noqa: E402
 
 
 def lanes_of(precision: str) -> int:
     """Replica lanes one engine call packs per word (1 off the bitplane
     path) — the quantum the serving scheduler clamps batch widths to."""
     return LANE_WIDTH if precision == "bitplane" else 1
+
+
+def lane_words(n_lanes: int) -> int:
+    """Word planes needed for ``n_lanes`` packed lanes: W = ceil(L/32)."""
+    return (int(n_lanes) + LANE_WIDTH - 1) // LANE_WIDTH
+
+
+def check_lanes(precision: str, replicas: int,
+                max_words: int = MAX_LANE_WORDS,
+                what: str = "replicas") -> int:
+    """The one lane-cap guard every packed path shares.
+
+    Validates ``replicas`` (>= 1 on any precision; <= ``max_words * 32``
+    on the bitplane path, where they become bit lanes of stacked uint32
+    word planes) and returns the word count W the packed state will carry
+    — 1 for unpacked precisions.  ``what`` names the quantity in the error
+    (the packed tempering ladder passes "chains*temperatures")."""
+    r = int(replicas)
+    if r < 1:
+        raise ValueError(f"{what} must be >= 1, got {r}")
+    if precision != "bitplane":
+        return 1
+    cap = int(max_words) * LANE_WIDTH
+    if r > cap:
+        raise ValueError(
+            f"precision='bitplane' packs {what} into the bit lanes of up "
+            f"to {int(max_words)} stacked uint32 word planes; {what} must "
+            f"be in [1, {cap}], got {r}")
+    return lane_words(r)
 
 
 def check_precision(engine: str, precision: str):

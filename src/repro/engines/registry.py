@@ -27,7 +27,7 @@ from repro.core.lattice import LatticeProblem, build_ea3d_lattice
 from repro.core.lattice_dsim import LatticeDSIM
 from repro.compat import make_mesh, auto_axes
 from repro.core.snapshot import restore_state, snapshot_state
-from .base import LANE_WIDTH, RunRecord, SyncSpec, check_precision
+from .base import RunRecord, SyncSpec, check_lanes, check_precision
 
 __all__ = ["ENGINE_NAMES", "make_engine", "HandleCursor"]
 
@@ -322,11 +322,7 @@ def make_engine(name: str, graph=None, *, coloring: Optional[Coloring] = None,
     if replicas < 1:
         raise ValueError("replicas must be >= 1")
     check_precision(name, precision)
-    if precision == "bitplane" and replicas > LANE_WIDTH:
-        raise ValueError(
-            f"precision='bitplane' packs replicas into the {LANE_WIDTH} "
-            f"bit lanes of one uint32 word; replicas must be in "
-            f"[1, {LANE_WIDTH}], got {replicas}")
+    check_lanes(precision, replicas)
 
     if name == "gibbs":
         if not isinstance(graph, IsingGraph):

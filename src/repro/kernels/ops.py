@@ -82,21 +82,39 @@ def pbit_sweep_int_op(m, s, rows, masks, h_q, w6_q, halos, lut,
 
 def pbit_bitplane_sweep_op(mw, s, rows, masks_w, signs6, nz6, base, halos_w,
                            lut, impl: str = "auto"):
-    """Multi-spin-coded fused sweep: 32 replica lanes per uint32 word, one
-    launch per ``sync_every`` sweeps.  ``rows`` is (S,) shared or (S, R)
-    per-lane LUT row indices.  Returns (mw, s, flips:(R,) int32)."""
+    """Multi-spin-coded fused sweep over W stacked word planes: 32 replica
+    lanes per uint32 word, lane l = word l//32 bit l%32, one launch per
+    word plane per ``sync_every`` sweeps.
+
+    ``mw`` is (W, Bx, By, Bz); ``masks_w`` (n_colors, W, ...); each halo
+    carries a leading W axis; ``rows`` is (S,) shared or (S, R) per-lane
+    LUT row indices.  Word planes are independent replica sets, so the op
+    loops the Pallas kernel over the word axis — the kernel itself stays a
+    one-word primitive, and because every full word traces at the same
+    (Bx, By, Bz, 32) shapes, ONE compiled executable serves any replica
+    count in the same word bucket.  Returns (mw, s, flips:(R,) int32).
+    """
     impl = _resolve(impl)
     if impl == "ref":
         return _ref.pbit_bitplane_sweep_ref(mw, s, rows, masks_w, signs6,
                                             nz6, base, halos_w, lut)
     import jax.numpy as jnp
+    W = int(mw.shape[0])
+    R = int(s.shape[0])
     rows = jnp.asarray(rows, jnp.int32)
-    if rows.ndim == 1:
-        rows = jnp.broadcast_to(rows[:, None],
-                                (rows.shape[0], int(s.shape[0])))
-    return pbit_bitplane.pbit_bitplane_sweep(
-        mw, s, rows, masks_w, signs6, nz6, base, halos_w, lut,
-        interpret=(impl == "interpret"))
+    mws, ss, fls = [], [], []
+    for w in range(W):
+        r0, r1 = w * 32, min(w * 32 + 32, R)
+        rw = rows[:, r0:r1] if rows.ndim == 2 else \
+            jnp.broadcast_to(rows[:, None], (int(rows.shape[0]), r1 - r0))
+        out = pbit_bitplane.pbit_bitplane_sweep(
+            mw[w], s[r0:r1], rw, masks_w[:, w], signs6, nz6, base,
+            tuple(h[w] for h in halos_w), lut,
+            interpret=(impl == "interpret"))
+        mws.append(out[0])
+        ss.append(out[1])
+        fls.append(out[2])
+    return (jnp.stack(mws), jnp.concatenate(ss), jnp.concatenate(fls))
 
 
 def bitplane_gather_count_op(mext_w, idx_c, signs_c, nz_c, impl: str = "auto"):

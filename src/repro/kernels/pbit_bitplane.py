@@ -21,6 +21,12 @@ acceptance is PR 2's rank-count compare against the threshold-LUT row of
 that lane's staircase entry.  Everything is integer; lane r is bit-exact
 against replica r of the int8 pipeline.
 
+This kernel is the ONE-WORD primitive of the multi-word lane fabric:
+replica counts past 32 stack extra word planes, and the word loop lives in
+``kernels.ops.pbit_bitplane_sweep_op`` — word planes are independent
+replica sets, so each plane is its own launch at the same traced shapes,
+and one compiled executable serves every replica count in a word bucket.
+
 VMEM working set for a (Bx, By, Bz) brick of R lanes:
   in/out spin words (u32)                 8 B/site
   in/out LFSR columns (u32, R lanes)      8R B/site

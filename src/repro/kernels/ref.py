@@ -227,39 +227,68 @@ def bitplane_ones_count_ref(mw, signs6, nz6, halos_w):
 def bitplane_gather_count_ref(mext_w, idx_c, signs_c, nz_c):
     """Per-lane +1-contribution count for a gather-graph (ELL) site set.
 
-    ``mext_w`` is the (n_local + n_ghost,) packed word pool, ``idx_c``
-    (nc, D) int32 neighbor slots, ``signs_c``/``nz_c`` (nc, D) uint32 sign /
-    nonzero planes (:func:`repro.core.pbit.bitplane_planes` per direction).
-    Returns the bit-slice planes of :func:`bitplane_count_planes_ref` — the
+    ``mext_w`` is the (..., n_local + n_ghost) packed word pool — any
+    leading axes (the stacked word planes of a W-word run) broadcast
+    straight through, since the CSA tree is elementwise in the word —
+    ``idx_c`` (nc, D) int32 neighbor slots, ``signs_c``/``nz_c`` (nc, D)
+    uint32 sign / nonzero planes (:func:`repro.core.pbit.bitplane_planes`
+    per direction).  Returns the bit-slice planes of
+    :func:`bitplane_count_planes_ref` (shape (..., nc) each) — the
     D-neighbor analogue of the lattice tree above, shared by the word-lane
     mesh engine and the lane-packed tempering ladder.
     """
-    nbr = jnp.take(mext_w, idx_c, axis=0)            # (nc, D) words
-    planes = [(nbr[:, d] ^ signs_c[:, d]) & nz_c[:, d]
+    nbr = jnp.take(mext_w, idx_c, axis=-1)           # (..., nc, D) words
+    planes = [(nbr[..., d] ^ signs_c[:, d]) & nz_c[:, d]
               for d in range(int(idx_c.shape[1]))]
     return bitplane_count_planes_ref(planes)
 
 
 def pbit_bitplane_sweep_ref(mw, s, rows, masks_w, signs6, nz6, base,
                             halos_w, lut):
-    """Oracle for the multi-spin-coded sweep kernel.
+    """Oracle for the multi-spin-coded sweep kernel, any word count W.
 
     Args:
-      mw: (Bx, By, Bz) uint32 spin words (bit r = replica lane r).
-      s: (R, Bx, By, Bz) uint32 per-lane LFSR states (R <= 32).
+      mw: (W, Bx, By, Bz) uint32 stacked spin word planes — bit b of
+        plane w is replica lane ``w*32 + b``.
+      s: (R, Bx, By, Bz) uint32 per-lane LFSR states, R <= W*32.
       rows: (S,) or (S, R) int32 LUT row indices — one per sweep, shared
         or per lane (the per-replica staircase fan).
-      masks_w: (n_colors, Bx, By, Bz) uint32 color masks — the lane mask
-        ((1 << R) - 1) is folded in, so lanes >= R never update.
-      signs6 / nz6 / base: :func:`repro.core.pbit.bitplane_planes`.
-      halos_w: 6 packed word halo planes (held fixed across the S sweeps).
+      masks_w: (n_colors, W, Bx, By, Bz) uint32 color masks — each plane
+        carries its own lane mask, so dead lanes (only ever in the LAST
+        word) never update.
+      signs6 / nz6 / base: :func:`repro.core.pbit.bitplane_planes`
+        (word-independent: the couplings are shared by every lane).
+      halos_w: 6 packed halo planes, each with a leading W axis (held
+        fixed across the S sweeps).
       lut: (n_rows, 2*f_max+1) uint32 thresholds; rows must be narrow
         enough for the rank-count accept (monotone rows).
 
     Returns (mw_new, s_new, flips) with flips the (R,) int32 per-lane
-    accepted-change counts.  Lane r is bit-identical to replica r of
-    :func:`pbit_brick_sweep_int_ref` on the unpacked problem.
+    accepted-change counts.  Word planes are independent replica sets —
+    no cross-word term exists in the update — so the oracle runs the
+    single-word body once per plane and concatenates; lane (w, b) is
+    bit-identical to replica ``w*32 + b`` of
+    :func:`pbit_brick_sweep_int_ref` on the unpacked problem, and
+    prefix-stable in both b and w.
     """
+    W = int(mw.shape[0])
+    R = int(s.shape[0])
+    rows = jnp.asarray(rows, jnp.int32)
+    outs = []
+    for w in range(W):
+        r0, r1 = w * 32, min(w * 32 + 32, R)
+        rw = rows[:, r0:r1] if rows.ndim == 2 else rows
+        outs.append(_bitplane_sweep_word_ref(
+            mw[w], s[r0:r1], rw, masks_w[:, w], signs6, nz6, base,
+            tuple(h[w] for h in halos_w), lut))
+    return (jnp.stack([o[0] for o in outs]),
+            jnp.concatenate([o[1] for o in outs]),
+            jnp.concatenate([o[2] for o in outs]))
+
+
+def _bitplane_sweep_word_ref(mw, s, rows, masks_w, signs6, nz6, base,
+                             halos_w, lut):
+    """One-word-plane sweep body: mw (Bx, By, Bz), s (R <= 32, ...)."""
     R = int(s.shape[0])
     n_colors = int(masks_w.shape[0])
     lw = int(lut.shape[1])

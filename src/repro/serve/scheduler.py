@@ -21,17 +21,20 @@ within a priority level.  `dsim_dist` runs one tenant per batched call
 (batches of one).
 
 Bit-plane jobs (``precision="bitplane"``) batch in *lane* units: the
-engine packs replicas into the 32 bit lanes of one uint32 word, so a batch
-never totals more than 32 chains and the executed width clamps up to the
-full word — every bit-plane pack composition reuses the one R=32 compiled
-executable, and pad lanes are throwaway chains exactly like pow2 pad
-replicas.  The precision is already part of :func:`repro.serve.jobs
-.pack_key`, so bit-plane jobs never coalesce with int8/f32 jobs.  The lane
-clamp also applies to ``dsim_dist`` bit-plane jobs (one tenant per batch,
-but the executed width still pads to the full word): the mesh engine's
-int8/bitplane lanes are *prefix-stable* — lane r depends on
-spawn_seeds(seed)[r] alone — so pad lanes never perturb the tenant's
-chains.
+engine packs replicas into the bit lanes of W = ceil(R/32) stacked uint32
+word planes, so a batch totals up to ``MAX_LANE_WORDS * 32`` chains and
+the executed width clamps up to a *word multiple* (instead of a power of
+two — an R=33 pack runs the W=2 64-lane executable, an R=65 pack the W=3
+96-lane one, not R=128's pow2).  Every pack composition landing in the
+same word bucket reuses ONE compiled executable — the engine loops a
+one-word kernel over the word axis — and pad lanes are throwaway chains
+exactly like pow2 pad replicas.  The precision is already part of
+:func:`repro.serve.jobs.pack_key`, so bit-plane jobs never coalesce with
+int8/f32 jobs.  The word clamp also applies to ``dsim_dist`` bit-plane
+jobs (one tenant per batch, but the executed width still pads to a full
+word): the mesh engine's int8/bitplane lanes are *prefix-stable* — lane r
+depends on spawn_seeds(seed)[r] alone — so pad lanes never perturb the
+tenant's chains.
 """
 
 from __future__ import annotations
@@ -39,7 +42,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, List, Optional, Sequence, Tuple
 
-from repro.engines.base import lanes_of
+from repro.engines.base import MAX_LANE_WORDS, lanes_of
 
 from .jobs import Job
 
@@ -93,20 +96,24 @@ class Batch:
         tenants keep their slice and are simply not harvested).  Padding
         never pushes the executed width past ``cap`` — near the cap the
         batch just runs unpadded.  ``lanes > 1`` (the bit-plane word
-        width) additionally clamps the executed width up to a lane
-        multiple, so every pack composition runs the one full-word
-        executable."""
+        width) clamps the executed width up to a lane multiple *instead
+        of* a power of two — the word bucket W = r_exec/32 keys the
+        compiled executable, so R=33 runs the W=2 (64-lane) binary and
+        R=65 runs W=3 (96 lanes) rather than pow2's 128.  Under a
+        sub-word cap the pow2 pad is the fallback."""
         self.slices, pos = [], 0
         for j in self.jobs:
             self.slices.append((pos, pos + j.spec.replicas))
             pos += j.spec.replicas
         self.r_exec = pos
-        if pad_pow2 and (cap is None or ceil_pow2(pos) <= cap):
-            self.r_exec = ceil_pow2(pos)
         if lanes > 1:
-            lane_r = ((self.r_exec + lanes - 1) // lanes) * lanes
+            lane_r = ((pos + lanes - 1) // lanes) * lanes
             if cap is None or lane_r <= cap:
                 self.r_exec = lane_r
+            elif pad_pow2 and ceil_pow2(pos) <= cap:
+                self.r_exec = ceil_pow2(pos)
+        elif pad_pow2 and (cap is None or ceil_pow2(pos) <= cap):
+            self.r_exec = ceil_pow2(pos)
         self.seq = min(j.seq for j in self.jobs)
         self.priority = max(j.spec.priority for j in self.jobs)
 
@@ -128,30 +135,36 @@ class ReplicaPackingScheduler:
 
     def replica_budget(self, precision: str) -> int:
         """Per-batch (and per-job admission) chain cap: the per-call cap,
-        additionally clamped to the word width for bit-plane jobs (the
-        engine cannot run more lanes than one uint32 word holds).  The
-        server's ``submit`` validates against this same number, so
-        admission never accepts a job the scheduler can't batch."""
+        additionally clamped to the lane fabric's capacity for bit-plane
+        jobs (the engine cannot stack more than ``MAX_LANE_WORDS`` uint32
+        word planes).  The server's ``submit`` validates against this same
+        number, so admission never accepts a job the scheduler can't
+        batch."""
         lanes = lanes_of(precision)
         if lanes > 1:
-            return min(self.max_replicas_per_call, lanes)
+            return min(self.max_replicas_per_call, MAX_LANE_WORDS * lanes)
         return self.max_replicas_per_call
 
     def r_exec_for(self, engine: str, replicas: int,
                    precision: str = "f32") -> int:
         """Executed batch width for a pack totalling ``replicas`` chains —
         the pool-key bucketing ``prewarm`` must agree with.  Clamped like
-        :meth:`Batch.relayout`: never padded past the per-call cap, and
-        clamped up to a lane multiple for bit-plane jobs."""
+        :meth:`Batch.relayout`: never padded past the per-call cap; lane
+        (word-multiple) clamping replaces the pow2 pad for bit-plane
+        jobs, with pow2 as the sub-word-cap fallback."""
         r = int(replicas)
-        if self.pad_pow2 and engine in PACKABLE_ENGINES \
-                and ceil_pow2(r) <= self.max_replicas_per_call:
-            r = ceil_pow2(r)
         lanes = lanes_of(precision)
         if lanes > 1:
             lane_r = ((r + lanes - 1) // lanes) * lanes
             if lane_r <= self.max_replicas_per_call:
-                r = lane_r
+                return lane_r
+            if self.pad_pow2 and engine in PACKABLE_ENGINES \
+                    and ceil_pow2(r) <= self.max_replicas_per_call:
+                return ceil_pow2(r)
+            return r
+        if self.pad_pow2 and engine in PACKABLE_ENGINES \
+                and ceil_pow2(r) <= self.max_replicas_per_call:
+            r = ceil_pow2(r)
         return r
 
     def next_batch(self, queued: Sequence[Job]) -> Optional[Batch]:

@@ -43,8 +43,8 @@ import numpy as np
 
 from repro.core.annealing import ea_schedule
 from repro.engines import make_engine
-from repro.engines.base import (LANE_WIDTH, check_precision, lanes_of,
-                                quantize_record_points, spawn_seeds)
+from repro.engines.base import (LANE_WIDTH, MAX_LANE_WORDS, check_precision,
+                                lanes_of, quantize_record_points, spawn_seeds)
 
 from .jobs import Job, JobSpec, JobStatus, problem_fingerprint, \
     schedule_fingerprint
@@ -137,29 +137,39 @@ class SampleServer:
     def register_problem(self, name: str, *, graph=None, coloring=None,
                          L: Optional[int] = None, seed: int = 0,
                          prewarm_bitplane: bool = False,
+                         prewarm_words: int = 1,
                          **engine_kw) -> str:
         """Register a problem instance under ``name``; returns its content
         fingerprint (the packing/pool identity).
 
-        ``prewarm_bitplane=True`` builds + warm-compiles the one R=32
-        bit-plane executable on a daemon thread at register time: every
-        bit-plane pack composition buckets to that single full-word key
-        (the scheduler clamps executed widths up to the word), so bit-plane
-        tenants of this problem see zero cold starts.  Lattice-registered
-        problems prewarm the lattice engine; graph-registered problems the
-        mesh engine (which must be buildable on this host's device count —
-        pass K/labels in ``engine_kw`` as needed).  The prewarm thread is
-        appended to :attr:`prewarm_threads` (join it to block on warmth).
+        ``prewarm_bitplane=True`` builds + warm-compiles the bit-plane
+        executable of ``prewarm_words`` stacked word planes (the
+        W = prewarm_words, R = 32*W bucket) on a daemon thread at register
+        time: the scheduler clamps executed widths up to a word multiple,
+        so every bit-plane pack composition totalling at most ``32 *
+        prewarm_words`` chains buckets to that single key and sees zero
+        cold starts (e.g. ``prewarm_words=2`` pre-compiles the W=2
+        executable that R=33 and R=64 submissions share).
+        Lattice-registered problems prewarm the lattice engine;
+        graph-registered problems the mesh engine (which must be buildable
+        on this host's device count — pass K/labels in ``engine_kw`` as
+        needed).  The prewarm thread is appended to
+        :attr:`prewarm_threads` (join it to block on warmth).
         """
         if (graph is None) == (L is None):
             raise ValueError("register exactly one of graph= or L=")
+        words = int(prewarm_words)
+        if not 1 <= words <= MAX_LANE_WORDS:
+            raise ValueError(f"prewarm_words must be in "
+                             f"[1, {MAX_LANE_WORDS}], got {prewarm_words}")
         p = _Problem(name, graph, coloring, L, seed, engine_kw)
         with self._lock:
             self._problems[name] = p
         if prewarm_bitplane:
             engine = "lattice" if L is not None else "dsim_dist"
             self.prewarm_threads.append(
-                self.prewarm(name, engine=engine, replicas=LANE_WIDTH,
+                self.prewarm(name, engine=engine,
+                             replicas=LANE_WIDTH * words,
                              precision="bitplane"))
         return p.fingerprint
 
@@ -188,8 +198,10 @@ class SampleServer:
         if replicas < 1 or replicas > r_cap:
             raise ValueError(
                 f"replicas must be in [1, {r_cap}]"
-                + (" (bit-plane jobs pack into the 32 lanes of one "
-                   "uint32 word)" if lanes_of(precision) > 1 else ""))
+                + (" (bit-plane jobs pack into the 32 lanes of each of up "
+                   f"to {MAX_LANE_WORDS} stacked uint32 word planes, "
+                   "bounded by the per-call budget)"
+                   if lanes_of(precision) > 1 else ""))
         if sync_every not in ("phase", None) and int(sync_every) < 1:
             raise ValueError(f"sync_every must be >= 1, 'phase', or None; "
                              f"got {sync_every!r}")

@@ -1,4 +1,6 @@
-"""Bit-plane replica engine: multi-spin-coded sweeps, 32 lanes per word.
+"""Bit-plane replica engine: multi-spin-coded sweeps over the multi-word
+lane fabric (32 lanes per uint32 word plane, W = ceil(R/32) stacked
+planes).
 
 Three layers of guarantees, mirroring tests/test_quantized.py:
   * bit-exact — the Pallas word kernel against its jnp oracle, and lane r
@@ -24,7 +26,8 @@ from repro.core.lattice import build_ea3d_lattice
 from repro.core.lattice_dsim import (BitplaneLatticeState, LatticeDSIM,
                                      fused_brick_ceiling,
                                      fused_working_set_bytes)
-from repro.core.packing import LANE_WIDTH, pack_lanes, unpack_lanes
+from repro.core.packing import (LANE_WIDTH, MAX_LANE_WORDS, lane_words,
+                                pack_lanes, unpack_lanes)
 from repro.core.pbit import (bitplane_planes, field_bound, quantize_couplings,
                              threshold_lut)
 from repro.compat import make_mesh, auto_axes
@@ -57,9 +60,17 @@ def make_bitplane_inputs(shape, R, n_betas=3, with_h=True):
     masks[0][(np.indices(shape).sum(0) % 2) == 0] = 1
     masks[1] = 1 - masks[0]
     signs6, nz6, base, _ = bitplane_planes(h_q, w6_q)
-    lane_mask = np.uint32((1 << R) - 1 if R < LANE_WIDTH else 0xFFFFFFFF)
-    masks_w = jnp.asarray(np.where(masks != 0, lane_mask, 0)
-                          .astype(np.uint32))
+    # per-word live-lane masks: full words all-ones, the tail word masks
+    # its dead lanes (mirrors LatticeDSIM's lane_masks construction)
+    W = lane_words(R)
+    last = R - (W - 1) * LANE_WIDTH
+    lane_masks = np.full((W,), 0xFFFFFFFF, np.uint64)
+    if last < LANE_WIDTH:
+        lane_masks[-1] = (1 << last) - 1
+    lane_masks = lane_masks.astype(np.uint32)
+    masks_w = jnp.asarray(
+        np.where(masks[:, None] != 0,
+                 lane_masks[None, :, None, None, None], 0).astype(np.uint32))
     mw = pack_lanes(jnp.asarray(m))
     halos_w = tuple(pack_lanes(jnp.asarray(hh)) for hh in halos)
     return dict(m=m, s=s, h_q=h_q, w6_q=w6_q, lut=lut, halos=halos,
@@ -71,11 +82,13 @@ def make_bitplane_inputs(shape, R, n_betas=3, with_h=True):
 
 @pytest.mark.parametrize("shape,R", [
     ((6, 4, 4), 1), ((6, 4, 4), 7), ((4, 4, 4), 32), ((5, 3, 4), 13),
+    ((4, 3, 3), 40), ((4, 3, 3), 64),
 ])
 def test_bitplane_oracle_matches_int8_per_lane(shape, R):
-    """Lane r of the word oracle is bit-identical (spins, LFSR, flips) to
-    replica r of the int8 reference — multi-spin coding is a layout, not a
-    different sampler."""
+    """Lane r (word r//32, bit r%32) of the word oracle is bit-identical
+    (spins, LFSR, flips) to replica r of the int8 reference — multi-spin
+    coding is a layout, not a different sampler — including lane counts
+    that straddle into a second word plane."""
     d = make_bitplane_inputs(shape, R)
     rows = jnp.asarray([0, 2, 1], jnp.int32)
     mw2, s2, fl2 = pbit_bitplane_sweep_ref(
@@ -92,10 +105,12 @@ def test_bitplane_oracle_matches_int8_per_lane(shape, R):
         assert int(fl2[r]) == int(fl)
 
 
-@pytest.mark.parametrize("shape,R", [((6, 4, 4), 3), ((4, 4, 4), 8)])
+@pytest.mark.parametrize("shape,R", [((6, 4, 4), 3), ((4, 4, 4), 8),
+                                     ((4, 3, 3), 34)])
 def test_bitplane_kernel_matches_oracle(shape, R):
     """The Pallas word kernel (interpreter) against the jnp oracle —
-    identical integer op outcomes, including per-lane flip counts."""
+    identical integer op outcomes, including per-lane flip counts; the
+    W=2 case exercises the word loop in the op dispatch."""
     d = make_bitplane_inputs(shape, R)
     rows = jnp.asarray([1, 0, 2, 2], jnp.int32)
     want = pbit_bitplane_sweep_ref(
@@ -141,11 +156,13 @@ def test_bitplane_ones_count_matches_popcount():
     contribution bits, for every lane of every site."""
     R = LANE_WIDTH
     d = make_bitplane_inputs((4, 3, 3), R)
-    b0, b1, b2 = bitplane_ones_count_ref(d["mw"], d["signs6"], d["nz6"],
-                                         d["halos_w"])
-    cnt = (np.asarray(unpack_lanes(b0, R)) > 0).astype(np.int64) \
-        + 2 * (np.asarray(unpack_lanes(b1, R)) > 0) \
-        + 4 * (np.asarray(unpack_lanes(b2, R)) > 0)
+    # the CSA tree is a ONE-WORD primitive: feed it word plane 0
+    b0, b1, b2 = bitplane_ones_count_ref(
+        d["mw"][0], d["signs6"], d["nz6"],
+        tuple(h[0] for h in d["halos_w"]))
+    cnt = (np.asarray(unpack_lanes(b0[None], R)) > 0).astype(np.int64) \
+        + 2 * (np.asarray(unpack_lanes(b1[None], R)) > 0) \
+        + 4 * (np.asarray(unpack_lanes(b2[None], R)) > 0)
     # direct recount from the unpacked layout
     from repro.kernels.ref import _shifted_int
     want = np.zeros((R,) + (4, 3, 3), np.int64)
@@ -197,18 +214,44 @@ def test_bitplane_engine_matches_int8_all_32_lanes():
     np.testing.assert_array_equal(spins_bp, spins_i8)
 
 
+def test_bitplane_engine_matches_int8_at_two_words():
+    """The W=2 acceptance gate: at R=64 every lane of the stacked word
+    planes is bit-identical to its int8 replica — spins, energies, and
+    flip totals — so the word loop over planes changes nothing about the
+    dynamics."""
+    R, SW = 2 * LANE_WIDTH, 48
+    res = {}
+    for prec in ("int8", "bitplane"):
+        h = make_engine("lattice", L=4, seed=7, impl="ref", replicas=R,
+                        precision=prec)
+        st = h.init_state(seed=1)
+        st, rec = h.run_recorded(st, ea_schedule(SW), [24, 48],
+                                 sync_every=4)
+        res[prec] = (np.asarray(rec.energies), rec.flips,
+                     np.asarray(h.global_spins(st)))
+    e_bp, fl_bp, spins_bp = res["bitplane"]
+    e_i8, fl_i8, spins_i8 = res["int8"]
+    assert e_bp.shape == (2, R)
+    np.testing.assert_array_equal(e_bp, e_i8)
+    assert fl_bp == fl_i8
+    np.testing.assert_array_equal(spins_bp, spins_i8)
+
+
 def test_lane_prefix_stability():
     """Replica r of (seed, R) equals replica r of (seed, R') — growing the
     packed batch never reshuffles existing lanes (the spawn_seeds
-    contract, preserved through the word layout)."""
+    contract, preserved through the word layout) — in the bit index AND
+    across word-plane boundaries (R=33 vs R=64)."""
     e = {}
-    for R in (8, 32):
+    for R in (8, 32, 33, 64):
         h = make_engine("lattice", L=4, seed=0, impl="ref", replicas=R,
                         precision="bitplane")
         st = h.init_state(seed=9)
         st, rec = h.run_recorded(st, ea_schedule(16), [16], sync_every=4)
         e[R] = np.asarray(rec.energies[-1])
     np.testing.assert_array_equal(e[8], e[32][:8])
+    np.testing.assert_array_equal(e[32], e[64][:32])
+    np.testing.assert_array_equal(e[33], e[64][:33])
 
 
 def test_packed_lane_depends_only_on_its_seed():
@@ -261,9 +304,11 @@ def test_bitplane_multi_device_halo_exchange():
     """On an x-sharded 2-device mesh, lane r of the bit-plane engine stays
     bit-identical to replica r of the int8 engine: the word halo planes
     crossing the ppermute carry exactly what the int8 exchange carries
-    (same boundary-staleness semantics, 8x smaller payload).  (k=1 vs k=2
-    differ BY DESIGN — cross-device neighbors see sync_every-stale halos —
-    so the gate is cross-precision at equal mesh, not cross-mesh.)"""
+    (same boundary-staleness semantics, 8x smaller payload) — at R=5
+    (one word) and R=40 (two stacked word planes crossing the wire),
+    across exchange cadences.  (k=1 vs k=2 differ BY DESIGN —
+    cross-device neighbors see sync_every-stale halos — so the gate is
+    cross-precision at equal mesh, not cross-mesh.)"""
     import os
     import subprocess
     import sys
@@ -280,19 +325,20 @@ def test_bitplane_multi_device_halo_exchange():
         from repro.compat import make_mesh, auto_axes
         prob = build_ea3d_lattice(6, seed=4)
         mesh = make_mesh((2,), ("x",), axis_types=auto_axes(1))
-        outs = {}
-        for prec in ("int8", "bitplane"):
-            eng = LatticeDSIM(prob, mesh, dim_axes=("x", None, None),
-                              precision=prec, impl="ref", replicas=5)
-            st = eng.init_state(seed=3)
-            st, rec = eng.run_recorded(st, ea_schedule(24), [24],
-                                       sync_every=4)
-            m = np.asarray(unpack_lanes(st.m, 5)) if prec == "bitplane" \\
-                else np.asarray(st.m)
-            outs[prec] = (m, np.asarray(st.s),
-                          np.asarray(rec.energies[-1]))
-        for a, b in zip(outs["bitplane"], outs["int8"]):
-            assert (a == b).all()
+        for R, sync in ((5, 4), (40, 1), (40, 4)):
+            outs = {}
+            for prec in ("int8", "bitplane"):
+                eng = LatticeDSIM(prob, mesh, dim_axes=("x", None, None),
+                                  precision=prec, impl="ref", replicas=R)
+                st = eng.init_state(seed=3)
+                st, rec = eng.run_recorded(st, ea_schedule(24), [24],
+                                           sync_every=sync)
+                m = np.asarray(unpack_lanes(st.m, R)) \\
+                    if prec == "bitplane" else np.asarray(st.m)
+                outs[prec] = (m, np.asarray(st.s),
+                              np.asarray(rec.energies[-1]))
+            for a, b in zip(outs["bitplane"], outs["int8"]):
+                assert (a == b).all(), (R, sync)
         print("DIST-BITWISE OK")
     """)], capture_output=True, text=True, env=env, timeout=420)
     assert r.returncode == 0, r.stderr[-3000:]
@@ -338,8 +384,13 @@ def test_registry_guards():
             make_engine(eng_name, g, coloring=col, K=2,
                         labels=np.zeros(g.n, np.int32),
                         precision="bitplane")
-    with pytest.raises(ValueError, match=r"\[1, 32\]"):
-        make_engine("lattice", L=4, precision="bitplane", replicas=33)
+    cap = MAX_LANE_WORDS * LANE_WIDTH
+    with pytest.raises(ValueError, match=rf"\[1, {cap}\]"):
+        make_engine("lattice", L=4, precision="bitplane", replicas=cap + 1)
+    # word-straddling replica counts are legal now (the multi-word fabric)
+    h = make_engine("lattice", L=4, precision="bitplane", replicas=33,
+                    impl="ref")
+    assert h.eng.words == 2
     with pytest.raises(ValueError, match="kernel_bx"):
         make_engine("lattice", L=4, precision="bitplane", kernel_bx=2)
     assert lanes_of("bitplane") == LANE_WIDTH and lanes_of("int8") == 1
@@ -376,14 +427,24 @@ def test_scheduler_clamps_bitplane_to_lane_multiples():
     # two bitplane jobs coalesce and execute at the full 32-lane word
     b = s.next_batch([job(0, 4, "bitplane"), job(1, 8, "bitplane")])
     assert len(b.jobs) == 2 and b.r_exec == 32
-    # a batch never totals more than one word of lanes
+    # a word-straddling pack clamps to the next word multiple, not pow2
     b = s.next_batch([job(0, 20, "bitplane"), job(1, 20, "bitplane")])
-    assert len(b.jobs) == 1 and b.r_exec == 32
+    assert len(b.jobs) == 2 and b.r_exec == 64       # W=2, not one word
+    # the budget still bounds the pack (cap 64 here -> at most two words)
+    b = s.next_batch([job(0, 40, "bitplane"), job(1, 40, "bitplane")])
+    assert len(b.jobs) == 1 and b.r_exec == 64
+    assert s.replica_budget("bitplane") == 64
+    wide = ReplicaPackingScheduler(max_replicas_per_call=1024)
+    assert wide.replica_budget("bitplane") == 32 * MAX_LANE_WORDS
     # bitplane never packs with int8 (precision is in the pack key)
     b = s.next_batch([job(0, 4, "bitplane"), job(1, 4, "int8")])
     assert len(b.jobs) == 1
-    # prewarm bucketing agrees with batch formation
+    # prewarm bucketing agrees with batch formation: word multiples,
+    # R=33 and R=64 bucket to the SAME W=2 executable
     assert s.r_exec_for("lattice", 4, "bitplane") == 32
+    assert s.r_exec_for("lattice", 33, "bitplane") == 64
+    assert s.r_exec_for("lattice", 64, "bitplane") == 64
+    assert wide.r_exec_for("lattice", 65, "bitplane") == 96   # not pow2 128
     assert s.r_exec_for("lattice", 4, "int8") == 4
     # a cap below the word width just runs unpadded
     tight = ReplicaPackingScheduler(max_replicas_per_call=16)
@@ -405,9 +466,11 @@ def test_server_bitplane_jobs_pack_and_guard():
     # failed job (let alone a packing shape error)
     with pytest.raises(ValueError, match="lattice/dsim_dist path"):
         srv.submit("g4", engine="dsim", precision="bitplane", sweeps=16)
-    with pytest.raises(ValueError, match=r"\[1, 32\]"):
+    # the admission cap is the scheduler budget: min(per-call cap 64,
+    # MAX_LANE_WORDS words); word-straddling counts (e.g. 40) are legal now
+    with pytest.raises(ValueError, match=r"\[1, 64\]"):
         srv.submit("lat6", engine="lattice", precision="bitplane",
-                   replicas=40, sweeps=16)
+                   replicas=100, sweeps=16)
     a = srv.submit("lat6", engine="lattice", precision="bitplane",
                    replicas=4, sweeps=32, sync_every=4, seed=1)
     b = srv.submit("lat6", engine="lattice", precision="bitplane",
@@ -423,3 +486,36 @@ def test_server_bitplane_jobs_pack_and_guard():
                       replicas=4, sweeps=32, sync_every=4, seed=1)
     rs = srv.result(solo)
     np.testing.assert_array_equal(rs["energies"], ra["energies"])
+
+
+def test_server_pool_keys_bitplane_by_word_count():
+    """R=33 and R=64 submissions both clamp to the W=2 (64-lane) executed
+    width, so they share ONE pooled executable: the second is a pool hit,
+    never a recompile.  ``prewarm_words=2`` builds that same bucket at
+    register time."""
+    from repro.serve.server import SampleServer
+    srv = SampleServer(pack=True, warm_compile=False)
+    srv.register_problem("lat4", L=4, seed=0, impl="ref")
+    a = srv.submit("lat4", engine="lattice", precision="bitplane",
+                   replicas=33, sweeps=16, sync_every=4, seed=1)
+    ra = srv.result(a)
+    assert ra["status"] == "done" and ra["cold_start"] is True
+    assert ra["energies"].shape[1] == 33         # own lanes only
+    b = srv.submit("lat4", engine="lattice", precision="bitplane",
+                   replicas=64, sweeps=16, sync_every=4, seed=2)
+    rb = srv.result(b)
+    assert rb["status"] == "done"
+    assert rb["cold_start"] is False             # same W=2 pool key
+    assert rb["energies"].shape[1] == 64
+    # register-time prewarm of the W=2 bucket serves the first tenant warm
+    srv2 = SampleServer(pack=True, warm_compile=False)
+    srv2.register_problem("lat4", L=4, seed=0, impl="ref",
+                          prewarm_bitplane=True, prewarm_words=2)
+    srv2.prewarm_threads[0].join(timeout=400)
+    assert not srv2.prewarm_threads[0].is_alive()
+    c = srv2.submit("lat4", engine="lattice", precision="bitplane",
+                    replicas=40, sweeps=16, sync_every=4, seed=3)
+    rc = srv2.result(c)
+    assert rc["status"] == "done" and rc["cold_start"] is False
+    with pytest.raises(ValueError, match="prewarm_words"):
+        srv2.register_problem("bad", L=4, prewarm_words=0)

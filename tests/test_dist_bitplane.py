@@ -57,9 +57,12 @@ def test_dist_precision_guards():
     with pytest.raises(ValueError, match="rng='lfsr'"):
         DistDSIMEngine(prob, mesh, rng="lfsr", mode="cmft",
                        precision="bitplane")
-    with pytest.raises(ValueError, match="32"):
+    with pytest.raises(ValueError, match="256"):
         DistDSIMEngine(prob, mesh, rng="lfsr", precision="bitplane",
-                       replicas=33)
+                       replicas=257)
+    # word-straddling replica counts are legal (multi-word lane fabric)
+    assert DistDSIMEngine(prob, mesh, rng="lfsr", precision="bitplane",
+                          replicas=33).words == 2
     with pytest.raises(ValueError, match="unknown precision"):
         DistDSIMEngine(prob, mesh, precision="fp4")
 
@@ -71,7 +74,7 @@ def test_registry_dist_precisions():
     assert h.precision == "bitplane"
     with pytest.raises(ValueError, match="bit lanes"):
         make_engine("dsim_dist", prob, mesh=mesh, rng="lfsr",
-                    precision="bitplane", replicas=64)
+                    precision="bitplane", replicas=300)
     with pytest.raises(ValueError, match="not supported"):
         make_engine("gibbs", ea3d(4, seed=0), precision="bitplane")
 
@@ -93,7 +96,7 @@ def test_dist_int8_matches_stacked_int8():
     np.testing.assert_array_equal(np.asarray(Es), np.asarray(Ed))
 
 
-@pytest.mark.parametrize("R", [1, 5, 32])
+@pytest.mark.parametrize("R", [1, 5, 32, 40])
 def test_dist_bitplane_lanes_match_int8_replicas(R):
     g, prob, mesh = _k1()
     sch = ea_schedule(64)
@@ -159,6 +162,13 @@ def test_dist_boundary_payload_accounting():
     assert bp["dtype"] == "uint32"
     assert bp["bytes_per_site_all_chains"] == 4.0
     assert bp["pack_compute"] == "none"
+    # multi-word: 4 B/site per word plane, W planes on the wire
+    bp2 = DistDSIMEngine(prob, mesh, rng="lfsr", precision="bitplane",
+                         replicas=40).boundary_payload()
+    assert bp2["word_planes"] == 2
+    assert bp2["bytes_per_site_per_word"] == 4.0
+    assert bp2["bytes_per_site_all_chains"] == 8.0
+    assert bp2["bytes"] == 2 * bp["bytes"]
     i8 = DistDSIMEngine(prob, mesh, rng="lfsr", precision="int8",
                         replicas=32).boundary_payload()
     assert i8["bytes_per_site_all_chains"] == 32.0
@@ -280,6 +290,43 @@ def test_2dev_word_boundaries_bit_equal_to_int8_across_sync():
             print(f"SYNC {sync} BITWISE {ok} flips {fw}")
     """)
     assert out.count("BITWISE True") == 3
+
+
+def test_2dev_multiword_boundaries_bit_equal_to_int8_across_sync():
+    """Tentpole gate: on a real 2-device mesh, the W=2 (R=40) native-word
+    boundary all-gather — two stacked uint32 planes per boundary site on
+    the wire — reproduces the unpacked int8 dist path bit-for-bit on all
+    40 lanes, for exchange cadences {1, 'phase'}."""
+    out = run_py("""
+        import numpy as np
+        from repro.core.graph import ea3d
+        from repro.core.coloring import lattice3d_coloring
+        from repro.core.partition import slab_partition
+        from repro.core.dsim import build_partitioned
+        from repro.core.dsim_dist import DistDSIMEngine
+        from repro.core.annealing import ea_schedule
+        from repro.compat import make_mesh, auto_axes
+        L = 4
+        g = ea3d(L, seed=7); col = lattice3d_coloring(L)
+        prob = build_partitioned(g, col, slab_partition(L, 2), 2)
+        mesh = make_mesh((2,), ("data",), axis_types=auto_axes(1))
+        sch = ea_schedule(48)
+        for sync in (1, "phase"):
+            outs = {}
+            for prec in ("int8", "bitplane"):
+                e = DistDSIMEngine(prob, mesh, rng="lfsr", precision=prec,
+                                   replicas=40)
+                st = e.init_state(seed=3)
+                st, rec = e.run_recorded_full(st, sch, [24, 48],
+                                              sync_every=sync)
+                outs[prec] = (np.asarray(e.global_spins(st)),
+                              np.asarray(rec.energies), rec.flips)
+            m8, E8, f8 = outs["int8"]; mw, Ew, fw = outs["bitplane"]
+            ok = bool((m8 == mw).all()) and bool((E8 == Ew).all()) \\
+                and f8 == fw
+            print(f"SYNC {sync} BITWISE {ok} flips {fw}")
+    """)
+    assert out.count("BITWISE True") == 2
 
 
 def test_2dev_cmft_phase_publishes_instantaneous_boundaries():

@@ -1,19 +1,20 @@
 """Property tests for core.packing: the 1-bit wire/site format and the
-32-lane multi-spin word format.
+multi-word lane fabric (W stacked uint32 word planes, 32 lanes each).
 
 Previously only exercised indirectly through dsim_dist's boundary
 all-gather; these pin the round-trip contract directly — arbitrary (incl.
 non-multiple-of-32 and non-multiple-of-8) lengths via pad_to_multiple,
-empty inputs, and dtype stability.
+empty inputs, dtype stability, word-straddling lane counts, cross-word
+permutations, and the dead-lane (last-word tail) masking convention.
 """
 
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core.packing import (LANE_WIDTH, lane_permute, lane_swap,
-                                pack_lanes, pack_pm1, pad_to_multiple,
-                                unpack_lanes, unpack_pm1)
+from repro.core.packing import (LANE_WIDTH, MAX_LANE_WORDS, lane_permute,
+                                lane_swap, lane_words, pack_lanes, pack_pm1,
+                                pad_to_multiple, unpack_lanes, unpack_pm1)
 
 RNG = np.random.default_rng(5)
 
@@ -61,12 +62,15 @@ def test_pack_pm1_dtype_stability():
 
 # -- lane packing (pack_lanes / unpack_lanes) ---------------------------------
 
-@pytest.mark.parametrize("R", [1, 2, 7, 31, 32])
+@pytest.mark.parametrize("R", [1, 2, 7, 31, 32, 33, 64, 100])
 def test_pack_lanes_round_trip(R):
+    """Round trip at every word-boundary regime: sub-word, exactly one
+    word, straddling into a second word, exactly two, and a ragged
+    four-word count."""
     x = RNG.choice([-1, 1], size=(R, 4, 3, 5)).astype(np.int8)
     w = pack_lanes(jnp.asarray(x))
     assert w.dtype == jnp.uint32
-    assert w.shape == (4, 3, 5)
+    assert w.shape == (lane_words(R), 4, 3, 5)
     out = unpack_lanes(w, R)
     assert out.dtype == jnp.int8
     np.testing.assert_array_equal(np.asarray(out), x)
@@ -74,42 +78,80 @@ def test_pack_lanes_round_trip(R):
 
 def test_pack_lanes_empty_sites():
     w = pack_lanes(jnp.zeros((4, 0), jnp.int8))
-    assert w.shape == (0,) and w.dtype == jnp.uint32
+    assert w.shape == (1, 0) and w.dtype == jnp.uint32
     out = unpack_lanes(w, 4)
     assert out.shape == (4, 0) and out.dtype == jnp.int8
 
 
 def test_pack_lanes_unused_lanes_zero():
-    """Lanes >= R pack to 0 bits — the word tail is inert, so growing the
-    lane count later never reinterprets old words."""
+    """Lanes >= R pack to 0 bits — confined to the LAST word plane, so the
+    word tail is inert and growing the lane count later never reinterprets
+    old words."""
     x = jnp.asarray(np.ones((3, 8), np.int8))
     w = np.asarray(pack_lanes(x))
-    assert (w == 0b111).all()
+    assert w.shape == (1, 8) and (w == 0b111).all()
+    x2 = jnp.asarray(np.ones((35, 8), np.int8))
+    w2 = np.asarray(pack_lanes(x2))
+    assert w2.shape == (2, 8)
+    assert (w2[0] == 0xFFFFFFFF).all()      # full word: every lane live
+    assert (w2[1] == 0b111).all()           # tail word: 3 live lanes only
 
 
 def test_pack_lanes_rejects_too_many():
+    cap = MAX_LANE_WORDS * LANE_WIDTH
     with pytest.raises(ValueError):
-        pack_lanes(jnp.ones((LANE_WIDTH + 1, 4), jnp.int8))
+        pack_lanes(jnp.ones((cap + 1, 4), jnp.int8))
     with pytest.raises(ValueError):
-        unpack_lanes(jnp.zeros((4,), jnp.uint32), LANE_WIDTH + 1)
+        unpack_lanes(jnp.zeros((MAX_LANE_WORDS + 1, 4), jnp.uint32), cap + 1)
+
+
+def test_unpack_lanes_rejects_word_count_mismatch():
+    """The word axis is load-bearing: unpacking R lanes from the wrong
+    number of word planes is a contract violation, not a silent
+    truncation."""
+    with pytest.raises(ValueError):
+        unpack_lanes(jnp.zeros((1, 4), jnp.uint32), 33)
+    with pytest.raises(ValueError):
+        unpack_lanes(jnp.zeros((2, 4), jnp.uint32), 32)
 
 
 def test_pack_lanes_lane_bit_identity():
-    """Bit r of every word is exactly lane r's spin sign."""
-    R = 9
+    """Bit r%32 of word plane r//32 is exactly lane r's spin sign — at a
+    word-straddling lane count."""
+    R = 41
     x = RNG.choice([-1, 1], size=(R, 17)).astype(np.int8)
     w = np.asarray(pack_lanes(jnp.asarray(x)))
     for r in range(R):
-        np.testing.assert_array_equal((w >> r) & 1, (x[r] > 0))
+        np.testing.assert_array_equal(
+            (w[r // LANE_WIDTH] >> (r % LANE_WIDTH)) & 1, (x[r] > 0))
+
+
+def test_pack_lanes_prefix_stability_across_word_counts():
+    """The first R lanes pack identically whether or not more lanes (and
+    more word planes) follow — the property that lets the scheduler pad a
+    pack up to a word multiple without touching tenant chains."""
+    x = RNG.choice([-1, 1], size=(100, 6)).astype(np.int8)
+    w_all = np.asarray(pack_lanes(jnp.asarray(x)))
+    for R in (31, 32, 33, 64):
+        w_r = np.asarray(pack_lanes(jnp.asarray(x[:R])))
+        W = lane_words(R)
+        full = (R // LANE_WIDTH)        # word planes with every lane live
+        np.testing.assert_array_equal(w_r[:full], w_all[:full])
+        if full < W:                    # tail word: live-lane bits only
+            tail_mask = np.uint32((1 << (R - full * LANE_WIDTH)) - 1)
+            np.testing.assert_array_equal(w_r[full],
+                                          w_all[full] & tail_mask)
 
 
 # -- lane permutation (lane_permute / lane_swap) ------------------------------
 # the replica-exchange swap move of the packed tempering ladder: one bit
-# gather/scatter applied to every word
+# gather/scatter applied to every site's word planes, cross-word moves
+# included
 
-@pytest.mark.parametrize("L", [1, 2, 7, 31, 32])
+@pytest.mark.parametrize("L", [1, 2, 7, 31, 32, 33, 64, 100])
 def test_lane_permute_matches_unpacked_gather(L):
-    """lane_permute on words == the same permutation on unpacked lanes."""
+    """lane_permute on word planes == the same permutation on unpacked
+    lanes, including permutations that move lanes across word planes."""
     x = RNG.choice([-1, 1], size=(L, 5, 3)).astype(np.int8)
     perm = RNG.permutation(L)
     w = pack_lanes(jnp.asarray(x))
@@ -117,10 +159,10 @@ def test_lane_permute_matches_unpacked_gather(L):
     np.testing.assert_array_equal(np.asarray(out), x[perm])
 
 
-@pytest.mark.parametrize("L", [1, 6, 32])
+@pytest.mark.parametrize("L", [1, 6, 32, 65])
 def test_lane_permute_inverse_round_trip(L):
-    """Applying a permutation then its inverse restores every word (on the
-    live lanes; lanes >= L are cleared by convention)."""
+    """Applying a permutation then its inverse restores every word plane
+    (on the live lanes; lanes >= L are cleared by convention)."""
     x = RNG.choice([-1, 1], size=(L, 11)).astype(np.int8)
     w = pack_lanes(jnp.asarray(x))
     perm = RNG.permutation(L)
@@ -130,27 +172,33 @@ def test_lane_permute_inverse_round_trip(L):
 
 
 def test_lane_permute_identity_clears_dead_lanes():
-    """The identity permutation of L lanes zeroes bits >= L — the packed
-    convention that keeps unused lanes inert."""
-    w = jnp.full((4,), 0xFFFFFFFF, jnp.uint32)
+    """The identity permutation of L lanes zeroes bits >= L in the last
+    word plane — the packed convention that keeps unused lanes inert."""
+    w = jnp.full((1, 4), 0xFFFFFFFF, jnp.uint32)
     out = np.asarray(lane_permute(w, np.arange(5)))
     assert (out == 0b11111).all()
+    # multi-word: dead lanes live only in the LAST plane's tail
+    w2 = jnp.full((2, 4), 0xFFFFFFFF, jnp.uint32)
+    out2 = np.asarray(lane_permute(w2, np.arange(40)))
+    assert (out2[0] == 0xFFFFFFFF).all()
+    assert (out2[1] == 0xFF).all()
 
 
 def test_lane_permute_rejects_bad_width():
+    cap = MAX_LANE_WORDS * LANE_WIDTH
     with pytest.raises(ValueError):
-        lane_permute(jnp.zeros((3,), jnp.uint32), np.arange(LANE_WIDTH + 1))
+        lane_permute(jnp.zeros((1, 3), jnp.uint32), np.arange(cap + 1))
     with pytest.raises(ValueError):
-        lane_permute(jnp.zeros((3,), jnp.uint32), np.arange(0))
+        lane_permute(jnp.zeros((1, 3), jnp.uint32), np.arange(0))
 
 
-def test_lane_swap_is_transposition():
+@pytest.mark.parametrize("L,i,j", [(16, 3, 12), (40, 3, 36), (64, 0, 63)])
+def test_lane_swap_is_transposition(L, i, j):
     """lane_swap(i, j) == lane_permute with the (i j) transposition on the
-    live lanes, and is an involution (swap twice = identity)."""
-    L = 16
+    live lanes, and is an involution (swap twice = identity) — including
+    transpositions across word planes."""
     x = RNG.choice([-1, 1], size=(L, 9)).astype(np.int8)
     w = pack_lanes(jnp.asarray(x))
-    i, j = 3, 12
     perm = np.arange(L)
     perm[[i, j]] = perm[[j, i]]
     np.testing.assert_array_equal(np.asarray(lane_swap(w, i, j)),
@@ -160,18 +208,19 @@ def test_lane_swap_is_transposition():
                                   np.asarray(w))
 
 
-def test_lane_swap_accept_gated():
+@pytest.mark.parametrize("L,i,j", [(8, 1, 5), (48, 1, 37)])
+def test_lane_swap_accept_gated(L, i, j):
     """A False accept is a no-op; a per-site accept vector swaps exactly
-    the accepted sites (the Metropolis gate of a packed exchange pass)."""
-    L = 8
+    the accepted sites (the Metropolis gate of a packed exchange pass) —
+    cross-word pairs included."""
     x = RNG.choice([-1, 1], size=(L, 10)).astype(np.int8)
     w = pack_lanes(jnp.asarray(x))
     np.testing.assert_array_equal(
-        np.asarray(lane_swap(w, 1, 5, accept=jnp.bool_(False))),
+        np.asarray(lane_swap(w, i, j, accept=jnp.bool_(False))),
         np.asarray(w))
     acc = jnp.asarray(RNG.random(10) < 0.5)
-    out = unpack_lanes(lane_swap(w, 1, 5, accept=acc), L)
+    out = unpack_lanes(lane_swap(w, i, j, accept=acc), L)
     want = x.copy()
     accn = np.asarray(acc)
-    want[1, accn], want[5, accn] = x[5, accn], x[1, accn]
+    want[i, accn], want[j, accn] = x[j, accn], x[i, accn]
     np.testing.assert_array_equal(np.asarray(out), want)

@@ -177,9 +177,12 @@ def test_apt_packed_guards():
     with pytest.raises(ValueError, match="rng='lfsr'"):
         APTICM(g, col, betas, chains=4, packed=True)
     with pytest.raises(ValueError, match="bit lanes"):
-        # chains * temperatures = 40 > 32 word lanes
-        APTICM(g, col, np.linspace(0.5, 3.0, 10), chains=4, rng="lfsr",
+        # chains * temperatures = 288 > 8 words * 32 lanes
+        APTICM(g, col, np.linspace(0.5, 3.0, 36), chains=8, rng="lfsr",
                packed=True)
+    # word-straddling grids are legal now: 4 * 10 = 40 lanes -> W = 2
+    assert APTICM(g, col, np.linspace(0.5, 3.0, 10), chains=4, rng="lfsr",
+                  packed=True).words == 2
     with pytest.raises(ValueError, match="unknown rng"):
         APTICM(g, col, betas, chains=4, rng="pcg")
 
@@ -209,6 +212,46 @@ def test_apt_packed_bitwise_matches_unpacked_lfsr():
     cp, ep = pk.best_config(sp)
     assert eu == ep
     np.testing.assert_array_equal(cu, cp)
+
+
+def test_apt_packed_multiword_bitwise_matches_unpacked_lfsr():
+    """The multi-word ladder (4 chains x 10 temperatures = 40 lanes across
+    W=2 word planes) stays bit-identical to the unpacked fixed-point run —
+    replica-exchange swaps are now cross-word lane permutations and the
+    ICM pair (2p, 2p+1) can straddle a word boundary."""
+    g = ea3d(4, seed=1)
+    col = lattice3d_coloring(4)
+    betas = np.linspace(0.4, 2.8, 10)
+    un = APTICM(g, col, betas, chains=4, rng="lfsr")
+    pk = APTICM(g, col, betas, chains=4, rng="lfsr", packed=True)
+    assert pk.words == 2
+    su, sp = un.init_state(seed=2), pk.init_state(seed=2)
+    np.testing.assert_array_equal(np.asarray(un.spins(su)),
+                                  np.asarray(pk.spins(sp)))
+    su, (_, bu) = un.run(su, 12, icm_every=4, record_every=4)
+    sp, (_, bp) = pk.run(sp, 12, icm_every=4, record_every=4)
+    np.testing.assert_array_equal(bu, bp)
+    np.testing.assert_array_equal(np.asarray(un.spins(su)),
+                                  np.asarray(pk.spins(sp)))
+    np.testing.assert_array_equal(np.asarray(su.E), np.asarray(sp.E))
+    assert int(su.swaps) == int(sp.swaps) > 0
+    assert int(su.icms) == int(sp.icms) > 0
+
+
+def test_apt_packed_t64_ladder_end_to_end():
+    """A G81-class T=64 ladder (2 chains -> 128 lanes, W=4) runs packed
+    end to end — the configuration the 32-lane cap used to reject with a
+    ValueError — and its incremental energies stay exact."""
+    g = ea3d(4, seed=3)
+    col = lattice3d_coloring(4)
+    pk = APTICM(g, col, np.linspace(0.2, 3.0, 64), chains=2, rng="lfsr",
+                packed=True)
+    assert pk.words == 4
+    st = pk.init_state(seed=1)
+    st, (ts, best) = pk.run(st, 8, icm_every=4, record_every=4)
+    assert int(st.swaps) > 0
+    Edir = jax.vmap(jax.vmap(lambda mm: energy(g, mm)))(pk.spins(st))
+    assert float(jnp.abs(Edir - st.E).max()) == 0.0
 
 
 def test_apt_packed_incremental_energy_exact():

@@ -23,6 +23,7 @@ REQUIRED_NUMBERS = [
     "lattice_fused_R1_flips_per_s",
     "lattice_fused_int8_R1_flips_per_s",
     "lattice_bitplane_R32_flips_per_s",
+    "lattice_bitplane_R64_flips_per_s",
     "speedup_fused_R1_vs_seed_dispatch",
     "speedup_int8_vs_f32_fused_R1",
     "engine_speedup_int8_vs_f32_R1",
@@ -39,6 +40,8 @@ REQUIRED_KEYS = REQUIRED_NUMBERS + [
     "speedup_bitplane_vs_int8_R8_note",
     # the word wire format on the mesh engine + the lane-packed ladder
     "dsim_dist_bitplane", "apt_icm_packed",
+    # the multi-word fabric: per-lane rate across stacked word planes
+    "bitplane_word_scaling",
 ]
 SPREAD_FIELDS = ("best", "min", "median", "trimmed_median", "max", "reps")
 
@@ -133,6 +136,19 @@ def check(payload: dict) -> list:
                                  swap.get(f), errors)
     elif "apt_icm_packed" in payload:
         errors.append(f"apt_icm_packed: expected a dict, got {apt!r}")
+    ws = payload.get("bitplane_word_scaling")
+    if isinstance(ws, dict):
+        for side in ("per_lane_flips_per_s", "lane_efficiency_vs_one_word"):
+            entries = ws.get(side)
+            if not isinstance(entries, dict) or not entries:
+                errors.append(f"bitplane_word_scaling.{side}: expected a "
+                              f"non-empty dict, got {entries!r}")
+                continue
+            for w, v in entries.items():
+                _finite_positive(f"bitplane_word_scaling.{side}[{w}]", v,
+                                 errors)
+    elif "bitplane_word_scaling" in payload:
+        errors.append(f"bitplane_word_scaling: expected a dict, got {ws!r}")
     k2k = payload.get("kernel_int8_vs_f32")
     if isinstance(k2k, dict):
         for side in ("f32_flips_per_s", "int8_flips_per_s"):

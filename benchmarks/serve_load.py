@@ -15,6 +15,13 @@ repo root (schema-gated in CI by tools/check_bench_schema.py): per-load
 p50/p95/p99 latency, jobs/s, exact flips, engine calls vs jobs submitted
 (engine_calls < jobs is the packing evidence), and the packed-vs-baseline
 throughput ratio.
+
+A **fault wave** then measures serving under injected failure: a seeded
+:class:`FaultPlan` fails each chunk with probability 0 / 5 / 20%
+(transient), checkpointing every sweeps/8, and the wave records goodput
+(DONE jobs per second), p99 completion latency over the jobs that
+finished, retry/bisect counts, and recovered-vs-restarted sweep totals —
+the cost of chaos with recovery on, not just the happy path.
 """
 
 from __future__ import annotations
@@ -27,17 +34,21 @@ import numpy as np
 
 from repro.core.coloring import lattice3d_coloring
 from repro.core.graph import ea3d
-from repro.serve import SampleServer
+from repro.serve import FaultPlan, FaultRule, SampleServer
 
 from .common import host_fingerprint, row, save_detail
 
 ROOT_BENCH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_serve_load.json")
 
+FAULT_RATES = (0.0, 0.05, 0.20)
 
-def _make_server(pack: bool, max_r: int, sweeps: int) -> SampleServer:
+
+def _make_server(pack: bool, max_r: int, sweeps: int,
+                 **server_kw) -> SampleServer:
     srv = SampleServer(pool_capacity=32, max_queue_depth=4096,
-                       max_replicas_per_call=max_r, pack=pack)
+                       max_replicas_per_call=max_r, pack=pack,
+                       **server_kw)
     for name, L, seed in (("ea_a", 5, 11), ("ea_b", 6, 12)):
         g = ea3d(L, seed=seed)
         srv.register_problem(name, graph=g,
@@ -87,6 +98,60 @@ def _wave(srv: SampleServer, n_jobs: int, sweeps: int, rate: float,
         "p50_ms": float(p50), "p95_ms": float(p95), "p99_ms": float(p99),
         "engine_calls": srv.stats()["engine_calls"] - calls0,
         "flips_total": int(sum(r["flips"] for r in results)),
+        "elapsed_s": elapsed,
+    }
+
+
+def _fault_wave(fault_rate: float, n_jobs: int, sweeps: int, max_r: int,
+                seed0: int) -> dict:
+    """One burst wave against a fresh packed server whose chunks fail
+    (transient) with ``fault_rate`` probability; recovery machinery on
+    (checkpoint resume, bisect, retries).  Jobs that exhaust recovery may
+    end FAILED — goodput counts only DONE jobs, and nothing here asserts
+    all-done at nonzero rates."""
+    plan = None if fault_rate <= 0 else FaultPlan(
+        [FaultRule(site="chunk", kind="transient", rate=fault_rate,
+                   times=None)], seed=17)
+    srv = _make_server(True, max_r, sweeps, fault_plan=plan,
+                       checkpoint_every=max(sweeps // 8, 1),
+                       max_bisect_calls=64)
+    srv.start()
+    ids = []
+    t0 = time.perf_counter()
+    for i in range(n_jobs):
+        prob, eng, sync = _MIX[i % len(_MIX)]
+        ids.append(srv.submit(prob, engine=eng, sweeps=sweeps, replicas=2,
+                              seed=seed0 + i, sync_every=sync,
+                              max_retries=8))
+    results = []
+    for j in ids:
+        try:
+            results.append(srv.result(j, timeout=600.0))
+        except TimeoutError:
+            results.append(srv.poll(j))
+    elapsed = time.perf_counter() - t0
+    s = srv.stats()
+    srv.stop()
+    done = [r for r in results if r["status"] == "done"]
+    lat_ms = sorted(r["total_s"] * 1e3 for r in done)
+    p99 = float(np.percentile(lat_ms, 99)) if lat_ms else float("nan")
+    return {
+        "injected_fault_rate": fault_rate,
+        "jobs": n_jobs,
+        "done": len(done),
+        "failed": s["failed"],
+        "goodput_jobs_per_s": len(done) / elapsed,
+        "p99_ms": p99,
+        "retries": s["retries"],
+        "quarantined_batches": s["quarantined_batches"],
+        "bisect_requeues": s["bisect_requeues"],
+        "faults_injected": s["faults_injected"],
+        "checkpoints_written": s["checkpoints_written"],
+        # recovered-vs-restarted: sweeps continued from a checkpoint vs
+        # sweeps re-executed from scratch across every job's lifetime
+        "recovered_sweeps": int(sum(r["resumed_sweeps"] for r in results)),
+        "restarted_sweeps": int(sum(r["restarted_sweeps"]
+                                    for r in results)),
         "elapsed_s": elapsed,
     }
 
@@ -141,6 +206,17 @@ def run(quick: bool = True):
     for srv in servers.values():
         srv.stop()
 
+    fault_waves = []
+    for fi, fr in enumerate(FAULT_RATES):
+        w = _fault_wave(fr, n_jobs, sweeps, max_r, seed0=5000 + 1000 * fi)
+        fault_waves.append(w)
+        rows.append(row(
+            f"serve_load_faults@{fr:.0%}", w["p99_ms"] * 1e3,
+            f"{w['goodput_jobs_per_s']:.2f} done-jobs/s "
+            f"({w['done']}/{w['jobs']} done, {w['retries']} retries, "
+            f"{w['recovered_sweeps']} sweeps resumed / "
+            f"{w['restarted_sweeps']} restarted)"))
+
     best = max(e["speedup_packed_vs_baseline"] for e in loads)
     burst = loads[-1]
     bench = {
@@ -152,6 +228,7 @@ def run(quick: bool = True):
                      "max_replicas_per_call": max_r,
                      "mix": [f"{p}/{e}" for p, e, _ in _MIX]},
         "loads": loads,
+        "fault_waves": fault_waves,
         "speedup_packed_vs_baseline_best": best,
         "packing_observed": bool(
             burst["packed"]["engine_calls"] < burst["packed"]["jobs"]),

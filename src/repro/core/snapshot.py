@@ -9,17 +9,28 @@ leaves back to device; engines that shard their states (lattice, dist)
 re-establish placement via their own ``shard_state`` — the registry handle's
 ``restore`` does this automatically.
 
-Snapshots are plain numpy pytrees, so they also pickle — a durable-queue
-backend can persist in-flight jobs across process restarts.
+Snapshots are plain numpy pytrees, so they also pickle — the serving
+layer's checkpoint spool (``repro.serve.spool``) persists in-flight jobs
+across process restarts through the durable-write helpers below:
+``write_snapshot_file`` is atomic (temp + ``os.replace``, fsynced), so a
+kill -9 at any instant leaves either the old bytes or the new bytes on
+disk, never a torn file, and ``snapshot_digest`` gives the sha1 content
+address those files are named by.
 """
 
 from __future__ import annotations
+
+import hashlib
+import os
+import pickle
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["snapshot_state", "restore_state", "snapshot_nbytes"]
+__all__ = ["snapshot_state", "restore_state", "snapshot_nbytes",
+           "snapshot_digest", "write_snapshot_file", "load_snapshot_file"]
 
 
 def _is_array(x) -> bool:
@@ -45,3 +56,43 @@ def restore_state(snapshot):
 def snapshot_nbytes(snapshot) -> int:
     """Total host bytes held by a snapshot (pool / queue accounting)."""
     return sum(x.nbytes for x in jax.tree.leaves(snapshot) if _is_array(x))
+
+
+def snapshot_digest(obj) -> str:
+    """sha1 content address of a snapshot/record (bytes are hashed as-is;
+    anything else is pickled first)."""
+    blob = obj if isinstance(obj, bytes) else \
+        pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    return hashlib.sha1(blob).hexdigest()
+
+
+def write_snapshot_file(path: str, obj) -> str:
+    """Durably write a snapshot/record to ``path`` (atomic, fsynced).
+
+    The bytes land in a temp file in the same directory, are fsynced, and
+    replace ``path`` in one ``os.replace`` — a crash mid-write can never
+    leave a torn file at ``path``.  Returns the content digest.
+    """
+    blob = obj if isinstance(obj, bytes) else \
+        pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        raise
+    return snapshot_digest(blob)
+
+
+def load_snapshot_file(path: str):
+    """Read back a record written by :func:`write_snapshot_file`."""
+    with open(path, "rb") as f:
+        return pickle.load(f)

@@ -266,6 +266,10 @@ class RecordedCursor:
         self._pos = 0                # sweeps completed
         self._out: List[Any] = []
         self._times: List[int] = []
+        # optional per-chunk boundary hook (fault injection: the serving
+        # layer's FaultPlan raises/hangs/corrupts here, at exactly the
+        # points where the hardware would drop a boundary exchange)
+        self.fault_hook: Optional[Callable] = None
         # The device counter is read lazily: at record points (which
         # synchronize anyway for the observable) and just before the
         # worst-case flips since the last read could reach 2**31 (keeping
@@ -311,6 +315,8 @@ class RecordedCursor:
         """Run up to ``max_chunks`` plan chunks; returns how many ran."""
         ran = 0
         while ran < max_chunks and not self.done:
+            if self.fault_hook is not None:
+                self.fault_hook(self)
             c = self._plan[self._i]
             nsw = c * self.S
             worst = nsw * (self._flips_per_sweep or 0)
@@ -378,6 +384,80 @@ class RecordedCursor:
                                                  self.S))
         if not self.done:
             jax.block_until_ready(self._record_fn(self.state))
+        return self
+
+    # -- checkpoint / resume ---------------------------------------------------
+
+    _CK_FORMAT = 1
+
+    def checkpoint(self, snapshot_fn: Optional[Callable] = None) -> dict:
+        """Picklable host-side checkpoint of the cursor mid-run.
+
+        Captures everything :meth:`restore_checkpoint` needs to continue
+        the run bitwise-identically on a *fresh* cursor built from the
+        same (schedule, record points, sync_every): plan position,
+        recorded times/observables so far, the exact modular flip
+        accounting (``_prev``/``_pending``/totals), and the engine state
+        — via ``snapshot_fn`` (normally the handle's ``snapshot``, which
+        pulls device arrays to owned numpy copies) or raw.  Settles the
+        pending flip window first, so the checkpoint's counters are exact
+        at this boundary.
+        """
+        if self._flips_of is not None and self._pending:
+            self._read_flips()
+        snap = self.state if snapshot_fn is None else snapshot_fn(self.state)
+        return {
+            "format": self._CK_FORMAT,
+            "S": self.S,
+            "total_sweeps": self.total_sweeps,
+            "plan_len": len(self._plan),
+            "i": self._i,
+            "pos": self._pos,
+            "times": list(self._times),
+            "out": [np.asarray(o) for o in self._out],
+            "prev": None if self._prev is None else self._prev.copy(),
+            "pending": self._pending,
+            "flips_vec": None if self.flips_vec is None
+            else self.flips_vec.copy(),
+            "flips_total": self._flips_total,
+            "state": snap,
+        }
+
+    def restore_checkpoint(self, ck: dict,
+                           restore_fn: Optional[Callable] = None):
+        """Resume a fresh cursor from :meth:`checkpoint` output.
+
+        The cursor must have been constructed with the same schedule,
+        record points, and sync period — validated against the
+        checkpoint's (S, total_sweeps, plan length) triple; a mismatch
+        raises ValueError (the caller restarts from sweep 0 instead of
+        silently resuming into a different trajectory).  With a matching
+        plan the continuation is bitwise-identical to the uninterrupted
+        run.  ``restore_fn`` (normally the handle's ``restore``) pushes
+        the state snapshot back to device, re-sharded where the engine
+        shards.
+        """
+        if ck.get("format") != self._CK_FORMAT:
+            raise ValueError(f"unknown checkpoint format "
+                             f"{ck.get('format')!r}")
+        have = (ck["S"], ck["total_sweeps"], ck["plan_len"])
+        want = (self.S, self.total_sweeps, len(self._plan))
+        if have != want:
+            raise ValueError(
+                f"checkpoint plan mismatch: checkpoint has (S, sweeps, "
+                f"chunks)={have}, cursor has {want}")
+        self.state = ck["state"] if restore_fn is None \
+            else restore_fn(ck["state"])
+        self._i = int(ck["i"])
+        self._pos = int(ck["pos"])
+        self._times = [int(t) for t in ck["times"]]
+        self._out = [jnp.asarray(o) for o in ck["out"]]
+        self._prev = None if ck["prev"] is None \
+            else np.asarray(ck["prev"]).copy()
+        self._pending = int(ck["pending"])
+        self.flips_vec = None if ck["flips_vec"] is None \
+            else np.asarray(ck["flips_vec"]).copy()
+        self._flips_total = int(ck["flips_total"])
         return self
 
 

@@ -53,13 +53,29 @@ class HandleCursor:
     jobs it coalesced into this one batched run.
     """
 
-    def __init__(self, cursor, replicas: int):
+    def __init__(self, cursor, replicas: int, handle=None):
         self._c = cursor
         self.replicas = int(replicas)
+        self._handle = handle
 
     @property
     def state(self):
         return self._c.state
+
+    @state.setter
+    def state(self, st):
+        # fault injection ("corrupt" rules) swaps the live state in place
+        self._c.state = st
+
+    @property
+    def fault_hook(self):
+        """Per-chunk boundary hook on the underlying cursor (fault
+        injection fires here, at the boundary-exchange points)."""
+        return self._c.fault_hook
+
+    @fault_hook.setter
+    def fault_hook(self, fn):
+        self._c.fault_hook = fn
 
     @property
     def done(self) -> bool:
@@ -116,6 +132,20 @@ class HandleCursor:
 
     def warm(self):
         self._c.warm()
+        return self
+
+    def checkpoint(self) -> dict:
+        """Picklable mid-run checkpoint (state pulled to host via the
+        handle's ``snapshot`` when the cursor was built by one)."""
+        fn = self._handle.snapshot if self._handle is not None else None
+        return self._c.checkpoint(snapshot_fn=fn)
+
+    def restore_checkpoint(self, ck: dict):
+        """Resume from :meth:`checkpoint` output, bitwise-identically;
+        the state is pushed back to device (re-sharded) via the handle's
+        ``restore``.  Raises ValueError on a plan mismatch."""
+        fn = self._handle.restore if self._handle is not None else None
+        self._c.restore_checkpoint(ck, restore_fn=fn)
         return self
 
 
@@ -176,7 +206,7 @@ class _Handle:
         :class:`HandleCursor` advanced chunk by chunk by the caller."""
         cur = self._recorded(state, schedule, record_points, sync_every,
                              cursor=True)
-        return HandleCursor(cur, self.replicas)
+        return HandleCursor(cur, self.replicas, handle=self)
 
     def snapshot(self, state):
         """Host-side owned copy of an engine state (see core.snapshot)."""

@@ -6,15 +6,26 @@ token paths.
   streaming per-chunk results.  The production sampling front door.
 - :class:`SampleService` (sample_service.py) — the synchronous one-call
   facade, kept for scripts and as the packing benchmark baseline.
+- faults.py / spool.py — the deterministic fault-injection harness, the
+  serving failure taxonomy, and the checkpoint spool behind
+  ``SampleServer.recover`` (see DESIGN.md, "Fault tolerance and
+  recovery").
 - serve_step.py — prefill/decode steps for the LM workload family.
 """
 
+from .faults import (DeadlineExceeded, FaultPlan, FaultRule,
+                     InjectedFault, PermanentFault, StateCorruption,
+                     TransientFault, classify_error, compute_backoff)
 from .jobs import Job, JobSpec, JobStatus
-from .pool import EnginePool
+from .pool import CircuitOpen, EnginePool
 from .sample_service import SampleService
 from .scheduler import Batch, ReplicaPackingScheduler
 from .server import QueueFull, SampleServer
+from .spool import CheckpointSpool
 
 __all__ = ["SampleServer", "SampleService", "QueueFull", "EnginePool",
            "ReplicaPackingScheduler", "Batch", "Job", "JobSpec",
-           "JobStatus"]
+           "JobStatus", "FaultPlan", "FaultRule", "InjectedFault",
+           "TransientFault", "PermanentFault", "StateCorruption",
+           "DeadlineExceeded", "CircuitOpen", "CheckpointSpool",
+           "classify_error", "compute_backoff"]

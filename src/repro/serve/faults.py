@@ -1,0 +1,250 @@
+"""Deterministic fault injection and the serving failure taxonomy.
+
+The paper's machine is a network of 28 FPGAs: any node can stall, drop a
+boundary exchange, or hand back garbage, and the million-p-bit sampler
+must keep producing valid Gibbs statistics around it.  The serving stack
+therefore carries real recovery machinery (retry/backoff, poison-batch
+bisection, checkpoint resume, deadlines, a circuit breaker) — and none of
+it is trustworthy unless it can be *driven* deterministically.  This
+module is that driver:
+
+- **Failure taxonomy** — :class:`TransientFault` / :class:`PermanentFault`
+  (injected), :class:`StateCorruption` (the server's integrity guard
+  tripped on non-finite energies), and :func:`classify_error`, the one
+  place that decides transient-vs-permanent for retry policy.
+- **:class:`FaultPlan`** — a seeded, replayable list of
+  :class:`FaultRule`\\ s that raise, hang, or corrupt at chosen sites:
+  ``"build"`` (engine-pool compiles), ``"chunk"`` (between-chunk pump
+  steps, matchable by chunk index and job id), and ``"exchange"`` (the
+  cursor's per-chunk boundary hook inside ``RecordedCursor.advance``).
+  Wired through ``SampleServer(fault_plan=...)``; every recovery path in
+  tests is exercised by a plan, never by sleeps-and-hope chaos.
+- **:func:`compute_backoff`** — pure, seeded exponential backoff with
+  jitter, so retry pacing is unit-testable arithmetic.
+
+Determinism contract: rules fire on exact matches (site / index / job /
+key); probabilistic rules (``rate < 1``) draw from the plan's own seeded
+generator in call order, so two identical runs of the same plan make
+identical decisions, and :meth:`FaultPlan.replay` hands back a fresh
+plan with the same seed and un-spent rule budgets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["InjectedFault", "TransientFault", "PermanentFault",
+           "StateCorruption", "DeadlineExceeded", "FaultRule", "FaultPlan",
+           "classify_error", "compute_backoff", "corrupt_pytree"]
+
+
+class InjectedFault(RuntimeError):
+    """Base class for faults raised by a :class:`FaultPlan`."""
+
+
+class TransientFault(InjectedFault):
+    """Injected fault the retry policy should treat as retryable."""
+
+
+class PermanentFault(InjectedFault):
+    """Injected fault that must fail the job (no retry)."""
+
+
+class StateCorruption(RuntimeError):
+    """The server's integrity guard found non-finite energies in a fresh
+    record row — the sampler state is garbage.  Classified transient: a
+    retry from the last (pre-corruption) checkpoint repairs it."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """A job blew its ``deadline_s`` budget (enforced between chunks)."""
+
+
+# -- transient / permanent classification -------------------------------------
+
+# Exceptions whose cause plausibly goes away on retry: injected transients,
+# corrupted state (a checkpoint restore repairs it), infra-ish errors, and
+# the pool's fast-fail while a build circuit is cooling down.
+_TRANSIENT = (TransientFault, StateCorruption, TimeoutError,
+              ConnectionError, InterruptedError)
+# Exceptions that are deterministic properties of the request or the code:
+# retrying re-raises them identically.
+_PERMANENT = (PermanentFault, ValueError, TypeError, KeyError,
+              NotImplementedError, AssertionError, AttributeError)
+
+
+def classify_error(err: BaseException) -> str:
+    """``"transient"`` or ``"permanent"`` — the retry-policy split.
+
+    Unknown exception types classify transient: on a serving tier a
+    bounded retry of an unrecognized failure is cheaper than wrongly
+    failing a tenant, and ``max_retries`` bounds the waste.  (The pool's
+    ``CircuitOpen`` classifies transient via its ``TimeoutError`` base.)
+    """
+    if isinstance(err, _PERMANENT):
+        return "permanent"
+    if isinstance(err, _TRANSIENT):
+        return "transient"
+    return "transient"
+
+
+def compute_backoff(retries: int, *, base: float = 0.05, cap: float = 5.0,
+                    jitter: float = 0.5, seed: int = 0) -> float:
+    """Deterministic exponential backoff with seeded jitter.
+
+    Retry k (0-based) waits ``min(cap, base * 2**k) * (1 + jitter * u)``
+    with ``u = U[0, 1)`` drawn from a generator seeded by (seed, k) — the
+    same (job, attempt) always gets the same delay, but distinct jobs
+    decorrelate (no thundering-herd resubmission).  ``base = 0`` disables
+    waiting entirely (immediate retry), which tests use for determinism.
+    """
+    if base <= 0.0:
+        return 0.0
+    delay = min(float(cap), float(base) * (2.0 ** max(int(retries), 0)))
+    if jitter > 0.0:
+        u = np.random.default_rng((int(seed) & 0x7FFFFFFF,
+                                   max(int(retries), 0))).random()
+        delay *= 1.0 + float(jitter) * u
+    return delay
+
+
+def corrupt_pytree(state):
+    """Deterministically corrupt every array leaf of a state pytree.
+
+    Float leaves become NaN (the server's integrity guard catches those as
+    non-finite energies); integer/bool leaves are bit-scrambled.  Used by
+    ``action="corrupt"`` rules to emulate a node handing back garbage."""
+    import jax
+    import jax.numpy as jnp
+
+    def _corrupt(x):
+        if not isinstance(x, (jax.Array, np.ndarray, np.generic)):
+            return x
+        a = jnp.asarray(x)
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            return jnp.full_like(a, jnp.nan)
+        if a.dtype == jnp.bool_:
+            return ~a
+        return a ^ jnp.asarray(0x55555555 & np.iinfo(
+            np.dtype(a.dtype.name)).max, a.dtype)
+
+    return jax.tree.map(_corrupt, state)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultRule:
+    """One injection rule; all given coordinates must match for it to fire.
+
+    site:   "build" | "chunk" | "exchange".
+    action: "raise" (default) | "hang" (sleep ``hang_s`` inside the timed
+            chunk window — the watchdog's prey) | "corrupt" (scramble the
+            cursor state via :func:`corrupt_pytree`).
+    kind:   "transient" | "permanent" — which exception a raise throws.
+    index:  fire only at this exact chunk/attempt index (None = any).
+    after:  fire only at index >= after (None = any).
+    job:    fire only when this job id (or seed) is in the batch.
+    key:    fire only when ``repr(pool key)`` contains this substring.
+    rate:   firing probability when matched (seeded; 1.0 = always).
+    times:  total firing budget (None = unlimited).
+    """
+
+    site: str
+    action: str = "raise"
+    kind: str = "transient"
+    index: Optional[int] = None
+    after: Optional[int] = None
+    job: Any = None
+    key: Any = None
+    rate: float = 1.0
+    times: Optional[int] = 1
+    hang_s: float = 0.05
+
+    def __post_init__(self):
+        if self.site not in ("build", "chunk", "exchange"):
+            raise ValueError(f"unknown fault site {self.site!r}")
+        if self.action not in ("raise", "hang", "corrupt"):
+            raise ValueError(f"unknown fault action {self.action!r}")
+        if self.kind not in ("transient", "permanent"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+class FaultPlan:
+    """A seeded, replayable sequence of fault injections.
+
+    ``fire`` finds the first matching rule with budget left (consuming one
+    firing and, for ``rate < 1`` rules, one draw from the seeded
+    generator); ``apply`` additionally *performs* the action.  The plan
+    records every firing in :attr:`events` for test assertions, and is
+    thread-safe (prewarm threads and the pump share it).
+    """
+
+    def __init__(self, rules: Sequence[FaultRule], seed: int = 0):
+        self.rules: List[FaultRule] = list(rules)
+        self.seed = int(seed)
+        self._rng = np.random.default_rng(self.seed)
+        self._remaining = [r.times for r in self.rules]
+        self.events: List[Tuple] = []
+        self._lock = threading.Lock()
+
+    def replay(self) -> "FaultPlan":
+        """A fresh plan with the same rules, seed, and full budgets —
+        re-running an identical workload makes identical decisions."""
+        return FaultPlan(self.rules, seed=self.seed)
+
+    def fire(self, site: str, *, index: Optional[int] = None,
+             jobs: Sequence[Any] = (), key: Any = None
+             ) -> Optional[FaultRule]:
+        """The first matching rule (its budget consumed), or None."""
+        with self._lock:
+            jobs = tuple(jobs)
+            for ri, r in enumerate(self.rules):
+                if r.site != site:
+                    continue
+                if r.index is not None and index != r.index:
+                    continue
+                if r.after is not None and (index is None
+                                            or index < r.after):
+                    continue
+                if r.job is not None and r.job not in jobs:
+                    continue
+                if r.key is not None and (key is None
+                                          or str(r.key) not in repr(key)):
+                    continue
+                if self._remaining[ri] is not None \
+                        and self._remaining[ri] <= 0:
+                    continue
+                if r.rate < 1.0 and self._rng.random() >= r.rate:
+                    continue
+                if self._remaining[ri] is not None:
+                    self._remaining[ri] -= 1
+                self.events.append((site, index, r.action, r.kind))
+                return r
+        return None
+
+    def apply(self, site: str, cursor=None, *, index: Optional[int] = None,
+              jobs: Sequence[Any] = (), key: Any = None
+              ) -> Optional[FaultRule]:
+        """Fire and perform: raise / hang / corrupt.  Returns the rule
+        that fired (for "hang"/"corrupt") or None."""
+        r = self.fire(site, index=index, jobs=jobs, key=key)
+        if r is None:
+            return None
+        if r.action == "hang":
+            time.sleep(r.hang_s)
+            return r
+        if r.action == "corrupt":
+            if cursor is not None:
+                cursor.state = corrupt_pytree(cursor.state)
+            return r
+        exc = TransientFault if r.kind == "transient" else PermanentFault
+        raise exc(f"injected {r.kind} fault at {site}"
+                  f"[{'any' if index is None else index}]")
+
+    @property
+    def fired(self) -> int:
+        return len(self.events)

@@ -83,6 +83,11 @@ class JobSpec:
     record_points: Optional[Tuple[int, ...]] = None
     priority: int = 0                # higher runs sooner
     schedule: Any = None             # explicit Schedule; None -> ea_schedule
+    # fault-tolerance policy (None -> the server's defaults)
+    max_retries: Optional[int] = None    # transient-failure retry budget
+    deadline_s: Optional[float] = None   # wall budget from submit; enforced
+    #                                      between chunks (DeadlineExceeded)
+    checkpoint_every: Optional[int] = None  # sweeps between spool snapshots
 
 
 def pack_key(spec: JobSpec, problem_fp: str, schedule_fp: str) -> tuple:
@@ -112,6 +117,17 @@ class Job:
         self.status = JobStatus.QUEUED
         self.cancel_requested = False
         self.error: Optional[str] = None
+        # fault-tolerance runtime
+        self.attempts: int = 0       # batch starts this job participated in
+        self.retries: int = 0        # transient-failure retries consumed
+        self.bisect_runs: int = 0    # quarantine re-runs (not retries)
+        self.pack_group: Optional[tuple] = None  # bisect/recover pinning:
+        #   jobs only pack with equal groups (None packs freely)
+        self.next_eligible_at: float = 0.0       # retry backoff gate
+        self.resume_ck: Any = None   # checkpoint record to resume from
+        self.resume_ck_digest: Optional[str] = None  # its spool address
+        self.resumed_sweeps: int = 0     # sweeps recovered via checkpoints
+        self.restarted_sweeps: int = 0   # sweeps re-executed from scratch
         # timestamps (time.perf_counter clock)
         self.submitted_at = submitted_at
         self.started_at: Optional[float] = None
@@ -145,6 +161,20 @@ class Job:
             self.best_replica = i
             self.best_spins = np.asarray(spins_r[i]).copy()
 
+    def reset_partials(self):
+        """Drop streamed partials for a from-scratch re-run (retry or
+        bisect without a usable checkpoint); the discarded progress is
+        accounted in ``restarted_sweeps``."""
+        self.restarted_sweeps += self.sweeps_done
+        self.times = []
+        self.energy_rows = []
+        self.best_energy = float("inf")
+        self.best_replica = -1
+        self.best_spins = None
+        self.flips = 0
+        self.sweeps_done = 0
+        self.device_s = 0.0
+
     # -- views ----------------------------------------------------------------
 
     def energies(self) -> np.ndarray:
@@ -173,6 +203,10 @@ class Job:
             "packed_with": self.packed_with,
             "pool_hit": self.pool_hit,
             "error": self.error,
+            "retries": self.retries,
+            "bisect_runs": self.bisect_runs,
+            "resumed_sweeps": self.resumed_sweeps,
+            "restarted_sweeps": self.restarted_sweeps,
         }
         return out
 

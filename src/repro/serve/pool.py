@@ -1,4 +1,4 @@
-"""LRU pool of compiled engine handles.
+"""LRU pool of compiled engine handles, with a build circuit breaker.
 
 Building an engine is cheap; the expensive part is the jit compile of its
 chunk runners on first use — seconds on this host, against millisecond
@@ -15,31 +15,69 @@ Builds are per-key single-flight: a second thread asking for a key that is
 mid-build waits for the first build instead of compiling twice, and the
 pool lock is *not* held during builds, so an async prewarm never blocks
 the serving path on a compile.
+
+Failure machinery (a compile that dies must not take the serving path
+down with it):
+
+- **Accounting** — every failed build is counted (``failed_builds``) and
+  its stringified error kept (``last_error``, also per key), surfaced in
+  :meth:`stats`; a fire-and-forget ``prewarm_async`` failure is therefore
+  visible even if nobody joins the thread.
+- **Circuit breaker** — ``breaker_threshold`` *consecutive* failed builds
+  of one key open that key's circuit: further ``get``\\ s fast-fail with
+  :class:`CircuitOpen` (no compile attempt, the serving loop is not
+  stalled re-dying) until ``breaker_cooldown_s`` has passed, after which
+  one caller is let through to probe (half-open); a successful build
+  closes the circuit.  The clock is injectable for deterministic tests.
+- **Suspect marking** — the serving watchdog calls :meth:`mark_suspect`
+  when a chunk ran absurdly long on some key's executable; sticky until
+  :meth:`clear_suspect`, surfaced in :meth:`stats` for operators.
 """
 
 from __future__ import annotations
 
 import threading
+import time
 from collections import OrderedDict
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
-__all__ = ["EnginePool"]
+__all__ = ["EnginePool", "CircuitOpen"]
+
+
+class CircuitOpen(TimeoutError):
+    """A key's build circuit is open (too many consecutive build
+    failures); the pool fast-fails instead of re-attempting the compile.
+    Subclasses TimeoutError so the retry policy classifies it transient —
+    the cooldown may clear it."""
 
 
 class EnginePool:
     """Capacity-bounded LRU cache of engine handles with single-flight
-    builds; see the module docstring."""
+    builds and a per-key build circuit breaker; see the module docstring."""
 
-    def __init__(self, capacity: int = 8):
+    def __init__(self, capacity: int = 8, *, breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 30.0,
+                 clock: Callable[[], float] = time.monotonic):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
+        if breaker_threshold < 1:
+            raise ValueError("breaker_threshold must be >= 1")
         self.capacity = int(capacity)
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_s = float(breaker_cooldown_s)
+        self._clock = clock
         self._cache: "OrderedDict[tuple, Any]" = OrderedDict()
         self._building: Dict[tuple, threading.Event] = {}
+        # per-key breaker record: consecutive fails, last failure time+error
+        self._breaker: Dict[tuple, Dict[str, Any]] = {}
+        self._suspect: Dict[tuple, str] = {}
         self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.failed_builds = 0
+        self.fast_fails = 0          # gets rejected by an open circuit
+        self.last_error: Optional[str] = None
 
     def get(self, key: tuple, builder: Callable[[], Any]) -> Tuple[Any, bool]:
         """Return (handle, was_hit); builds via ``builder()`` on miss.
@@ -48,6 +86,10 @@ class EnginePool:
         caller that waited on another thread's in-flight build gets False,
         because that handle is freshly built and possibly not yet warmed
         (callers use the flag to decide whether to warm-compile).
+
+        Raises :class:`CircuitOpen` without calling ``builder`` when the
+        key has failed ``breaker_threshold`` consecutive builds and the
+        cooldown has not elapsed.
         """
         waited = False
         while True:
@@ -56,6 +98,19 @@ class EnginePool:
                     self._cache.move_to_end(key)
                     self.hits += 1
                     return self._cache[key], not waited
+                br = self._breaker.get(key)
+                if br is not None and br["fails"] >= self.breaker_threshold:
+                    remaining = self.breaker_cooldown_s - \
+                        (self._clock() - br["at"])
+                    if remaining > 0:
+                        self.fast_fails += 1
+                        raise CircuitOpen(
+                            f"build circuit open for {key!r}: "
+                            f"{br['fails']} consecutive build failures "
+                            f"(last: {br['error']}); retrying in "
+                            f"{remaining:.1f}s")
+                    # cooldown elapsed: fall through half-open — this
+                    # caller probes with one build attempt
                 ev = self._building.get(key)
                 if ev is None:
                     ev = threading.Event()
@@ -66,9 +121,16 @@ class EnginePool:
             ev.wait()                # someone else is building this key
         try:
             handle = builder()
-        except BaseException:
+        except BaseException as e:
             with self._lock:
                 del self._building[key]
+                br = self._breaker.setdefault(
+                    key, {"fails": 0, "at": 0.0, "error": None})
+                br["fails"] += 1
+                br["at"] = self._clock()
+                br["error"] = f"{type(e).__name__}: {e}"
+                self.failed_builds += 1
+                self.last_error = br["error"]
             ev.set()
             raise
         with self._lock:
@@ -78,6 +140,7 @@ class EnginePool:
                 self._cache.popitem(last=False)
                 self.evictions += 1
             del self._building[key]
+            self._breaker.pop(key, None)   # success closes the circuit
         ev.set()
         return handle, False
 
@@ -85,8 +148,10 @@ class EnginePool:
                       warm: Callable[[Any], None] = None) -> threading.Thread:
         """Build (and optionally warm-compile) a key on a daemon thread —
         cold-start work fully off the serving path.  Returns the thread;
-        a build/warm failure is stashed on it as ``thread.error`` (the key
-        just stays cold), so a joining caller can surface it."""
+        a build/warm failure is stashed on it as ``thread.error`` *and*
+        counted in the pool's ``failed_builds``/``last_error`` (a warm
+        failure too), so a fire-and-forget caller that never joins still
+        sees the failure in :meth:`stats`."""
         def _work():
             try:
                 handle, hit = self.get(key, builder)
@@ -94,12 +159,42 @@ class EnginePool:
                     warm(handle)
             except Exception as e:   # noqa: BLE001 — reported via .error
                 t.error = e
+                with self._lock:
+                    # get() already counted a *build* failure; count a
+                    # warm/other failure here so nothing is silent
+                    err = f"{type(e).__name__}: {e}"
+                    if self.last_error != err:
+                        self.failed_builds += 1
+                        self.last_error = err
 
         t = threading.Thread(target=_work, daemon=True,
                              name=f"engine-prewarm-{key[0]}")
         t.error = None
         t.start()
         return t
+
+    # -- health ----------------------------------------------------------------
+
+    def mark_suspect(self, key: tuple, reason: str):
+        """Flag a key's executable as suspect (watchdog: a chunk stalled
+        past its timeout).  Sticky until :meth:`clear_suspect`."""
+        with self._lock:
+            self._suspect[key] = str(reason)
+
+    def clear_suspect(self, key: tuple) -> bool:
+        with self._lock:
+            return self._suspect.pop(key, None) is not None
+
+    def suspects(self) -> Dict[tuple, str]:
+        with self._lock:
+            return dict(self._suspect)
+
+    def breaker_state(self, key: tuple) -> Optional[dict]:
+        """The key's breaker record (consecutive fails, last error) or
+        None when the circuit is closed and clean."""
+        with self._lock:
+            br = self._breaker.get(key)
+            return None if br is None else dict(br)
 
     def __contains__(self, key: tuple) -> bool:
         with self._lock:
@@ -111,6 +206,15 @@ class EnginePool:
 
     def stats(self) -> dict:
         with self._lock:
+            open_keys = sum(
+                1 for br in self._breaker.values()
+                if br["fails"] >= self.breaker_threshold
+                and (self._clock() - br["at"]) < self.breaker_cooldown_s)
             return {"capacity": self.capacity, "size": len(self._cache),
                     "hits": self.hits, "misses": self.misses,
-                    "evictions": self.evictions}
+                    "evictions": self.evictions,
+                    "failed_builds": self.failed_builds,
+                    "fast_fails": self.fast_fails,
+                    "last_error": self.last_error,
+                    "open_circuits": open_keys,
+                    "suspect_keys": len(self._suspect)}

@@ -84,6 +84,14 @@ class Batch:
     device_s: float = 0.0
     points_seen: int = 0
     own_points: Any = None            # job id -> the points THAT job gets
+    # fault tolerance (attached by the server)
+    pool_key: Any = None              # engine-pool key (watchdog/breaker)
+    chunks_done: int = 0              # chunk index for fault-site matching
+    resume_ck: Any = None             # checkpoint record to restore at start
+    ck: Any = None                    # latest checkpoint record (in-memory)
+    ck_digest: Optional[str] = None   # its spool address (if spooled)
+    ck_token: Any = None              # checkpoint lineage id
+    last_ck_sweep: int = 0            # sweeps_done at the last checkpoint
 
     @property
     def started(self) -> bool:
@@ -185,6 +193,11 @@ class ReplicaPackingScheduler:
         if self.pack and lead.spec.engine in PACKABLE_ENGINES:
             for j in order[1:]:
                 if j.pack_key != lead.pack_key:
+                    continue
+                # quarantine/bisect pinning: a re-run cohort (same
+                # pack_group token) only packs with itself, so poison
+                # isolation controls exactly which jobs share a call
+                if j.pack_group != lead.pack_group:
                     continue
                 if total + j.spec.replicas > budget:
                     continue

@@ -20,6 +20,20 @@ streaming results.
   mid-anneal, and the server can preempt a long batch between chunks when
   higher-priority work arrives.
 
+Fault tolerance (see serve/faults.py for the taxonomy and DESIGN.md for
+the state machine): a batched call that throws is **quarantined and
+bisected** — innocent tenants re-run and complete, only the culprit
+fails; transient failures retry with exponential backoff + jitter under
+a per-job ``max_retries``; jobs past ``checkpoint_every`` sweeps snapshot
+their cursor into a spool directory between chunks, so retries resume
+from the checkpoint instead of sweep 0 and :meth:`SampleServer.recover`
+re-admits in-flight jobs after a process crash (bitwise-identical
+continuation); ``deadline_s`` is enforced between chunks; a watchdog
+marks the engine-pool key of a stalled chunk suspect; and the pool's
+circuit breaker stops a key that keeps failing to compile from stalling
+the serving loop.  All of it is drivable deterministically through
+``SampleServer(fault_plan=...)``.
+
 Driving: ``pump()`` runs one chunk of the best batch (deterministic,
 test-friendly); ``start()`` runs the same loop on a background thread.
 
@@ -33,7 +47,6 @@ test-friendly); ``start()`` runs the same loop on a background thread.
 from __future__ import annotations
 
 import hashlib
-import itertools
 import threading
 import time
 from collections import deque
@@ -46,10 +59,13 @@ from repro.engines import make_engine
 from repro.engines.base import (LANE_WIDTH, MAX_LANE_WORDS, check_precision,
                                 lanes_of, quantize_record_points, spawn_seeds)
 
+from .faults import (FaultPlan, StateCorruption, classify_error,
+                     compute_backoff)
 from .jobs import Job, JobSpec, JobStatus, problem_fingerprint, \
     schedule_fingerprint
 from .pool import EnginePool
 from .scheduler import Batch, ReplicaPackingScheduler
+from .spool import CheckpointSpool
 
 __all__ = ["SampleServer", "QueueFull"]
 
@@ -97,8 +113,39 @@ class SampleServer:
     def __init__(self, *, pool_capacity: int = 8, max_queue_depth: int = 128,
                  max_replicas_per_call: int = 64, pack: bool = True,
                  pad_pow2: bool = True, stream_chunks: int = 8,
-                 warm_compile: bool = True, retain_jobs: int = 4096):
-        self.pool = EnginePool(pool_capacity)
+                 warm_compile: bool = True, retain_jobs: int = 4096,
+                 fault_plan: Optional[FaultPlan] = None,
+                 spool_dir: Optional[str] = None,
+                 spool_max_bytes: int = 256 * 1024 * 1024,
+                 checkpoint_every: Optional[int] = None,
+                 max_retries: int = 2, max_bisect_calls: int = 16,
+                 retry_backoff_s: float = 0.0,
+                 retry_backoff_cap_s: float = 5.0,
+                 retry_jitter: float = 0.5,
+                 chunk_timeout_s: Optional[float] = None,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 30.0):
+        """Fault-tolerance knobs (the rest as before):
+
+        ``fault_plan`` — a :class:`repro.serve.faults.FaultPlan` injected
+        at engine-pool builds, between-chunk pump steps, and the cursor's
+        per-chunk boundary hook (deterministic chaos for tests/benches).
+        ``spool_dir`` — enable chunk-granular checkpointing into this
+        directory (content-addressed, size-capped by ``spool_max_bytes``);
+        ``checkpoint_every`` is the default sweep interval between
+        snapshots (per-job ``JobSpec.checkpoint_every`` overrides; either
+        must be set for checkpoints to be taken).  ``max_retries`` bounds
+        per-job transient-failure retries (spec override), paced by
+        ``retry_backoff_s`` * 2**k with ``retry_jitter`` (0.0 = retry
+        immediately — deterministic tests).  ``max_bisect_calls`` bounds
+        the extra engine calls poison-batch isolation may spend re-running
+        quarantined jobs.  ``chunk_timeout_s`` arms the stuck-chunk
+        watchdog (the batch's pool key is marked suspect).  The breaker
+        knobs pass through to :class:`EnginePool`.
+        """
+        self.pool = EnginePool(pool_capacity,
+                               breaker_threshold=breaker_threshold,
+                               breaker_cooldown_s=breaker_cooldown_s)
         self.scheduler = ReplicaPackingScheduler(
             max_replicas_per_call=max_replicas_per_call, pack=pack,
             pad_pow2=pad_pow2)
@@ -110,6 +157,19 @@ class SampleServer:
         self.retain_jobs = max(int(retain_jobs), 1)
         self._terminal_order: deque = deque()
 
+        self.fault_plan = fault_plan
+        self.spool = None if spool_dir is None else \
+            CheckpointSpool(spool_dir, max_bytes=spool_max_bytes)
+        self.checkpoint_every = None if checkpoint_every is None \
+            else max(int(checkpoint_every), 1)
+        self.max_retries = max(int(max_retries), 0)
+        self.max_bisect_calls = max(int(max_bisect_calls), 0)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.retry_backoff_cap_s = float(retry_backoff_cap_s)
+        self.retry_jitter = float(retry_jitter)
+        self.chunk_timeout_s = None if chunk_timeout_s is None \
+            else float(chunk_timeout_s)
+
         self._lock = threading.RLock()
         self._cv = threading.Condition(self._lock)
         self._pump_lock = threading.Lock()
@@ -118,7 +178,9 @@ class SampleServer:
         self._queue: List[Job] = []
         self._batches: List[Batch] = []
         self._current: Optional[Batch] = None
-        self._seq = itertools.count()
+        self._next_seq = 0
+        self._group_seq = 0
+        self._bisect_left = self.max_bisect_calls
         self._thread: Optional[threading.Thread] = None
         self._stop = False
         # register-time bit-plane prewarm threads (join to block on warmth)
@@ -131,6 +193,16 @@ class SampleServer:
         self.rejected = 0
         self.engine_calls = 0        # batched anneal launches (cursors built)
         self.preemptions = 0
+        # fault-tolerance counters
+        self.retries = 0             # transient-failure retries granted
+        self.quarantined_batches = 0  # multi-job batches sent to bisection
+        self.bisect_requeues = 0     # jobs re-queued by quarantine splits
+        self.deadline_failures = 0
+        self.stuck_chunks = 0        # watchdog firings
+        self.corrupted_chunks = 0    # integrity-guard firings
+        self.checkpoints_written = 0
+        self.checkpoints_resumed = 0
+        self.recovered_jobs = 0      # jobs re-admitted by recover()
 
     # -- problems --------------------------------------------------------------
 
@@ -179,8 +251,23 @@ class SampleServer:
                sweeps: int = 1024, replicas: int = 1, seed: int = 0,
                precision: str = "f32", sync_every=1,
                record_points: Optional[Sequence[int]] = None,
-               priority: int = 0, schedule=None) -> str:
-        """Admit one annealing job; returns its job id (non-blocking)."""
+               priority: int = 0, schedule=None,
+               max_retries: Optional[int] = None,
+               deadline_s: Optional[float] = None,
+               checkpoint_every: Optional[int] = None) -> str:
+        """Admit one annealing job; returns its job id (non-blocking).
+
+        ``max_retries`` / ``deadline_s`` / ``checkpoint_every`` override
+        the server-level fault-tolerance defaults for this job alone
+        (deadline is wall time from submission, enforced between chunks).
+        """
+        if deadline_s is not None and deadline_s < 0:
+            raise ValueError(f"deadline_s must be >= 0, got {deadline_s}")
+        if max_retries is not None and max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        if checkpoint_every is not None and checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1, got {checkpoint_every}")
         with self._lock:
             if problem not in self._problems:
                 raise ValueError(f"unknown problem {problem!r}")
@@ -219,14 +306,17 @@ class SampleServer:
                        replicas=int(replicas), seed=int(seed),
                        precision=precision, sync_every=sync_every,
                        record_points=record_points, priority=int(priority),
-                       schedule=schedule)
+                       schedule=schedule, max_retries=max_retries,
+                       deadline_s=deadline_s,
+                       checkpoint_every=checkpoint_every)
         with self._lock:
             if len(self._queue) >= self.max_queue_depth:
                 self.rejected += 1
                 raise QueueFull(
                     f"queue depth {len(self._queue)} at limit "
                     f"{self.max_queue_depth}")
-            seq = next(self._seq)
+            seq = self._next_seq
+            self._next_seq += 1
             job = Job(f"job-{seq:06d}", seq, spec, prob.fingerprint, sched,
                       schedule_fingerprint(sched), time.perf_counter())
             self._jobs[job.id] = job
@@ -248,13 +338,27 @@ class SampleServer:
         with self._lock:
             return self._job(job_id).poll_snapshot()
 
-    def result(self, job_id: str, timeout: Optional[float] = None) -> dict:
+    def result(self, job_id: str, timeout: Optional[float] = None,
+               cancel_on_timeout: bool = False) -> dict:
         """Final payload; drives the server inline when no background
         thread is running, else blocks.  ``timeout`` bounds the wait
         either way (inline pumping checks the deadline between chunks).
         If the serving thread is stopped mid-wait, the caller takes over
-        pumping instead of hanging."""
+        pumping instead of hanging.
+
+        On timeout a :class:`TimeoutError` is raised.  By default the job
+        itself is untouched — it stays QUEUED/RUNNING and keeps consuming
+        device time, and a later ``result`` call can still collect it.
+        ``cancel_on_timeout=True`` additionally cancels the job before
+        raising (queued jobs stop immediately, running jobs at the next
+        chunk boundary), so an abandoned wait does not strand work."""
         deadline = None if timeout is None else time.perf_counter() + timeout
+
+        def _timed_out():
+            if cancel_on_timeout:
+                self.cancel(job_id)
+            return TimeoutError(f"{job_id} not finished in {timeout}s")
+
         with self._lock:
             job = self._job(job_id)
             threaded = self._thread is not None
@@ -264,10 +368,10 @@ class SampleServer:
                     lambda: job.status.terminal or self._thread is None,
                     timeout=timeout)
             if not ok:
-                raise TimeoutError(f"{job_id} not finished in {timeout}s")
+                raise _timed_out()
         while not job.status.terminal:
             if deadline is not None and time.perf_counter() > deadline:
-                raise TimeoutError(f"{job_id} not finished in {timeout}s")
+                raise _timed_out()
             if not self.pump():
                 with self._lock:     # a concurrent pumper may have just
                     if job.status.terminal:      # finished it
@@ -297,18 +401,35 @@ class SampleServer:
     def pump(self) -> bool:
         """One scheduling step: pick the best batch (forming it from the
         queue if the queue outranks every started batch) and advance it by
-        one bounded chunk.  Returns False when there is nothing to run."""
+        one bounded chunk.  Returns False when there is nothing to run.
+
+        When every queued job is parked behind a retry-backoff gate, the
+        step waits briefly (bounded, outside all locks) and returns True —
+        work still exists, it just isn't eligible yet, so ``drain`` keeps
+        driving instead of bailing out early."""
         with self._pump_lock:
             with self._lock:
                 batch = self._choose_batch()
-                if batch is None:
-                    return False
+                if batch is None and self._queue:
+                    # all queued jobs are backing off: wait out (a slice
+                    # of) the soonest gate, then report runnable work
+                    wait = min(j.next_eligible_at for j in self._queue) \
+                        - time.perf_counter()
+                    backoff_wait = min(max(wait, 0.0), 0.02)
+                else:
+                    backoff_wait = None
+            if backoff_wait is not None:
+                if backoff_wait > 0:
+                    time.sleep(backoff_wait)
+                return True
+            if batch is None:
+                return False
             try:
                 if not batch.started:
                     self._start_batch(batch)
                 self._advance_batch(batch)
             except Exception as e:        # noqa: BLE001 — isolate tenants
-                self._fail_batch(batch, e)
+                self._handle_batch_failure(batch, e)
             return True
 
     def drain(self):
@@ -355,17 +476,56 @@ class SampleServer:
     def _rank(b: Batch):
         return (b.priority, -b.seq)
 
+    def _expired(self, job: Job, now: float) -> bool:
+        return (job.spec.deadline_s is not None
+                and now - job.submitted_at > job.spec.deadline_s)
+
+    def _expire_queued_deadlines(self, now: float):
+        """Under the lock: fail queued jobs whose wall budget ran out
+        while waiting (running jobs are checked between chunks)."""
+        for j in [j for j in self._queue if self._expired(j, now)]:
+            self._queue.remove(j)
+            self._fail_deadline(j)
+
+    def _fail_deadline(self, job: Job):
+        """Under the lock: fail one job with a DeadlineExceeded error."""
+        job.error = (f"DeadlineExceeded: {job.spec.deadline_s}s wall "
+                     f"budget exhausted at {job.sweeps_done}/"
+                     f"{job.total_sweeps} sweeps")
+        self.deadline_failures += 1
+        self._finalize(job, JobStatus.FAILED)
+
+    def _drop_spooled(self, batch: Batch):
+        """Forget the batch's spooled checkpoint (it reached a terminal
+        state; the record would otherwise be re-admitted by recover())."""
+        if batch.ck_digest is not None and self.spool is not None:
+            self.spool.remove(batch.ck_digest)
+        batch.ck_digest = None
+
+    def _ck_every(self, batch: Batch) -> Optional[int]:
+        """Effective checkpoint interval for a batch: the tightest of the
+        tenants' ``spec.checkpoint_every`` (falling back to the server
+        default per tenant); None disables checkpointing."""
+        vals = [j.spec.checkpoint_every if j.spec.checkpoint_every
+                is not None else self.checkpoint_every for j in batch.jobs]
+        vals = [v for v in vals if v is not None]
+        return min(vals) if vals else None
+
     def _choose_batch(self) -> Optional[Batch]:
         """Under the lock: highest-(priority, FIFO) among started batches
-        and the would-be batch led by the best queued job."""
+        and the would-be batch led by the best *eligible* queued job
+        (jobs inside a retry-backoff window are invisible this step)."""
+        now = time.perf_counter()
+        self._expire_queued_deadlines(now)
+        eligible = [j for j in self._queue if j.next_eligible_at <= now]
         best_started = max(self._batches, key=self._rank, default=None)
-        lead = max(self._queue,
+        lead = max(eligible,
                    key=lambda j: (j.spec.priority, -j.seq), default=None)
         batch = best_started
         if lead is not None and (
                 best_started is None or
                 (lead.spec.priority, -lead.seq) > self._rank(best_started)):
-            batch = self.scheduler.next_batch(self._queue)
+            batch = self.scheduler.next_batch(eligible)
             for j in batch.jobs:
                 self._queue.remove(j)
             self._batches.append(batch)
@@ -383,6 +543,11 @@ class SampleServer:
                _hashable_kw(prob.engine_kw))
 
         def builder():
+            if self.fault_plan is not None:
+                # raised inside the builder so the pool's breaker and
+                # failed_builds accounting see injected build faults
+                # exactly like real compile failures
+                self.fault_plan.apply("build", key=key)
             kw = dict(prob.engine_kw)
             if spec.engine == "lattice":
                 return make_engine("lattice", L=prob.L, seed=prob.seed,
@@ -415,6 +580,7 @@ class SampleServer:
         lead = batch.jobs[0].spec
         prob = self._problems[lead.problem]
         key, builder = self._engine_key_builder(prob, lead, batch.r_exec)
+        batch.pool_key = key
         handle, hit = self.pool.get(key, builder)
         if handle.supports_packing:
             seeds: List[int] = []
@@ -442,32 +608,133 @@ class SampleServer:
                 sorted(stream | set(j.spec.record_points or ())), cursor.S,
                 limit=sweeps))
             for j in batch.jobs}
+        if self.fault_plan is not None:
+            # boundary-exchange fault site: the hook fires inside
+            # RecordedCursor.advance at the top of every plan chunk, with
+            # the raw cursor (state is a plain attribute there, so
+            # "corrupt" rules can scramble it in place)
+            plan = self.fault_plan
+            ids = tuple(j.id for j in batch.jobs) \
+                + tuple(j.spec.seed for j in batch.jobs)
+
+            def _exchange_hook(c):
+                plan.apply("exchange", cursor=c, index=c._i, jobs=ids,
+                           key=key)
+            cursor.fault_hook = _exchange_hook
         if self.warm_compile and not hit:
             # cold handle: compiles land before the timed region (a pool
             # hit is already warm — re-warming would re-execute every
-            # distinct chunk length for nothing)
+            # distinct chunk length for nothing).  warm() is pure, so
+            # warming before a checkpoint restore is safe.
             t0 = time.perf_counter()
             cursor.warm()
             batch.warm_s = time.perf_counter() - t0
+        self._try_resume(batch, cursor)
         batch.handle, batch.cursor, batch.pool_hit = handle, cursor, hit
         batch.started_at = time.perf_counter()
         with self._lock:
             self.engine_calls += 1
             for j in batch.jobs:
+                if j.status.terminal:
+                    continue   # recovered batches can carry finished slots
+                j.attempts += 1
                 j.status = JobStatus.RUNNING
-                j.started_at = batch.started_at
+                if j.started_at is None:   # retries keep first-start time
+                    j.started_at = batch.started_at
                 j.packed_with = len(batch.jobs) - 1
                 j.pool_hit = hit
 
+    def _try_resume(self, batch: Batch, cursor) -> bool:
+        """Restore the batch's cursor (and the tenants' partial traces)
+        from a checkpoint record when one is attached and its layout —
+        job ids, replica slices, executed width — matches this batch
+        exactly.  Any mismatch falls back to a from-scratch run (partials
+        reset); the per-job seeding then still reproduces the no-fault
+        trajectory bitwise."""
+        ck = batch.resume_ck
+        if ck is None and len(batch.jobs) == 1 \
+                and batch.jobs[0].resume_ck is not None:
+            ck = batch.jobs[0].resume_ck
+            batch.ck_digest = batch.jobs[0].resume_ck_digest
+        if ck is None:
+            return False
+        lay = ck["layout"]
+        matches = (list(lay["job_ids"]) == [j.id for j in batch.jobs]
+                   and [tuple(s) for s in lay["slices"]]
+                   == [tuple(s) for s in batch.slices]
+                   and int(lay["r_exec"]) == int(batch.r_exec))
+        restored = False
+        if matches:
+            try:
+                cursor.restore_checkpoint(ck["cursor"])
+                restored = True
+            except ValueError:
+                restored = False
+        with self._lock:
+            for j, part in zip(batch.jobs, ck["jobs"]):
+                if j.status.terminal:
+                    continue
+                j.resume_ck = None
+                j.resume_ck_digest = None
+                if not restored:
+                    j.reset_partials()
+                    continue
+                p = part["partials"]
+                j.times = [int(t) for t in p["times"]]
+                j.energy_rows = [np.asarray(r).copy()
+                                 for r in p["energy_rows"]]
+                j.best_energy = float(p["best_energy"])
+                j.best_replica = int(p["best_replica"])
+                j.best_spins = None if p["best_spins"] is None \
+                    else np.asarray(p["best_spins"]).copy()
+                j.flips = int(p["flips"])
+                j.sweeps_done = int(p["sweeps_done"])
+                j.device_s = float(p["device_s"])
+                j.resumed_sweeps += int(p["sweeps_done"])
+            if restored:
+                batch.ck = ck
+                batch.ck_token = tuple(ck["token"])
+                batch.points_seen = cursor.points_recorded
+                batch.last_ck_sweep = int(cursor.sweeps_done)
+                self.checkpoints_resumed += 1
+            else:
+                batch.ck = None
+                if batch.ck_digest is not None and self.spool is not None:
+                    self.spool.remove(batch.ck_digest)
+                batch.ck_digest = None
+        batch.resume_ck = None
+        return restored
+
     def _advance_batch(self, batch: Batch):
         cur = batch.cursor
+        chunk_idx = batch.chunks_done
         t0 = time.perf_counter()
+        if self.fault_plan is not None:
+            # "chunk" fault site; "hang" rules sleep inside the timed
+            # window so the stuck-chunk watchdog below sees them
+            self.fault_plan.apply(
+                "chunk", cursor=cur, index=chunk_idx,
+                jobs=tuple(j.id for j in batch.jobs)
+                + tuple(j.spec.seed for j in batch.jobs),
+                key=batch.pool_key)
         cur.advance(1)
-        batch.device_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        batch.device_s += dt
+        batch.chunks_done += 1
+        if self.chunk_timeout_s is not None and dt > self.chunk_timeout_s:
+            # watchdog: the chunk stalled far past budget — flag this
+            # key's executable for operators (sticky in pool.stats())
+            self.pool.mark_suspect(
+                batch.pool_key,
+                f"chunk {chunk_idx} took {dt:.3f}s "
+                f"(chunk_timeout_s={self.chunk_timeout_s})")
+            with self._lock:
+                self.stuck_chunks += 1
+        now = time.perf_counter()
         if cur.points_recorded == batch.points_seen and not cur.done:
             # mid-gap chunk (max_chunk split): nothing recorded, so skip
             # the flip-settling host sync and trace restack — just keep
-            # progress/cancellation current
+            # progress/cancellation/deadlines current
             with self._lock:
                 alive = False
                 for j, (a, b) in zip(batch.jobs, batch.slices):
@@ -478,6 +745,8 @@ class SampleServer:
                         max(batch.r_exec, 1)
                     if j.cancel_requested:
                         self._finalize(j, JobStatus.CANCELLED)
+                    elif self._expired(j, now):
+                        self._fail_deadline(j)
                     else:
                         alive = True
                 if not alive:
@@ -485,6 +754,7 @@ class SampleServer:
                         self._batches.remove(batch)
                     if self._current is batch:
                         self._current = None
+                    self._drop_spooled(batch)
             return
         t0 = time.perf_counter()
         rec = cur.record()
@@ -492,6 +762,18 @@ class SampleServer:
         batch.device_s += time.perf_counter() - t0
         energies = np.asarray(rec.energies) if len(rec.times) else None
         new = range(batch.points_seen, len(rec.times))
+        if energies is not None and len(rec.times) > batch.points_seen \
+                and not np.isfinite(energies[batch.points_seen:]).all():
+            # integrity guard: garbage state (a corrupting node, an
+            # overflowed kernel) shows up as non-finite energies; fail the
+            # chunk as transient so the retry path restores the last
+            # pre-corruption checkpoint instead of streaming junk
+            with self._lock:
+                self.corrupted_chunks += 1
+            raise StateCorruption(
+                f"non-finite energies recorded at chunk {chunk_idx} "
+                f"(pool key {batch.pool_key!r}) — sampler state is "
+                "corrupt")
         # spins snapshots are only consistent with a row recorded at the
         # cursor's *current* state (chunks end on record points).  The
         # device sync + (R, N) transfer happens OUTSIDE the server lock —
@@ -530,6 +812,10 @@ class SampleServer:
                 j.device_s = batch.device_s * (b - a) / max(batch.r_exec, 1)
                 if j.cancel_requested:
                     self._finalize(j, JobStatus.CANCELLED)
+                elif not cur.done and self._expired(j, now):
+                    # between-chunk deadline enforcement: only this
+                    # tenant fails; packmates keep their slices and run on
+                    self._fail_deadline(j)
             alive = [j for j in batch.jobs
                      if j.status is JobStatus.RUNNING]
             batch.points_seen = len(rec.times)
@@ -540,6 +826,145 @@ class SampleServer:
                     self._batches.remove(batch)
                 if self._current is batch:
                     self._current = None
+                self._drop_spooled(batch)
+                return
+        # chunk-granular checkpointing: once a tenant's checkpoint
+        # interval has elapsed, snapshot the cursor + partial traces so
+        # retries and post-crash recovery resume from here, not sweep 0
+        ck_every = self._ck_every(batch)
+        if ck_every is not None \
+                and cur.sweeps_done - batch.last_ck_sweep >= ck_every \
+                and any(j.status is JobStatus.RUNNING for j in batch.jobs):
+            self._write_checkpoint(batch)
+
+    def _write_checkpoint(self, batch: Batch):
+        """Snapshot the batch — cursor (device state pulled to host) plus
+        every tenant's partial trace and spec — as one picklable record;
+        spool it (content-addressed, superseding the batch's previous
+        record) when a spool is configured.  The record alone is enough
+        to rebuild the jobs in a fresh process (:meth:`recover`)."""
+        cur = batch.cursor
+        ck_cursor = cur.checkpoint()     # device sync happens outside lock
+        with self._lock:
+            jobs_part = []
+            for j in batch.jobs:
+                jobs_part.append({
+                    "id": j.id, "seq": j.seq, "spec": j.spec,
+                    "schedule": j.schedule, "schedule_fp": j.schedule_fp,
+                    "status": j.status.value,
+                    "partials": {
+                        "times": list(j.times),
+                        "energy_rows": [r.copy() for r in j.energy_rows],
+                        "best_energy": j.best_energy,
+                        "best_replica": j.best_replica,
+                        "best_spins": None if j.best_spins is None
+                        else j.best_spins.copy(),
+                        "flips": j.flips,
+                        "sweeps_done": j.sweeps_done,
+                        "device_s": j.device_s,
+                        "retries": j.retries,
+                        "resumed_sweeps": j.resumed_sweeps,
+                        "restarted_sweeps": j.restarted_sweeps,
+                    }})
+            record = {
+                "format": 1,
+                "token": ("batch",) + tuple(j.id for j in batch.jobs),
+                "sweeps_done": int(cur.sweeps_done),
+                "problem": batch.jobs[0].spec.problem,
+                "problem_fp": batch.jobs[0].problem_fp,
+                "jobs": jobs_part,
+                "layout": {"job_ids": [j.id for j in batch.jobs],
+                           "slices": [tuple(s) for s in batch.slices],
+                           "r_exec": int(batch.r_exec)},
+                "cursor": ck_cursor,
+            }
+            batch.ck = record
+            batch.ck_token = record["token"]
+            batch.last_ck_sweep = int(cur.sweeps_done)
+            self.checkpoints_written += 1
+        if self.spool is not None:
+            batch.ck_digest = self.spool.put(record,
+                                             replaces=batch.ck_digest)
+
+    def _handle_batch_failure(self, batch: Batch, err: Exception):
+        """Recovery policy for a batch whose start/advance threw.
+
+        Multi-tenant batches are quarantined and *bisected*: the live
+        jobs re-run in two halves (pinned to fresh pack groups so the
+        scheduler keeps each cohort together), repeatedly isolating the
+        poison job, which alone ends FAILED — bounded by
+        ``max_bisect_calls`` extra engine calls.  A solo transient
+        failure retries under the job's ``max_retries`` with seeded
+        exponential backoff, resuming from the batch's checkpoint when
+        its layout still matches; anything else fails the job."""
+        kind = classify_error(err)
+        now = time.perf_counter()
+        with self._lock:
+            if batch in self._batches:
+                self._batches.remove(batch)
+            if self._current is batch:
+                self._current = None
+            live = [j for j in batch.jobs if not j.status.terminal]
+            if not live:
+                self._drop_spooled(batch)
+                return
+            if len(live) > 1:
+                # a multi-tenant failure cannot be attributed, whatever
+                # its kind — bisect (budget permitting) until the culprit
+                # is alone, THEN apply transient/permanent retry policy
+                if self._bisect_left >= 2:
+                    self._bisect_left -= 2
+                    self.quarantined_batches += 1
+                    half = (len(live) + 1) // 2
+                    for part in (live[:half], live[half:]):
+                        group = ("bisect", self._group_seq)
+                        self._group_seq += 1
+                        for j in part:
+                            j.pack_group = group
+                            j.bisect_runs += 1
+                            j.reset_partials()
+                            j.resume_ck = None
+                            j.resume_ck_digest = None
+                            j.status = JobStatus.QUEUED
+                            j.next_eligible_at = now + compute_backoff(
+                                j.bisect_runs - 1,
+                                base=self.retry_backoff_s,
+                                cap=self.retry_backoff_cap_s,
+                                jitter=self.retry_jitter,
+                                seed=j.spec.seed)
+                            self._queue.append(j)
+                    self.bisect_requeues += len(live)
+                    self._drop_spooled(batch)
+                    self._cv.notify_all()
+                    return
+                self._fail_batch(batch, err)
+                return
+            j = live[0]
+            budget = j.spec.max_retries if j.spec.max_retries is not None \
+                else self.max_retries
+            if kind == "transient" and j.retries < budget:
+                j.retries += 1
+                self.retries += 1
+                if batch.ck is not None:
+                    # resume the retry from the last good checkpoint; pin
+                    # the job solo so the next batch's layout matches
+                    j.resume_ck = batch.ck
+                    j.resume_ck_digest = batch.ck_digest
+                    batch.ck_digest = None
+                else:
+                    j.reset_partials()
+                j.pack_group = ("retry", self._group_seq)
+                self._group_seq += 1
+                j.status = JobStatus.QUEUED
+                j.next_eligible_at = now + compute_backoff(
+                    j.retries - 1, base=self.retry_backoff_s,
+                    cap=self.retry_backoff_cap_s,
+                    jitter=self.retry_jitter, seed=j.spec.seed)
+                self._queue.append(j)
+                self._drop_spooled(batch)
+                self._cv.notify_all()
+                return
+            self._fail_batch(batch, err)
 
     def _fail_batch(self, batch: Batch, err: Exception):
         with self._lock:
@@ -551,10 +976,17 @@ class SampleServer:
                 self._batches.remove(batch)
             if self._current is batch:
                 self._current = None
+            self._drop_spooled(batch)
 
     def _finalize(self, job: Job, status: JobStatus):
         job.status = status
         job.finished_at = time.perf_counter()
+        if job.resume_ck_digest is not None and self.spool is not None:
+            # a queued retry that died before running again (deadline,
+            # cancel) still owns a spool record — release it
+            self.spool.remove(job.resume_ck_digest)
+        job.resume_ck = None
+        job.resume_ck_digest = None
         if status is JobStatus.DONE:
             self.completed += 1
         elif status is JobStatus.FAILED:
@@ -565,6 +997,113 @@ class SampleServer:
         while len(self._terminal_order) > self.retain_jobs:
             self._jobs.pop(self._terminal_order.popleft(), None)
         self._cv.notify_all()
+
+    # -- crash recovery --------------------------------------------------------
+
+    def recover(self, spool_dir: Optional[str] = None) -> List[str]:
+        """Re-admit the in-flight jobs a crashed process left spooled.
+
+        Reads every readable checkpoint record in the spool (``spool_dir``
+        overrides the server's own; a server built without a spool adopts
+        it), keeps the newest record per batch lineage (max
+        ``sweeps_done``), and rebuilds each batch exactly as checkpointed:
+        same job ids/specs/partial traces, same replica layout, cursor
+        restored on first pump.  The continuation is bitwise-identical to
+        the uninterrupted run.  Requires every referenced problem to be
+        re-registered first with a *matching* content fingerprint —
+        a missing or mismatched problem raises RuntimeError (resuming a
+        checkpoint into different couplings would be silent garbage).
+
+        Returns the ids of the re-admitted (non-terminal) jobs; records
+        whose tenants all reached terminal states are dropped.  Safe to
+        call more than once (already-known job ids are skipped).
+        """
+        if spool_dir is not None and self.spool is None:
+            self.spool = CheckpointSpool(spool_dir)
+        spool = self.spool if spool_dir is None \
+            else CheckpointSpool(spool_dir)
+        if spool is None:
+            raise RuntimeError("recover() needs a spool: pass spool_dir= "
+                               "or build the server with one")
+        best: Dict[tuple, tuple] = {}
+        for digest, rec in spool.records():
+            tok = tuple(rec.get("token", ()))
+            if not tok:
+                continue
+            prev = best.get(tok)
+            if prev is None or int(rec["sweeps_done"]) > prev[0]:
+                best[tok] = (int(rec["sweeps_done"]), digest, rec)
+        readmitted: List[str] = []
+        now = time.perf_counter()
+        with self._lock:
+            for tok in sorted(best):
+                _, digest, rec = best[tok]
+                name = rec["problem"]
+                prob = self._problems.get(name)
+                if prob is None:
+                    raise RuntimeError(
+                        f"recover: checkpoint {tok!r} references problem "
+                        f"{name!r}, which is not registered — re-register "
+                        "it before recovering")
+                if prob.fingerprint != rec["problem_fp"]:
+                    raise RuntimeError(
+                        f"recover: problem {name!r} fingerprint "
+                        f"{prob.fingerprint} does not match the "
+                        f"checkpoint's {rec['problem_fp']} — refusing to "
+                        "resume into a different instance")
+                if any(part["id"] in self._jobs for part in rec["jobs"]):
+                    continue         # this lineage is already re-admitted
+                jobs, live = [], []
+                for part in rec["jobs"]:
+                    j = Job(part["id"], int(part["seq"]), part["spec"],
+                            rec["problem_fp"], part["schedule"],
+                            part["schedule_fp"], now)
+                    p = part["partials"]
+                    j.times = [int(t) for t in p["times"]]
+                    j.energy_rows = [np.asarray(r).copy()
+                                     for r in p["energy_rows"]]
+                    j.best_energy = float(p["best_energy"])
+                    j.best_replica = int(p["best_replica"])
+                    j.best_spins = None if p["best_spins"] is None \
+                        else np.asarray(p["best_spins"]).copy()
+                    j.flips = int(p["flips"])
+                    j.sweeps_done = int(p["sweeps_done"])
+                    j.device_s = float(p["device_s"])
+                    j.retries = int(p["retries"])
+                    j.resumed_sweeps = int(p["resumed_sweeps"])
+                    j.restarted_sweeps = int(p["restarted_sweeps"])
+                    st = JobStatus(part["status"])
+                    self._jobs[j.id] = j
+                    self._next_seq = max(self._next_seq, j.seq + 1)
+                    jobs.append(j)
+                    if st.terminal:
+                        # finished before the crash: keep it queryable,
+                        # hold its slice in the layout, don't re-run it
+                        j.status = st
+                        self._terminal_order.append(j.id)
+                    else:
+                        live.append(j)
+                if not live:
+                    for j in jobs:
+                        self._jobs.pop(j.id, None)
+                    spool.remove(digest)
+                    continue
+                lay = rec["layout"]
+                batch = Batch(jobs=jobs, key=jobs[0].pack_key,
+                              r_exec=int(lay["r_exec"]),
+                              slices=[tuple(s) for s in lay["slices"]],
+                              seq=min(j.seq for j in jobs),
+                              priority=max(j.spec.priority for j in jobs))
+                batch.resume_ck = rec
+                batch.ck_digest = digest if spool is self.spool else None
+                batch.ck_token = tok
+                batch.last_ck_sweep = int(rec["sweeps_done"])
+                self._batches.append(batch)
+                self.submitted += len(live)
+                self.recovered_jobs += len(live)
+                readmitted += [j.id for j in live]
+            self._cv.notify_all()
+        return readmitted
 
     # -- warmup / stats --------------------------------------------------------
 
@@ -609,6 +1148,19 @@ class SampleServer:
                 "preemptions": self.preemptions,
                 "queue_depth": len(self._queue),
                 "inflight_batches": len(self._batches),
+                "retries": self.retries,
+                "quarantined_batches": self.quarantined_batches,
+                "bisect_requeues": self.bisect_requeues,
+                "bisect_calls_left": self._bisect_left,
+                "deadline_failures": self.deadline_failures,
+                "stuck_chunks": self.stuck_chunks,
+                "corrupted_chunks": self.corrupted_chunks,
+                "checkpoints_written": self.checkpoints_written,
+                "checkpoints_resumed": self.checkpoints_resumed,
+                "recovered_jobs": self.recovered_jobs,
+                "faults_injected": 0 if self.fault_plan is None
+                else self.fault_plan.fired,
+                "spool": None if self.spool is None else self.spool.stats(),
                 "pool": self.pool.stats(),
                 "scheduler": self.scheduler.stats(),
             }

@@ -172,13 +172,60 @@ def check(payload: dict) -> list:
 SERVE_WAVE_NUMBERS = ("throughput_jobs_per_s", "p50_ms", "p95_ms", "p99_ms",
                       "flips_total", "elapsed_s")
 SERVE_REQUIRED = ("bench", "mode", "host", "workload", "loads",
-                  "speedup_packed_vs_baseline_best", "packing_observed")
+                  "speedup_packed_vs_baseline_best", "packing_observed",
+                  "fault_waves")
+# per fault wave: must be present and finite-positive
+FAULT_WAVE_NUMBERS = ("goodput_jobs_per_s", "p99_ms", "elapsed_s")
+# per fault wave: must be present and finite-nonnegative (all legitimately
+# zero at the 0% injection rate)
+FAULT_WAVE_COUNTS = ("injected_fault_rate", "jobs", "done", "failed",
+                     "retries", "quarantined_batches", "bisect_requeues",
+                     "faults_injected", "checkpoints_written",
+                     "recovered_sweeps", "restarted_sweeps")
+
+
+def _finite_nonneg(name, v, errors):
+    if not isinstance(v, (int, float)) or isinstance(v, bool) \
+            or not math.isfinite(v) or v < 0:
+        errors.append(f"{name}: expected finite non-negative number, "
+                      f"got {v!r}")
+
+
+def _check_fault_waves(payload: dict, errors: list):
+    waves = payload.get("fault_waves")
+    if not isinstance(waves, list) or not waves:
+        errors.append(f"fault_waves: expected a non-empty list, "
+                      f"got {waves!r}")
+        return
+    for i, w in enumerate(waves):
+        if not isinstance(w, dict):
+            errors.append(f"fault_waves[{i}]: expected a dict, got {w!r}")
+            continue
+        for f in FAULT_WAVE_NUMBERS:
+            _finite_positive(f"fault_waves[{i}].{f}", w.get(f), errors)
+        for f in FAULT_WAVE_COUNTS:
+            _finite_nonneg(f"fault_waves[{i}].{f}", w.get(f), errors)
+        done, failed, jobs = w.get("done"), w.get("failed"), w.get("jobs")
+        if isinstance(done, int) and isinstance(failed, int) \
+                and isinstance(jobs, int) and done + failed > jobs:
+            errors.append(f"fault_waves[{i}]: done {done} + failed "
+                          f"{failed} > jobs {jobs}")
+        if w.get("injected_fault_rate") == 0 and w.get("done") != jobs:
+            errors.append(f"fault_waves[{i}]: jobs failed at 0% injection "
+                          "(the recovery machinery broke the happy path)")
+    rates = [w.get("injected_fault_rate") for w in waves
+             if isinstance(w, dict)]
+    if 0 not in rates or not any(isinstance(r, float) and r > 0
+                                 for r in rates):
+        errors.append("fault_waves: need a 0% baseline wave and at least "
+                      f"one nonzero injection rate, got rates {rates!r}")
 
 
 def check_serve_load(payload: dict) -> list:
     """BENCH_serve_load.json: every load entry carries packed + baseline
     waves with finite latency percentiles and throughput, engine-call
-    counts consistent with job counts, and the packing evidence bit."""
+    counts consistent with job counts, the packing evidence bit, and the
+    fault waves (goodput under 0/5/20% injected chunk failures)."""
     errors = []
     for k in SERVE_REQUIRED:
         if k not in payload:
@@ -216,6 +263,7 @@ def check_serve_load(payload: dict) -> list:
         errors.append("packing_observed: scheduler never batched "
                       "compatible jobs (expected engine_calls < jobs "
                       "under burst load)")
+    _check_fault_waves(payload, errors)
     return errors
 
 

@@ -43,6 +43,63 @@ def save_detail(name: str, payload: dict):
         json.dump(payload, f, indent=1, default=float)
 
 
+def eta_probe(L: int = 5, sweeps: int = 64, sync_every: int = 8,
+              replicas: int = 32, precision: str = "bitplane") -> dict:
+    """Measured-η telemetry block shared by the BENCH writers.
+
+    Runs a one-device ``dsim_dist`` engine with an :class:`repro.obs.
+    EtaMeter` attached to the recorded cursor (per-chunk wall time) and
+    to the engine's ``boundary_exchange_fn`` (exchange-only time), so the
+    BENCH record carries *measured* η = f_comm/f_pbit, f_comm, and
+    f_pbit.  The K=1 probe has no cut of its own (c_max would be 0 and
+    the margin undefined), so the threshold is taken from the reference
+    2-way slab cut of the same graph on a unit-pin ring — the margin the
+    2-way-partitioned machine would have at the measured rates.
+    """
+    import numpy as np
+
+    from repro.compat import auto_axes, make_mesh
+    from repro.core import commcost
+    from repro.core.annealing import constant_schedule
+    from repro.core.coloring import lattice3d_coloring
+    from repro.core.graph import ea3d
+    from repro.core.partition import slab_partition
+    from repro.engines import make_engine
+    from repro.obs import EtaMeter
+
+    g = ea3d(L, seed=0)
+    col = lattice3d_coloring(L)
+    mesh = make_mesh((1,), ("data",), axis_types=auto_axes(1))
+    h = make_engine("dsim_dist", g, coloring=col, K=1,
+                    labels=np.zeros(g.n, np.int32), mesh=mesh, rng="lfsr",
+                    precision=precision, replicas=replicas)
+    labels2 = slab_partition(L, 2)
+    b = commcost.boundary_matrix(np.asarray(g.idx), np.asarray(g.w),
+                                 labels2, 2)
+    cc = commcost.comm_cost(b, commcost.RingTopology(k=2, pins_per_link=1))
+    meter = EtaMeter(n_color=len(h.eng.p.color_slots), c_max=cc.c_max,
+                     sync_every=sync_every)
+    sch = constant_schedule(3.0, 8 * sweeps)
+    pts = [sweeps // 2, sweeps]
+    h.run_recorded(h.init_state(seed=0), sch, pts,
+                   sync_every=sync_every)        # compile outside timing
+    meter.measure_exchange(
+        lambda st=h.init_state(seed=0): h.eng.boundary_exchange_fn()(st))
+    cur = h.start_recorded(h.init_state(seed=0), sch, pts,
+                           sync_every=sync_every)
+    meter.attach(cur)
+    while not cur.done:
+        cur.advance(1)
+    rep = meter.report()
+    rep["probe"] = {"engine": "dsim_dist", "K": 1, "L": L, "N": g.n,
+                    "precision": precision, "replicas": replicas,
+                    "threshold_partition": "reference 2-way slab cut, "
+                                           "unit-pin ring (K=1 probe has "
+                                           "no cut of its own)",
+                    "c_max_ref": float(cc.c_max)}
+    return rep
+
+
 def timed(fn, *args, **kw):
     t0 = time.perf_counter()
     out = fn(*args, **kw)

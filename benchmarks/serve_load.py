@@ -34,9 +34,10 @@ import numpy as np
 
 from repro.core.coloring import lattice3d_coloring
 from repro.core.graph import ea3d
+from repro.obs import Tracer
 from repro.serve import FaultPlan, FaultRule, SampleServer
 
-from .common import host_fingerprint, row, save_detail
+from .common import eta_probe, host_fingerprint, row, save_detail
 
 ROOT_BENCH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_serve_load.json")
@@ -78,16 +79,23 @@ def _wave(srv: SampleServer, n_jobs: int, sweeps: int, rate: float,
     calls0 = srv.stats()["engine_calls"]
     ids = []
     t0 = time.perf_counter()
-    for i in range(n_jobs):
-        if np.isfinite(rate):
-            target = t0 + i / rate
-            delay = target - time.perf_counter()
-            if delay > 0:
-                time.sleep(delay)
-        prob, eng, sync = _MIX[i % len(_MIX)]
-        ids.append(srv.submit(prob, engine=eng, sweeps=sweeps, replicas=2,
-                              seed=seed0 + i, sync_every=sync))
-    results = [srv.result(j, timeout=600.0) for j in ids]
+    # per-phase spans on the server's own tracer: "run" is the paced
+    # submission window (jobs complete concurrently inside it), "drain"
+    # the tail from last submit to last result — a goodput regression is
+    # attributable to one or the other (satellite: phase timing per wave)
+    with srv.tracer.span("wave.run", jobs=n_jobs) as sp_run:
+        for i in range(n_jobs):
+            if np.isfinite(rate):
+                target = t0 + i / rate
+                delay = target - time.perf_counter()
+                if delay > 0:
+                    time.sleep(delay)
+            prob, eng, sync = _MIX[i % len(_MIX)]
+            ids.append(srv.submit(prob, engine=eng, sweeps=sweeps,
+                                  replicas=2, seed=seed0 + i,
+                                  sync_every=sync))
+    with srv.tracer.span("wave.drain", jobs=n_jobs) as sp_drain:
+        results = [srv.result(j, timeout=600.0) for j in ids]
     elapsed = time.perf_counter() - t0
     assert all(r["status"] == "done" for r in results)
     lat_ms = np.asarray([r["total_s"] for r in results]) * 1e3
@@ -99,6 +107,9 @@ def _wave(srv: SampleServer, n_jobs: int, sweeps: int, rate: float,
         "engine_calls": srv.stats()["engine_calls"] - calls0,
         "flips_total": int(sum(r["flips"] for r in results)),
         "elapsed_s": elapsed,
+        "phase_s": {"build": 0.0,          # pools prewarmed by _make_server
+                    "run": sp_run.duration_s,
+                    "drain": sp_drain.duration_s},
     }
 
 
@@ -112,23 +123,31 @@ def _fault_wave(fault_rate: float, n_jobs: int, sweeps: int, max_r: int,
     plan = None if fault_rate <= 0 else FaultPlan(
         [FaultRule(site="chunk", kind="transient", rate=fault_rate,
                    times=None)], seed=17)
-    srv = _make_server(True, max_r, sweeps, fault_plan=plan,
-                       checkpoint_every=max(sweeps // 8, 1),
-                       max_bisect_calls=64)
-    srv.start()
+    # the build phase (server + prewarm compiles) happens before the
+    # server's own tracer exists, so it gets a wave-local tracer; run and
+    # drain land on the server tracer next to its pump.chunk spans
+    tr = Tracer()
+    with tr.span("wave.build", fault_rate=fault_rate) as sp_build:
+        srv = _make_server(True, max_r, sweeps, fault_plan=plan,
+                           checkpoint_every=max(sweeps // 8, 1),
+                           max_bisect_calls=64)
+        srv.start()
     ids = []
     t0 = time.perf_counter()
-    for i in range(n_jobs):
-        prob, eng, sync = _MIX[i % len(_MIX)]
-        ids.append(srv.submit(prob, engine=eng, sweeps=sweeps, replicas=2,
-                              seed=seed0 + i, sync_every=sync,
-                              max_retries=8))
+    with srv.tracer.span("wave.run", jobs=n_jobs,
+                         fault_rate=fault_rate) as sp_run:
+        for i in range(n_jobs):
+            prob, eng, sync = _MIX[i % len(_MIX)]
+            ids.append(srv.submit(prob, engine=eng, sweeps=sweeps,
+                                  replicas=2, seed=seed0 + i,
+                                  sync_every=sync, max_retries=8))
     results = []
-    for j in ids:
-        try:
-            results.append(srv.result(j, timeout=600.0))
-        except TimeoutError:
-            results.append(srv.poll(j))
+    with srv.tracer.span("wave.drain", jobs=n_jobs) as sp_drain:
+        for j in ids:
+            try:
+                results.append(srv.result(j, timeout=600.0))
+            except TimeoutError:
+                results.append(srv.poll(j))
     elapsed = time.perf_counter() - t0
     s = srv.stats()
     srv.stop()
@@ -153,6 +172,9 @@ def _fault_wave(fault_rate: float, n_jobs: int, sweeps: int, max_r: int,
         "restarted_sweeps": int(sum(r["restarted_sweeps"]
                                     for r in results)),
         "elapsed_s": elapsed,
+        "phase_s": {"build": sp_build.duration_s,
+                    "run": sp_run.duration_s,
+                    "drain": sp_drain.duration_s},
     }
 
 
@@ -203,6 +225,15 @@ def run(quick: bool = True):
                 f"p95 {e['p95_ms']:.0f} ms, "
                 f"{e['engine_calls']} calls / {e['jobs']} jobs"))
 
+    # telemetry snapshot of the packed server AFTER the measured waves:
+    # queue-wait / pump-latency / goodput histograms are populated, and
+    # the Prometheus text head documents the exposition in the record
+    telemetry = {
+        "metrics": servers["packed"].metrics_snapshot(),
+        "prometheus_head":
+            servers["packed"].render_metrics().splitlines()[:12],
+    }
+
     for srv in servers.values():
         srv.stop()
 
@@ -217,6 +248,11 @@ def run(quick: bool = True):
             f"{w['recovered_sweeps']} sweeps resumed / "
             f"{w['restarted_sweeps']} restarted)"))
 
+    # measured η rides with the serving record too: the serving tier runs
+    # the same recorded-cursor machinery, and the schema gate requires a
+    # finite measured η in every BENCH telemetry block
+    telemetry["eta"] = eta_probe(L=4, sweeps=32)
+
     best = max(e["speedup_packed_vs_baseline"] for e in loads)
     burst = loads[-1]
     bench = {
@@ -229,6 +265,7 @@ def run(quick: bool = True):
                      "mix": [f"{p}/{e}" for p, e, _ in _MIX]},
         "loads": loads,
         "fault_waves": fault_waves,
+        "telemetry": telemetry,
         "speedup_packed_vs_baseline_best": best,
         "packing_observed": bool(
             burst["packed"]["engine_calls"] < burst["packed"]["jobs"]),

@@ -266,6 +266,36 @@ class DistDSIMEngine:
         pool = jnp.swapaxes(pool, 0, 1).reshape(W, -1)        # (W, K*b_pad)
         return pool[:, consts["ghost_src_pool"]]              # (W, g_max)
 
+    def boundary_exchange_fn(self):
+        """Jitted exchange-ONLY closure: exactly the ``_exchange_block*``
+        collective (publish -> all-gather -> ghost gather) with every
+        p-bit update elided.  ``fn(state) -> ghosts`` on live state — the
+        measured-η probe (``obs.EtaMeter.measure_exchange`` times it to
+        get t_exchange, hence f_comm, without touching the run path)."""
+        cached = getattr(self, "_exchange_only_fn", None)
+        if cached is not None:
+            return cached
+        spec_m = P(self.axis)
+        cspec = jax.tree.map(lambda _: spec_m, self._consts)
+        word = self.precision == "bitplane"
+
+        def block(m, macc, consts):
+            m, macc = m[0], macc[0]
+            consts = jax.tree.map(lambda x: x[0], consts)
+            if word:
+                g = self._exchange_block_w(m, consts)
+            else:
+                g = self._exchange_block(m, macc, 1, consts)
+            return g[None]
+
+        smapped = shard_map(block, mesh=self.mesh,
+                            in_specs=(spec_m, spec_m, cspec),
+                            out_specs=spec_m, check_vma=False)
+        run = jax.jit(lambda m, macc: smapped(m, macc, self._consts))
+        fn = lambda state: run(state.m, state.macc)  # noqa: E731
+        self._exchange_only_fn = fn
+        return fn
+
     def _phase_block(self, c, m, ghosts, rng, beta, consts, lut=None):
         """One color phase; ``beta`` is the f32 inverse temperature — or,
         with ``lut``, the int32 LUT row index the staircase resolved to."""

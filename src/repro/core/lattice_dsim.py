@@ -396,6 +396,32 @@ class LatticeDSIM:
         zhi = shift(mw[:, :, :, :1], az, kz, False, True)[:, :, :, 0]
         return (xlo, xhi, ylo, yhi, zlo, zhi)
 
+    def boundary_exchange_fn(self):
+        """Jitted exchange-ONLY closure: the six-face halo ppermute of
+        ``_exchange_block`` / ``_exchange_block_w`` with the sweep elided.
+        ``fn(state) -> halos`` on live state — the measured-η probe
+        (``obs.EtaMeter.measure_exchange`` times it to get t_exchange)."""
+        cached = getattr(self, "_exchange_only_fn", None)
+        if cached is not None:
+            return cached
+        word = self.precision == "bitplane"
+
+        def block(m):
+            xlo, xhi, ylo, yhi, zlo, zhi = (
+                self._exchange_block_w(m) if word
+                else self._exchange_block(m))
+            return (xlo[:, None], xhi[:, None],
+                    ylo[:, :, None, :], yhi[:, :, None, :],
+                    zlo[:, :, :, None], zhi[:, :, :, None])
+
+        smapped = shard_map(block, mesh=self.mesh,
+                            in_specs=(self.spec_m,),
+                            out_specs=self.halo_specs, check_vma=False)
+        run = jax.jit(lambda m: smapped(m))
+        fn = lambda state: run(state.m)  # noqa: E731
+        self._exchange_only_fn = fn
+        return fn
+
     # -- block step -------------------------------------------------------------------
 
     def _sweep_phases_block(self, m, s, halos, betas_S, masks, h, w6):

@@ -19,6 +19,7 @@ below 2**31 so the modular delta is unambiguous.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, List, Optional, Protocol, Sequence, Union, runtime_checkable
 
 import jax.numpy as jnp
@@ -270,6 +271,12 @@ class RecordedCursor:
         # layer's FaultPlan raises/hangs/corrupts here, at exactly the
         # points where the hardware would drop a boundary exchange)
         self.fault_hook: Optional[Callable] = None
+        # optional per-chunk timer `(sweeps, seconds) -> None` (telemetry:
+        # obs.EtaMeter attaches here).  When set, each chunk is bracketed
+        # by block_until_ready so device-async work is attributed to the
+        # chunk that launched it; when None (default) no sync is added
+        # and the lazy-flip-read fast path is untouched.
+        self.chunk_timer: Optional[Callable] = None
         # The device counter is read lazily: at record points (which
         # synchronize anyway for the observable) and just before the
         # worst-case flips since the last read could reach 2**31 (keeping
@@ -327,7 +334,15 @@ class RecordedCursor:
             bchunk = jnp.asarray(
                 self._betas[self._pos:self._pos + nsw]).reshape(
                     (c, self.S) + self._betas.shape[1:])
-            self.state = self._chunk_fn(self.state, bchunk, c, self.S)
+            if self.chunk_timer is not None:
+                import jax
+                jax.block_until_ready(self.state)
+                t0 = time.perf_counter()
+                self.state = self._chunk_fn(self.state, bchunk, c, self.S)
+                jax.block_until_ready(self.state)
+                self.chunk_timer(nsw, time.perf_counter() - t0)
+            else:
+                self.state = self._chunk_fn(self.state, bchunk, c, self.S)
             self._i += 1
             self._pos += nsw
             self._pending += worst

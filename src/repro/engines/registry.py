@@ -78,6 +78,16 @@ class HandleCursor:
         self._c.fault_hook = fn
 
     @property
+    def chunk_timer(self):
+        """Per-chunk `(sweeps, seconds)` timer on the underlying cursor
+        (telemetry: obs.EtaMeter / server pump-latency attach here)."""
+        return self._c.chunk_timer
+
+    @chunk_timer.setter
+    def chunk_timer(self, fn):
+        self._c.chunk_timer = fn
+
+    @property
     def done(self) -> bool:
         return self._c.done
 

@@ -1,0 +1,26 @@
+"""Runtime telemetry fabric: metrics, tracing, and measured-η timing.
+
+Dependency-free (stdlib + the repo's own commcost model; jax is only
+imported lazily at explicit sync boundaries).  Three layers:
+
+* :mod:`.metrics` — thread-safe :class:`MetricsRegistry` of counters,
+  gauges, and fixed-bucket histograms with labeled children, JSON
+  snapshots, and Prometheus text exposition;
+* :mod:`.trace` — bounded-ring span :class:`Tracer` with an explicit
+  ``block_until_ready`` boundary for device-async attribution;
+* :mod:`.timing` — :class:`EtaMeter`, which turns per-chunk wall time
+  plus exchange-only collective time into measured η = f_comm/f_pbit
+  and its margin against ``commcost.eta_threshold``.
+"""
+
+from .metrics import (DEFAULT_TIME_BUCKETS, Counter, Gauge, Histogram,
+                      MetricsRegistry)
+from .timing import EtaMeter, dist_eta_meter, exchanges_per_sweep
+from .trace import Span, Tracer
+
+__all__ = [
+    "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "DEFAULT_TIME_BUCKETS",
+    "Tracer", "Span",
+    "EtaMeter", "dist_eta_meter", "exchanges_per_sweep",
+]

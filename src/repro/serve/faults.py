@@ -247,4 +247,7 @@ class FaultPlan:
 
     @property
     def fired(self) -> int:
-        return len(self.events)
+        # under the plan's lock: a reader (server stats) must not see a
+        # torn view while a pump thread is appending events
+        with self._lock:
+            return len(self.events)

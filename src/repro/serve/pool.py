@@ -57,7 +57,8 @@ class EnginePool:
 
     def __init__(self, capacity: int = 8, *, breaker_threshold: int = 3,
                  breaker_cooldown_s: float = 30.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 metrics=None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         if breaker_threshold < 1:
@@ -78,6 +79,21 @@ class EnginePool:
         self.failed_builds = 0
         self.fast_fails = 0          # gets rejected by an open circuit
         self.last_error: Optional[str] = None
+        # optional obs.MetricsRegistry (the server shares its own): build
+        # durations, hit/miss counters, and a live circuit-state gauge
+        self._m_hits = self._m_misses = self._m_failed = None
+        self._h_build = self._g_open = None
+        if metrics is not None:
+            self._m_hits = metrics.counter(
+                "pool_hits_total", "engine-pool cache hits")
+            self._m_misses = metrics.counter(
+                "pool_misses_total", "engine-pool cache misses (builds)")
+            self._m_failed = metrics.counter(
+                "pool_failed_builds_total", "engine builds that raised")
+            self._h_build = metrics.histogram(
+                "pool_build_seconds", "engine build duration on miss")
+            self._g_open = metrics.gauge(
+                "pool_open_circuits", "keys with an open build circuit")
 
     def get(self, key: tuple, builder: Callable[[], Any]) -> Tuple[Any, bool]:
         """Return (handle, was_hit); builds via ``builder()`` on miss.
@@ -97,6 +113,8 @@ class EnginePool:
                 if key in self._cache:
                     self._cache.move_to_end(key)
                     self.hits += 1
+                    if self._m_hits is not None:
+                        self._m_hits.inc()
                     return self._cache[key], not waited
                 br = self._breaker.get(key)
                 if br is not None and br["fails"] >= self.breaker_threshold:
@@ -116,9 +134,12 @@ class EnginePool:
                     ev = threading.Event()
                     self._building[key] = ev
                     self.misses += 1
+                    if self._m_misses is not None:
+                        self._m_misses.inc()
                     break            # we build
             waited = True
             ev.wait()                # someone else is building this key
+        t_build = time.perf_counter()
         try:
             handle = builder()
         except BaseException as e:
@@ -131,8 +152,14 @@ class EnginePool:
                 br["error"] = f"{type(e).__name__}: {e}"
                 self.failed_builds += 1
                 self.last_error = br["error"]
+                if self._m_failed is not None:
+                    self._m_failed.inc()
+                if self._g_open is not None:
+                    self._g_open.set(self._open_circuits())
             ev.set()
             raise
+        if self._h_build is not None:
+            self._h_build.observe(time.perf_counter() - t_build)
         with self._lock:
             self._cache[key] = handle
             self._cache.move_to_end(key)
@@ -141,6 +168,8 @@ class EnginePool:
                 self.evictions += 1
             del self._building[key]
             self._breaker.pop(key, None)   # success closes the circuit
+            if self._g_open is not None:
+                self._g_open.set(self._open_circuits())
         ev.set()
         return handle, False
 
@@ -204,12 +233,18 @@ class EnginePool:
         with self._lock:
             return len(self._cache)
 
+    def _open_circuits(self) -> int:
+        """Under the lock: how many keys currently fast-fail."""
+        return sum(
+            1 for br in self._breaker.values()
+            if br["fails"] >= self.breaker_threshold
+            and (self._clock() - br["at"]) < self.breaker_cooldown_s)
+
     def stats(self) -> dict:
         with self._lock:
-            open_keys = sum(
-                1 for br in self._breaker.values()
-                if br["fails"] >= self.breaker_threshold
-                and (self._clock() - br["at"]) < self.breaker_cooldown_s)
+            open_keys = self._open_circuits()
+            if self._g_open is not None:
+                self._g_open.set(open_keys)
             return {"capacity": self.capacity, "size": len(self._cache),
                     "hits": self.hits, "misses": self.misses,
                     "evictions": self.evictions,

@@ -130,7 +130,7 @@ class ReplicaPackingScheduler:
     """Forms batches from the queued-job set; see the module docstring."""
 
     def __init__(self, max_replicas_per_call: int = 64, pack: bool = True,
-                 pad_pow2: bool = True):
+                 pad_pow2: bool = True, metrics=None):
         if max_replicas_per_call < 1:
             raise ValueError("max_replicas_per_call must be >= 1")
         self.max_replicas_per_call = int(max_replicas_per_call)
@@ -140,6 +140,17 @@ class ReplicaPackingScheduler:
         self.batches_formed = 0
         self.jobs_batched = 0
         self.jobs_packed = 0          # jobs that shared a batch with others
+        self.padding_replicas = 0     # throwaway pad chains executed
+        # optional obs.MetricsRegistry: executed pack widths and the
+        # padding waste (throwaway replicas) per formed batch
+        self._h_width = self._m_padding = None
+        if metrics is not None:
+            self._h_width = metrics.histogram(
+                "sched_pack_width_replicas", "executed batch width r_exec",
+                buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256))
+            self._m_padding = metrics.counter(
+                "sched_padding_replicas_total",
+                "throwaway pad replicas executed (r_exec - packed)")
 
     def replica_budget(self, precision: str) -> int:
         """Per-batch (and per-job admission) chain cap: the per-call cap,
@@ -214,6 +225,11 @@ class ReplicaPackingScheduler:
         self.jobs_batched += len(group)
         if len(group) > 1:
             self.jobs_packed += len(group)
+        pad = b.r_exec - total
+        self.padding_replicas += pad
+        if self._h_width is not None:
+            self._h_width.observe(b.r_exec)
+            self._m_padding.inc(pad)
         return b
 
     def stats(self) -> dict:
@@ -221,4 +237,5 @@ class ReplicaPackingScheduler:
                 "pack": self.pack, "pad_pow2": self.pad_pow2,
                 "batches_formed": self.batches_formed,
                 "jobs_batched": self.jobs_batched,
-                "jobs_packed": self.jobs_packed}
+                "jobs_packed": self.jobs_packed,
+                "padding_replicas": self.padding_replicas}

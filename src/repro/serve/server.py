@@ -46,6 +46,7 @@ test-friendly); ``start()`` runs the same loop on a background thread.
 
 from __future__ import annotations
 
+import copy
 import hashlib
 import threading
 import time
@@ -58,6 +59,7 @@ from repro.core.annealing import ea_schedule
 from repro.engines import make_engine
 from repro.engines.base import (LANE_WIDTH, MAX_LANE_WORDS, check_precision,
                                 lanes_of, quantize_record_points, spawn_seeds)
+from repro.obs import MetricsRegistry, Tracer
 
 from .faults import (FaultPlan, StateCorruption, classify_error,
                      compute_backoff)
@@ -110,6 +112,40 @@ class _Problem:
 class SampleServer:
     """Multi-tenant annealing server over the unified engine layer."""
 
+    # lifecycle/fault counters live on the metrics registry (one counter
+    # family each); attribute reads (`srv.failed`) resolve through
+    # __getattr__ so the pre-telemetry surface is unchanged
+    _COUNTERS = {
+        "submitted": ("serve_jobs_submitted_total", "jobs admitted"),
+        "completed": ("serve_jobs_completed_total", "jobs finished DONE"),
+        "failed": ("serve_jobs_failed_total", "jobs finished FAILED"),
+        "cancelled": ("serve_jobs_cancelled_total",
+                      "jobs finished CANCELLED"),
+        "rejected": ("serve_jobs_rejected_total",
+                     "submissions bounced by admission control"),
+        "engine_calls": ("serve_engine_calls_total",
+                         "batched anneal launches (cursors built)"),
+        "preemptions": ("serve_preemptions_total",
+                        "batches parked by higher-priority work"),
+        "retries": ("serve_retries_total",
+                    "transient-failure retries granted"),
+        "quarantined_batches": ("serve_quarantined_batches_total",
+                                "multi-job batches sent to bisection"),
+        "bisect_requeues": ("serve_bisect_requeues_total",
+                            "jobs re-queued by quarantine splits"),
+        "deadline_failures": ("serve_deadline_failures_total",
+                              "jobs failed by wall-budget expiry"),
+        "stuck_chunks": ("serve_stuck_chunks_total", "watchdog firings"),
+        "corrupted_chunks": ("serve_corrupted_chunks_total",
+                             "integrity-guard firings"),
+        "checkpoints_written": ("serve_checkpoints_written_total",
+                                "cursor snapshots spooled"),
+        "checkpoints_resumed": ("serve_checkpoints_resumed_total",
+                                "batches restored from a checkpoint"),
+        "recovered_jobs": ("serve_recovered_jobs_total",
+                           "jobs re-admitted by recover()"),
+    }
+
     def __init__(self, *, pool_capacity: int = 8, max_queue_depth: int = 128,
                  max_replicas_per_call: int = 64, pack: bool = True,
                  pad_pow2: bool = True, stream_chunks: int = 8,
@@ -124,7 +160,9 @@ class SampleServer:
                  retry_jitter: float = 0.5,
                  chunk_timeout_s: Optional[float] = None,
                  breaker_threshold: int = 3,
-                 breaker_cooldown_s: float = 30.0):
+                 breaker_cooldown_s: float = 30.0,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         """Fault-tolerance knobs (the rest as before):
 
         ``fault_plan`` — a :class:`repro.serve.faults.FaultPlan` injected
@@ -142,13 +180,20 @@ class SampleServer:
         quarantined jobs.  ``chunk_timeout_s`` arms the stuck-chunk
         watchdog (the batch's pool key is marked suspect).  The breaker
         knobs pass through to :class:`EnginePool`.
+
+        ``metrics`` / ``tracer`` — the server's telemetry fabric
+        (``repro.obs``); fresh instances are created when omitted, so
+        :meth:`metrics_snapshot` / :meth:`render_metrics` always work.
         """
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer()
         self.pool = EnginePool(pool_capacity,
                                breaker_threshold=breaker_threshold,
-                               breaker_cooldown_s=breaker_cooldown_s)
+                               breaker_cooldown_s=breaker_cooldown_s,
+                               metrics=self.metrics)
         self.scheduler = ReplicaPackingScheduler(
             max_replicas_per_call=max_replicas_per_call, pack=pack,
-            pad_pow2=pad_pow2)
+            pad_pow2=pad_pow2, metrics=self.metrics)
         self.max_queue_depth = int(max_queue_depth)
         self.stream_chunks = max(int(stream_chunks), 1)
         self.warm_compile = bool(warm_compile)
@@ -185,24 +230,41 @@ class SampleServer:
         self._stop = False
         # register-time bit-plane prewarm threads (join to block on warmth)
         self.prewarm_threads: List[threading.Thread] = []
-        # counters
-        self.submitted = 0
-        self.completed = 0
-        self.failed = 0
-        self.cancelled = 0
-        self.rejected = 0
-        self.engine_calls = 0        # batched anneal launches (cursors built)
-        self.preemptions = 0
-        # fault-tolerance counters
-        self.retries = 0             # transient-failure retries granted
-        self.quarantined_batches = 0  # multi-job batches sent to bisection
-        self.bisect_requeues = 0     # jobs re-queued by quarantine splits
-        self.deadline_failures = 0
-        self.stuck_chunks = 0        # watchdog firings
-        self.corrupted_chunks = 0    # integrity-guard firings
-        self.checkpoints_written = 0
-        self.checkpoints_resumed = 0
-        self.recovered_jobs = 0      # jobs re-admitted by recover()
+        # lifecycle + fault-tolerance counters: registry families keyed
+        # by their legacy attribute names (stats() and `srv.<name>` read
+        # through them)
+        self._counter_fams = {
+            attr: self.metrics.counter(name, help)
+            for attr, (name, help) in self._COUNTERS.items()}
+        # latency/goodput distributions and instantaneous gauges
+        self._h_queue_wait = self.metrics.histogram(
+            "serve_queue_wait_seconds", "submit -> first batch start")
+        self._h_pump = self.metrics.histogram(
+            "serve_pump_chunk_seconds", "one cursor chunk in the pump")
+        self._h_job_total = self.metrics.histogram(
+            "serve_job_total_seconds", "submit -> DONE wall time")
+        self._h_goodput = self.metrics.histogram(
+            "serve_job_flips_per_s", "per-DONE-job device flip rate",
+            buckets=tuple(10.0 ** e for e in range(3, 13)))
+        self._g_queue = self.metrics.gauge(
+            "serve_queue_depth", "jobs waiting for a batch")
+        self._g_inflight = self.metrics.gauge(
+            "serve_inflight_batches", "batches started and unfinished")
+        self._g_flips = self.metrics.gauge(
+            "engine_flips_per_s", "last observed per-engine-path flip rate")
+
+    def _count(self, attr: str, n: int = 1) -> None:
+        """Bump a lifecycle counter (a registry family; see _COUNTERS)."""
+        self._counter_fams[attr].inc(n)
+
+    def __getattr__(self, name: str):
+        # legacy counter attributes (srv.failed, srv.retries, ...) read
+        # the registry; only consulted when normal lookup misses
+        fams = self.__dict__.get("_counter_fams")
+        if fams is not None and name in fams:
+            return int(fams[name].value)
+        raise AttributeError(
+            f"{type(self).__name__!r} object has no attribute {name!r}")
 
     # -- problems --------------------------------------------------------------
 
@@ -311,7 +373,7 @@ class SampleServer:
                        checkpoint_every=checkpoint_every)
         with self._lock:
             if len(self._queue) >= self.max_queue_depth:
-                self.rejected += 1
+                self._count("rejected")
                 raise QueueFull(
                     f"queue depth {len(self._queue)} at limit "
                     f"{self.max_queue_depth}")
@@ -321,7 +383,7 @@ class SampleServer:
                       schedule_fingerprint(sched), time.perf_counter())
             self._jobs[job.id] = job
             self._queue.append(job)
-            self.submitted += 1
+            self._count("submitted")
             self._cv.notify_all()
         return job.id
 
@@ -492,7 +554,7 @@ class SampleServer:
         job.error = (f"DeadlineExceeded: {job.spec.deadline_s}s wall "
                      f"budget exhausted at {job.sweeps_done}/"
                      f"{job.total_sweeps} sweeps")
-        self.deadline_failures += 1
+        self._count("deadline_failures")
         self._finalize(job, JobStatus.FAILED)
 
     def _drop_spooled(self, batch: Batch):
@@ -534,7 +596,7 @@ class SampleServer:
         if (self._current is not None and self._current is not batch
                 and self._current in self._batches
                 and batch.priority > self._current.priority):
-            self.preemptions += 1     # higher-priority work parked a batch
+            self._count("preemptions")  # higher-priority work parked a batch
         self._current = batch
         return batch
 
@@ -633,7 +695,7 @@ class SampleServer:
         batch.handle, batch.cursor, batch.pool_hit = handle, cursor, hit
         batch.started_at = time.perf_counter()
         with self._lock:
-            self.engine_calls += 1
+            self._count("engine_calls")
             for j in batch.jobs:
                 if j.status.terminal:
                     continue   # recovered batches can carry finished slots
@@ -641,6 +703,8 @@ class SampleServer:
                 j.status = JobStatus.RUNNING
                 if j.started_at is None:   # retries keep first-start time
                     j.started_at = batch.started_at
+                    self._h_queue_wait.labels(engine=lead.engine).observe(
+                        batch.started_at - j.submitted_at)
                 j.packed_with = len(batch.jobs) - 1
                 j.pool_hit = hit
 
@@ -696,7 +760,7 @@ class SampleServer:
                 batch.ck_token = tuple(ck["token"])
                 batch.points_seen = cursor.points_recorded
                 batch.last_ck_sweep = int(cursor.sweeps_done)
-                self.checkpoints_resumed += 1
+                self._count("checkpoints_resumed")
             else:
                 batch.ck = None
                 if batch.ck_digest is not None and self.spool is not None:
@@ -708,19 +772,24 @@ class SampleServer:
     def _advance_batch(self, batch: Batch):
         cur = batch.cursor
         chunk_idx = batch.chunks_done
+        lead_engine = batch.jobs[0].spec.engine
         t0 = time.perf_counter()
-        if self.fault_plan is not None:
-            # "chunk" fault site; "hang" rules sleep inside the timed
-            # window so the stuck-chunk watchdog below sees them
-            self.fault_plan.apply(
-                "chunk", cursor=cur, index=chunk_idx,
-                jobs=tuple(j.id for j in batch.jobs)
-                + tuple(j.spec.seed for j in batch.jobs),
-                key=batch.pool_key)
-        cur.advance(1)
+        with self.tracer.span("pump.chunk", batch=batch.seq,
+                              chunk=chunk_idx, engine=lead_engine,
+                              jobs=len(batch.jobs)):
+            if self.fault_plan is not None:
+                # "chunk" fault site; "hang" rules sleep inside the timed
+                # window so the stuck-chunk watchdog below sees them
+                self.fault_plan.apply(
+                    "chunk", cursor=cur, index=chunk_idx,
+                    jobs=tuple(j.id for j in batch.jobs)
+                    + tuple(j.spec.seed for j in batch.jobs),
+                    key=batch.pool_key)
+            cur.advance(1)
         dt = time.perf_counter() - t0
         batch.device_s += dt
         batch.chunks_done += 1
+        self._h_pump.labels(engine=lead_engine).observe(dt)
         if self.chunk_timeout_s is not None and dt > self.chunk_timeout_s:
             # watchdog: the chunk stalled far past budget — flag this
             # key's executable for operators (sticky in pool.stats())
@@ -729,7 +798,7 @@ class SampleServer:
                 f"chunk {chunk_idx} took {dt:.3f}s "
                 f"(chunk_timeout_s={self.chunk_timeout_s})")
             with self._lock:
-                self.stuck_chunks += 1
+                self._count("stuck_chunks")
         now = time.perf_counter()
         if cur.points_recorded == batch.points_seen and not cur.done:
             # mid-gap chunk (max_chunk split): nothing recorded, so skip
@@ -769,7 +838,7 @@ class SampleServer:
             # chunk as transient so the retry path restores the last
             # pre-corruption checkpoint instead of streaming junk
             with self._lock:
-                self.corrupted_chunks += 1
+                self._count("corrupted_chunks")
             raise StateCorruption(
                 f"non-finite energies recorded at chunk {chunk_idx} "
                 f"(pool key {batch.pool_key!r}) — sampler state is "
@@ -881,7 +950,7 @@ class SampleServer:
             batch.ck = record
             batch.ck_token = record["token"]
             batch.last_ck_sweep = int(cur.sweeps_done)
-            self.checkpoints_written += 1
+            self._count("checkpoints_written")
         if self.spool is not None:
             batch.ck_digest = self.spool.put(record,
                                              replaces=batch.ck_digest)
@@ -914,7 +983,7 @@ class SampleServer:
                 # is alone, THEN apply transient/permanent retry policy
                 if self._bisect_left >= 2:
                     self._bisect_left -= 2
-                    self.quarantined_batches += 1
+                    self._count("quarantined_batches")
                     half = (len(live) + 1) // 2
                     for part in (live[:half], live[half:]):
                         group = ("bisect", self._group_seq)
@@ -933,7 +1002,7 @@ class SampleServer:
                                 jitter=self.retry_jitter,
                                 seed=j.spec.seed)
                             self._queue.append(j)
-                    self.bisect_requeues += len(live)
+                    self._count("bisect_requeues", len(live))
                     self._drop_spooled(batch)
                     self._cv.notify_all()
                     return
@@ -944,7 +1013,7 @@ class SampleServer:
                 else self.max_retries
             if kind == "transient" and j.retries < budget:
                 j.retries += 1
-                self.retries += 1
+                self._count("retries")
                 if batch.ck is not None:
                     # resume the retry from the last good checkpoint; pin
                     # the job solo so the next batch's layout matches
@@ -988,11 +1057,19 @@ class SampleServer:
         job.resume_ck = None
         job.resume_ck_digest = None
         if status is JobStatus.DONE:
-            self.completed += 1
+            self._count("completed")
+            eng = job.spec.engine
+            self._h_job_total.labels(engine=eng).observe(
+                job.finished_at - job.submitted_at)
+            if job.device_s > 0 and job.flips:
+                rate = job.flips / job.device_s
+                self._h_goodput.labels(engine=eng).observe(rate)
+                self._g_flips.labels(
+                    engine=eng, precision=job.spec.precision).set(rate)
         elif status is JobStatus.FAILED:
-            self.failed += 1
+            self._count("failed")
         else:
-            self.cancelled += 1
+            self._count("cancelled")
         self._terminal_order.append(job.id)
         while len(self._terminal_order) > self.retain_jobs:
             self._jobs.pop(self._terminal_order.popleft(), None)
@@ -1099,8 +1176,8 @@ class SampleServer:
                 batch.ck_token = tok
                 batch.last_ck_sweep = int(rec["sweeps_done"])
                 self._batches.append(batch)
-                self.submitted += len(live)
-                self.recovered_jobs += len(live)
+                self._count("submitted", len(live))
+                self._count("recovered_jobs", len(live))
                 readmitted += [j.id for j in live]
             self._cv.notify_all()
         return readmitted
@@ -1136,31 +1213,45 @@ class SampleServer:
                 raise t.error
         return t
 
+    def _refresh_gauges(self) -> None:
+        """Under the lock: push instantaneous state into the gauges so a
+        snapshot/exposition read is current."""
+        self._g_queue.set(len(self._queue))
+        self._g_inflight.set(len(self._batches))
+
     def stats(self) -> dict:
+        """Consistent, deep-copied snapshot — counters are the registry's
+        view, nested component dicts are taken under each component's own
+        lock and copied, so mutating the result can never corrupt server
+        state (and the server never mutates the caller's copy)."""
+        # component snapshots first (each under its owner's lock; their
+        # counters only mutate under self._lock, so ordering is benign)
+        pool = self.pool.stats()
+        scheduler = self.scheduler.stats()
+        spool = None if self.spool is None else self.spool.stats()
+        # FaultPlan.fired takes the plan's own lock (no torn reads while
+        # a pump thread is appending events)
+        fired = 0 if self.fault_plan is None else self.fault_plan.fired
         with self._lock:
-            return {
-                "submitted": self.submitted,
-                "completed": self.completed,
-                "failed": self.failed,
-                "cancelled": self.cancelled,
-                "rejected": self.rejected,
-                "engine_calls": self.engine_calls,
-                "preemptions": self.preemptions,
-                "queue_depth": len(self._queue),
-                "inflight_batches": len(self._batches),
-                "retries": self.retries,
-                "quarantined_batches": self.quarantined_batches,
-                "bisect_requeues": self.bisect_requeues,
-                "bisect_calls_left": self._bisect_left,
-                "deadline_failures": self.deadline_failures,
-                "stuck_chunks": self.stuck_chunks,
-                "corrupted_chunks": self.corrupted_chunks,
-                "checkpoints_written": self.checkpoints_written,
-                "checkpoints_resumed": self.checkpoints_resumed,
-                "recovered_jobs": self.recovered_jobs,
-                "faults_injected": 0 if self.fault_plan is None
-                else self.fault_plan.fired,
-                "spool": None if self.spool is None else self.spool.stats(),
-                "pool": self.pool.stats(),
-                "scheduler": self.scheduler.stats(),
-            }
+            self._refresh_gauges()
+            out = {attr: int(fam.value)
+                   for attr, fam in self._counter_fams.items()}
+            out.update(
+                queue_depth=len(self._queue),
+                inflight_batches=len(self._batches),
+                bisect_calls_left=self._bisect_left,
+                faults_injected=fired,
+                spool=spool, pool=pool, scheduler=scheduler)
+        return copy.deepcopy(out)
+
+    def metrics_snapshot(self) -> dict:
+        """JSON-able dump of every metric family (see obs.MetricsRegistry)."""
+        with self._lock:
+            self._refresh_gauges()
+        return self.metrics.snapshot()
+
+    def render_metrics(self) -> str:
+        """Prometheus text exposition of the server's registry."""
+        with self._lock:
+            self._refresh_gauges()
+        return self.metrics.render_text()

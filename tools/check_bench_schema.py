@@ -45,6 +45,61 @@ REQUIRED_KEYS = REQUIRED_NUMBERS + [
 ]
 SPREAD_FIELDS = ("best", "min", "median", "trimmed_median", "max", "reps")
 
+# every BENCH record carries a telemetry block from the obs subsystem:
+# the EtaMeter probe (measured η must be a real number, not a NaN from a
+# side that never ran) and at least these non-empty latency histograms
+TELEMETRY_HISTS = {
+    "flip_rate": ("bench_chunk_seconds",),
+    "serve_load": ("serve_queue_wait_seconds", "serve_pump_chunk_seconds"),
+}
+ETA_NUMBERS = ("measured_eta", "eta_threshold", "margin",
+               "f_comm_hz", "f_pbit_hz", "t_exchange_s", "t_pbit_sweep_s")
+
+
+def _check_telemetry(payload: dict, errors: list, which: str):
+    tele = payload.get("telemetry")
+    if not isinstance(tele, dict):
+        errors.append(f"telemetry: expected a dict (obs snapshot + "
+                      f"EtaMeter report), got {tele!r}")
+        return
+    eta = tele.get("eta")
+    if not isinstance(eta, dict):
+        errors.append(f"telemetry.eta: expected an EtaMeter report, "
+                      f"got {eta!r}")
+    else:
+        for f in ETA_NUMBERS:
+            _finite_positive(f"telemetry.eta.{f}", eta.get(f), errors)
+        for f in ("chunks_recorded", "sweeps_recorded", "exchanges_timed"):
+            v = eta.get(f)
+            if not isinstance(v, int) or v <= 0:
+                errors.append(f"telemetry.eta.{f}: expected a positive "
+                              f"count, got {v!r} — a side of the η "
+                              "measurement never ran")
+    metrics = tele.get("metrics")
+    if not isinstance(metrics, dict):
+        errors.append(f"telemetry.metrics: expected a registry snapshot, "
+                      f"got {metrics!r}")
+        return
+    for name in TELEMETRY_HISTS[which]:
+        fam = metrics.get(name)
+        if not isinstance(fam, dict) or fam.get("type") != "histogram":
+            errors.append(f"telemetry.metrics[{name}]: expected a "
+                          "histogram family in the snapshot")
+            continue
+        total = sum(s.get("count", 0) for s in fam.get("series", [])
+                    if isinstance(s, dict))
+        if not total:
+            errors.append(f"telemetry.metrics[{name}]: latency histogram "
+                          "is empty — instrumentation never observed")
+    if which == "flip_rate":
+        ov = tele.get("overhead")
+        frac = ov.get("overhead_fraction") if isinstance(ov, dict) else None
+        if not isinstance(frac, (int, float)) or isinstance(frac, bool) \
+                or not math.isfinite(frac):
+            errors.append("telemetry.overhead.overhead_fraction: expected "
+                          f"a finite number, got {frac!r} — the chunk-"
+                          "timer cost was never measured")
+
 
 def _finite_positive(name, v, errors):
     if not isinstance(v, (int, float)) or isinstance(v, bool) \
@@ -166,6 +221,7 @@ def check(payload: dict) -> list:
                                      errors)
         _finite_positive("kernel_int8_vs_f32.speedup_int8_vs_f32",
                          k2k.get("speedup_int8_vs_f32"), errors)
+    _check_telemetry(payload, errors, "flip_rate")
     return errors
 
 
@@ -205,6 +261,14 @@ def _check_fault_waves(payload: dict, errors: list):
             _finite_positive(f"fault_waves[{i}].{f}", w.get(f), errors)
         for f in FAULT_WAVE_COUNTS:
             _finite_nonneg(f"fault_waves[{i}].{f}", w.get(f), errors)
+        ph = w.get("phase_s")
+        if not isinstance(ph, dict):
+            errors.append(f"fault_waves[{i}].phase_s: expected a "
+                          f"build/run/drain phase dict, got {ph!r}")
+        else:
+            for f in ("build", "run", "drain"):
+                _finite_nonneg(f"fault_waves[{i}].phase_s.{f}",
+                               ph.get(f), errors)
         done, failed, jobs = w.get("done"), w.get("failed"), w.get("jobs")
         if isinstance(done, int) and isinstance(failed, int) \
                 and isinstance(jobs, int) and done + failed > jobs:
@@ -264,6 +328,7 @@ def check_serve_load(payload: dict) -> list:
                       "compatible jobs (expected engine_calls < jobs "
                       "under burst load)")
     _check_fault_waves(payload, errors)
+    _check_telemetry(payload, errors, "serve_load")
     return errors
 
 

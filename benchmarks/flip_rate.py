@@ -303,6 +303,118 @@ def _apt_packed_bench(reps: int = 5, sweeps: int = 24) -> dict:
     }
 
 
+_DEGRADED_SCRIPT = r"""
+import json, sys
+import numpy as np
+from repro.compat import make_mesh, auto_axes
+from repro.core import commcost
+from repro.core.annealing import ea_schedule
+from repro.core.coloring import lattice3d_coloring
+from repro.core.graph import ea3d
+from repro.core.partition import slab_partition
+from repro.engines import make_engine
+from repro.obs import EtaMeter
+from repro.serve.faults import FaultPlan, FaultRule
+
+L, SYNC, SWEEPS = %(L)d, %(SYNC)d, %(SWEEPS)d
+g = ea3d(L, seed=0)
+col = lattice3d_coloring(L)
+labels = slab_partition(L, 2)
+mesh = make_mesh((2,), ("data",), axis_types=auto_axes(2))
+h = make_engine("dsim_dist", g, coloring=col, K=2, labels=labels,
+                mesh=mesh, rng="lfsr", precision="int8", replicas=1,
+                degrade="stale_hold:%(SWEEPS)d")
+sch = ea_schedule(SWEEPS)
+total = int(sch.total_sweeps)
+n_ex = max(total // SYNC, 1)
+pts = sorted(set(range(SYNC, total + 1, SYNC)))
+b = commcost.boundary_matrix(np.asarray(g.idx), np.asarray(g.w), labels, 2)
+cc = commcost.comm_cost(b, commcost.RingTopology(k=2, pins_per_link=1))
+meter = EtaMeter(n_color=len(h.eng.p.color_slots), c_max=cc.c_max,
+                 sync_every=SYNC)
+h.eng.set_exchange_faults(np.zeros(n_ex, np.int32))
+h.run_recorded(h.init_state(seed=0), sch, pts,
+               sync_every=SYNC)                 # compile outside timing
+meter.measure_exchange(
+    lambda st=h.init_state(seed=0): h.eng.boundary_exchange_fn()(st))
+arms = {}
+eta_clean = None
+for frac in (0.0, 0.1, 0.3):
+    if frac > 0:
+        plan = FaultPlan([FaultRule(site="exchange_drop", rate=frac)],
+                         seed=12345)
+        codes = plan.exchange_codes(n_ex)
+    else:
+        codes = np.zeros(n_ex, np.int32)   # same traced shape: one trace
+    h.eng.set_exchange_faults(codes)
+    cur = h.start_recorded(h.init_state(seed=0), sch, pts, sync_every=SYNC)
+    if frac == 0.0:
+        meter.attach(cur)
+    while not cur.done:
+        cur.advance(1)
+    rec = cur.record()
+    rep = h.eng.health.report()
+    if frac == 0.0:
+        eta_clean = float(meter.eta)
+    E = np.asarray(rec.energies)[:, 0]
+    arms["%%.1f" %% frac] = {
+        "drop_fraction": frac,
+        "completed": bool(cur.done),
+        "detections": int(rep["detections"]),
+        "stale_exchanges": int(rep["stale_exchanges"]),
+        "exchanges_total": int(rep["exchanges_total"]),
+        "max_staleness_seen": int(rep["max_staleness_seen"]),
+        "delivered_fraction": float(rep["delivered_fraction"]),
+        # effective eta uses the ONE clean measured eta so the arm-vs-arm
+        # comparison isolates the fault process from host timing noise
+        "effective_eta": eta_clean * float(rep["delivered_fraction"]),
+        "energy_first": float(E[0]),
+        "energy_final": float(E[-1]),
+        "residual_energy_drop": float(E[0] - E[-1]),
+    }
+out = {
+    "engine": "dsim_dist", "K": 2, "L": L, "N": int(g.n),
+    "precision": "int8", "policy": "stale_hold:%(SWEEPS)d",
+    "sync_every": SYNC, "exchanges_per_run": n_ex,
+    "measured_eta_clean": eta_clean,
+    "eta_threshold": float(meter.eta_threshold),
+    "arms": arms,
+}
+print("DEGJSON" + json.dumps(out, default=float))
+"""
+
+
+def _degraded_mesh_bench(sweeps: int) -> dict:
+    """Degraded arm of the flip-rate record: a REAL 2-device dsim_dist
+    mesh (forced host platform device count, hence the subprocess) under
+    ``stale_hold`` with 0/10/30% of boundary exchanges dropped at the
+    engine fault site — residual-energy decay per arm plus the
+    staleness-vs-eta accounting (effective_eta = clean measured eta x
+    delivered fraction).  Gated by tools/check_bench_schema.py: all arms
+    complete, effective_eta finite and monotone non-increasing in the
+    drop fraction, detections > 0 whenever exchanges were dropped."""
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=2").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    script = _DEGRADED_SCRIPT % {
+        "L": 6, "SYNC": SYNC, "SWEEPS": max(min(sweeps // 4, 256), 64)}
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"degraded-mesh bench subprocess failed:\n{proc.stderr[-4000:]}")
+    for line in proc.stdout.splitlines():
+        if line.startswith("DEGJSON"):
+            return json.loads(line[len("DEGJSON"):])
+    raise RuntimeError("degraded-mesh bench subprocess printed no record")
+
+
 def _telemetry_bench(L: int, sweeps: int, flips: dict,
                      reps: int = 9) -> dict:
     """The benchmark's own observability record: the measured-η probe, a
@@ -464,11 +576,12 @@ def run(quick: bool = True, engine: str = None, replicas: int = 1):
     # the word-lane mesh-engine path and the lane-packed tempering ladder
     # (cheap at quick size; part of the gated record, so they run whenever
     # the record below will be written)
-    dist_word = apt_packed = word_scaling = None
+    dist_word = apt_packed = word_scaling = degraded = None
     if R == 1 and engine in (None, "lattice"):
         dist_word = _dist_word_boundary_bench(L, max(sweeps // 4, 256))
         apt_packed = _apt_packed_bench()
         word_scaling = _bitplane_word_scaling_bench(L)
+        degraded = _degraded_mesh_bench(sweeps)
 
     flips = {k: v * n * rep_of[k] for k, v in out.items()}
 
@@ -493,6 +606,8 @@ def run(quick: bool = True, engine: str = None, replicas: int = 1):
         detail["apt_icm_packed"] = apt_packed
     if word_scaling is not None:
         detail["bitplane_word_scaling"] = word_scaling
+    if degraded is not None:
+        detail["degraded_mesh"] = degraded
     if telemetry is not None:
         detail["telemetry"] = telemetry
     save_detail("flip_rate", detail)
@@ -599,6 +714,10 @@ def run(quick: bool = True, engine: str = None, replicas: int = 1):
             # permutations (cost recorded per move)
             "dsim_dist_bitplane": dist_word,
             "apt_icm_packed": apt_packed,
+            # degraded-mode arm: the 2-device mesh under stale_hold with
+            # 0/10/30% dropped exchanges — every arm must complete, with
+            # effective_eta monotone non-increasing in the drop fraction
+            "degraded_mesh": degraded,
             # measured η / f_comm / f_pbit from the EtaMeter probe, the
             # chunk-latency histogram, and the chunk-timer overhead gate
             "telemetry": telemetry,

@@ -13,8 +13,12 @@ about itself —
     against the commcost threshold — the paper's Eq. 2 ratio as a live
     number instead of a prediction.
 
-Ends by dumping the Prometheus text exposition head — the same surface a
-scrape endpoint would serve.
+Ends with the degraded-mode stanza — a mesh job run under
+``degrade_policy="stale_hold:8"`` with an injected boundary-exchange
+drop, printing the job's ``degrade`` provenance (detections, held
+exchanges, delivered fraction) and the integrity counters — and then
+the Prometheus text exposition head, the same surface a scrape endpoint
+would serve.
 
   PYTHONPATH=src python examples/serve_dashboard.py
 """
@@ -101,9 +105,43 @@ def main():
     stop.set()
     t.join()
     srv.drain()
+    srv.stop()
+
+    # -- degraded mode: a mesh job surviving a dropped boundary exchange --
+    # A fresh K=1 dsim_dist server with a deterministic fault plan that
+    # drops the last of the job's 8 exchanges; stale_hold keeps annealing
+    # on the held ghost region and the result carries the quarantine mark.
+    print("\n-- degraded-mode mesh (stale_hold vs a dropped exchange) --")
+    import numpy as np
+    from repro.compat import auto_axes, make_mesh
+    from repro.serve.faults import FaultPlan, FaultRule
+
+    plan = FaultPlan([FaultRule(site="exchange_drop", index=7)], seed=4)
+    dsrv = SampleServer(warm_compile=False, fault_plan=plan)
+    dsrv.register_problem("glass1", graph=g,
+                          coloring=lattice3d_coloring(5), K=1,
+                          labels=np.zeros(g.n, np.int32),
+                          mesh=make_mesh((1,), ("data",),
+                                         axis_types=auto_axes(1)),
+                          rng="lfsr")
+    jid = dsrv.submit("glass1", engine="dsim_dist", precision="int8",
+                      sweeps=32, sync_every=4, seed=3,
+                      degrade_policy="stale_hold:8")
+    out = dsrv.drain().result(jid)
+    deg = out["degrade"]
+    ds = dsrv.stats()
+    print(f"   job {out['status']} under {deg['policy']}: "
+          f"{deg['detections']} detection(s), "
+          f"{deg['stale_exchanges']}/{deg['exchanges_total']} held, "
+          f"delivered {deg['delivered_fraction']:.3f}, "
+          f"suspect={deg['suspect']}")
+    print(f"   counters: integrity-failures "
+          f"{ds['exchange_integrity_failures']}, "
+          f"stale {ds['stale_exchanges']}, resyncs {ds['mesh_resyncs']}")
+    dsrv.stop()
+
     print("\n-- Prometheus exposition (head) --")
     print("\n".join(srv.render_metrics().splitlines()[:20]))
-    srv.stop()
 
 
 if __name__ == "__main__":

@@ -51,6 +51,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .dsim import PartitionedProblem, DSIMState
+from .degrade import (DegradePolicy, MeshHealthMonitor, health_init,
+                      wire_checksum)
 from .annealing import ArraySchedule, beta_row_indices, beta_table
 from .pbit import (FixedPoint, bitplane_planes, field_bound, lfsr_init,
                    lfsr_next, lfsr_uniform, lut_accept, quantize,
@@ -75,7 +77,8 @@ class DistDSIMEngine:
                  axis: Union[str, tuple] = "data",
                  rng: str = "philox", fmt: Optional[FixedPoint] = None,
                  mode: str = "dsim", bitpack: bool = True,
-                 replicas: int = 1, precision: str = "f32"):
+                 replicas: int = 1, precision: str = "f32",
+                 degrade: Union[None, str, DegradePolicy] = None):
         axis_tuple = (axis,) if isinstance(axis, str) else tuple(axis)
         ndev = int(np.prod([mesh.shape[a] for a in axis_tuple]))
         if ndev != prob.K:
@@ -91,6 +94,18 @@ class DistDSIMEngine:
             # neither integer fields nor 1-bit lanes)
             raise ValueError(
                 f"precision={precision!r} needs rng='lfsr', mode='dsim'")
+        self.degrade = DegradePolicy.parse(degrade)
+        if self.degrade is not None and mode != "dsim":
+            # cmft publishes fractional window means — there is no 1-bit
+            # wire representation to checksum, and held means are not a
+            # meaningful last-known-good
+            raise ValueError("degrade policies need mode='dsim'")
+        self.health = (MeshHealthMonitor(self.degrade, prob.K,
+                                         kind="partitions")
+                       if self.degrade is not None else None)
+        # host-scheduled engine-boundary fault codes (0 ok / 1 drop /
+        # 2 corrupt), indexed by the traced exchange sequence number
+        self._fault_codes = None
         # the shared lane-cap guard; W stacked word planes for the word path
         self.words = check_lanes(precision, replicas)
         self.p = prob
@@ -121,6 +136,9 @@ class DistDSIMEngine:
             local_idx=prob.local_idx,
             color_slots=prob.color_slots, color_mask=prob.color_mask,
             bnd_slots=self._bnd_slots, ghost_src_pool=self._ghost_src_pool,
+            # source partition of each ghost slot — the per-source
+            # last-known-good hold mask of the degraded-mode exchange
+            ghost_src_part=jnp.asarray(gk.astype(np.int32)),
         )
         if precision == "f32":
             self._consts.update(local_w=prob.local_w, local_h=prob.local_h)
@@ -205,6 +223,11 @@ class DistDSIMEngine:
         return self.shard_state(st)
 
     def shard_state(self, st: DSIMState) -> DSIMState:
+        # re-sharding (init, restore from snapshot) invalidates the cached
+        # exchange-only closure: it closed over constants placed for the
+        # previous sharding, and a stale cache would let the eta probe run
+        # against dead buffers
+        self._exchange_only_fn = None
         put = lambda x: jax.device_put(x, self._shard)
         return DSIMState(m=put(st.m), ghosts=put(st.ghosts), macc=put(st.macc),
                          rng=put(st.rng),
@@ -417,6 +440,98 @@ class DistDSIMEngine:
             ghosts = self._exchange_block_w(mw, consts)
         return mw, ghosts, macc, rng, flips
 
+    # -- degraded-mode exchange (integrity header + stale hold) ---------------------
+
+    def _exchange_block_checked(self, m, consts, ghosts_prev, health,
+                                codes, freeze: bool):
+        """The boundary exchange with the integrity layer on.
+
+        Every device publishes its payload plus a ``[seq, checksum]``
+        header; the receiver recomputes the checksum of each source's
+        slice of the gathered pool and compares.  A source that fails
+        (wrong checksum, wrong/missing sequence number) has ALL its ghost
+        entries held at the carried last-known-good values — a bad
+        exchange is detected and *not ingested*.  With zero detections the
+        ingested ghosts are bitwise the unchecked `_exchange_block*`
+        values.  ``codes`` (optional, host-scheduled via
+        :meth:`set_exchange_faults`) corrupts/drops the *received* pool at
+        indexed sequence numbers — the engine-boundary fault site; the
+        detection below derives only from the wire contents.
+        """
+        seq, stale, frozen, det, held, maxst = health
+        K = self.p.K
+        word = self.precision == "bitplane"
+        lanes = int(m.shape[0])                   # W word planes | R chains
+        bnd_slots = consts["bnd_slots"]
+        if word:
+            bnd = m[:, bnd_slots]                 # (W, b_pad) uint32
+            pool = jax.lax.all_gather(bnd, self.axis, tiled=True)
+            wire = pool.reshape(K, lanes, self.b_pad)
+            sent = bnd
+        elif self.bitpack:
+            bnd = m[:, bnd_slots]                 # (R, b_pad) int8
+            packed = pack_pm1(bnd)
+            pool_p = jax.lax.all_gather(packed, self.axis, tiled=True)
+            pool = unpack_pm1(pool_p, self.b_pad).astype(jnp.float32)
+            wire = jax.lax.bitcast_convert_type(
+                pool.reshape(K, lanes, self.b_pad), jnp.uint32)
+            sent = bnd.astype(jnp.float32)
+        else:
+            bnd = m[:, bnd_slots].astype(jnp.float32)
+            pool = jax.lax.all_gather(bnd, self.axis, tiled=True)
+            wire = jax.lax.bitcast_convert_type(
+                pool.reshape(K, lanes, self.b_pad).astype(jnp.float32),
+                jnp.uint32)
+            sent = bnd
+        # header: my exchange counter + the checksum of what I published
+        hdr = jnp.stack([seq, wire_checksum(sent)])
+        hdrs = jax.lax.all_gather(hdr, self.axis, tiled=True).reshape(K, 2)
+        if codes is not None:
+            # engine-boundary fault injection on the RECEIVED pool: the
+            # detection below sees only the (possibly damaged) wire bits
+            total = jnp.uint32(codes.shape[0])
+            code = jnp.where(
+                seq < total,
+                codes[jnp.clip(seq, 0, total - 1).astype(jnp.int32)], 0)
+            corrupt, drop = code == 2, code == 1
+            wire = jnp.where(corrupt, wire ^ jnp.uint32(0x00400000), wire)
+            wire = jnp.where(drop, jnp.zeros_like(wire), wire)
+            hdrs = jnp.where(drop, jnp.full_like(hdrs, 0xFFFFFFFF), hdrs)
+        ck_k = jax.vmap(wire_checksum)(wire)                     # (K,)
+        ok_k = (ck_k == hdrs[:, 1]) & (hdrs[:, 0] == seq)
+        if freeze:
+            frozen = jnp.maximum(frozen,
+                                 (~ok_k).any().astype(jnp.int32))
+            bad_k = (~ok_k) | (frozen > 0)
+        else:
+            bad_k = ~ok_k
+        det = det + (~ok_k).any().astype(jnp.int32)
+        held = held + bad_k.any().astype(jnp.int32)
+        stale = jnp.where(bad_k, stale + 1, 0)
+        maxst = jnp.maximum(maxst, stale.max())
+        seq = seq + jnp.uint32(1)
+        # ingest per source: held sources keep last-known-good ghosts
+        vals = wire if word \
+            else jax.lax.bitcast_convert_type(wire, jnp.float32)
+        pool2 = vals.transpose(1, 0, 2).reshape(lanes, -1)
+        ghosts_new = pool2[:, consts["ghost_src_pool"]]
+        bad_entry = bad_k[consts["ghost_src_part"]]              # (g_max,)
+        ghosts = jnp.where(bad_entry[None, :], ghosts_prev, ghosts_new)
+        return ghosts, (seq, stale, frozen, det, held, maxst)
+
+    def _iteration_block_deg(self, m, ghosts, macc, rng, flips, betas_S,
+                             consts, health, codes, freeze, lut=None):
+        """S sweeps (no inline exchange) + one checked boundary exchange."""
+        if self.precision == "bitplane":
+            m, _, macc, rng, flips = self._iteration_block_w(
+                m, ghosts, macc, rng, flips, betas_S, None, consts, lut)
+        else:
+            m, _, macc, rng, flips = self._iteration_block(
+                m, ghosts, macc, rng, flips, betas_S, None, consts, lut)
+        ghosts, health = self._exchange_block_checked(
+            m, consts, ghosts, health, codes, freeze)
+        return m, ghosts, macc, rng, flips, health
+
     # -- runners --------------------------------------------------------------------
 
     def _run_chunk(self, iters: int, S: int, sync: SyncSpec):
@@ -479,6 +594,96 @@ class DistDSIMEngine:
         self._chunk_cache[key] = run
         return run
 
+    def _run_chunk_deg(self, iters: int, S: int, freeze: bool,
+                       has_codes: bool):
+        """Chunk runner with the integrity layer on: threads the health
+        carry through the iteration scan and runs the checked exchange.
+        Needs an integer ``sync_every`` (one exchange per S sweeps)."""
+        key = ("deg", iters, S, freeze, has_codes)
+        if key in self._chunk_cache:
+            return self._chunk_cache[key]
+
+        spec_m = P(self.axis)
+        cspec = jax.tree.map(lambda _: spec_m, self._consts)
+        has_lut = self.precision != "f32"
+        hspec = tuple(P() for _ in range(6))
+
+        def block(m, ghosts, macc, rng, flips_in, betas, consts, health,
+                  *rest):
+            m, ghosts, macc, rng = m[0], ghosts[0], macc[0], rng[0]
+            consts = jax.tree.map(lambda x: x[0], consts)
+            codes = rest[0] if has_codes else None
+            lut = rest[-1] if has_lut else None
+            local = jnp.zeros(flips_in.shape, jnp.uint32)
+
+            def it(carry, b):
+                m, ghosts, macc, rng, fl, health = carry
+                out = self._iteration_block_deg(m, ghosts, macc, rng, fl,
+                                                b, consts, health, codes,
+                                                freeze, lut)
+                return out, None
+            (m, ghosts, macc, rng, local, health), _ = jax.lax.scan(
+                it, (m, ghosts, macc, rng, local, health), betas)
+            total = jax.lax.psum(local, self.axis)
+            flips = jax.lax.bitcast_convert_type(
+                jax.lax.bitcast_convert_type(flips_in, jnp.uint32) + total,
+                jnp.int32)
+            return m[None], ghosts[None], macc[None], rng[None], flips, \
+                health
+
+        in_specs = (spec_m, spec_m, spec_m, spec_m, P(), P(), cspec, hspec)
+        if has_codes:
+            in_specs = in_specs + (P(),)
+        if has_lut:
+            in_specs = in_specs + (P(),)
+        smapped = shard_map(
+            block, mesh=self.mesh,
+            in_specs=in_specs,
+            out_specs=(spec_m, spec_m, spec_m, spec_m, P(), hspec),
+            check_vma=False,
+        )
+
+        @jax.jit
+        def run(state: DSIMState, betas, consts, health, *rest):
+            m, ghosts, macc, rng, flips, health = smapped(
+                state.m, state.ghosts, state.macc, state.rng, state.flips,
+                betas, consts, health, *rest)
+            st = DSIMState(
+                m=m, ghosts=ghosts, macc=macc, rng=rng,
+                sweep=state.sweep + betas.shape[0] * betas.shape[1],
+                flips=flips)
+            return st, health
+
+        self._chunk_cache[key] = run
+        return run
+
+    def set_exchange_faults(self, codes):
+        """Schedule engine-boundary exchange faults: ``codes[seq]`` in
+        {0 ok, 1 drop, 2 corrupt} applied to the *received* pool at global
+        exchange ``seq`` (see ``serve.faults.FaultPlan.exchange_codes``).
+        ``None`` clears.  Requires a degrade policy — an unchecked engine
+        would silently ingest the damage, which is exactly the failure
+        mode this subsystem removes."""
+        if codes is None:
+            self._fault_codes = None
+            return
+        if self.degrade is None:
+            raise ValueError("set_exchange_faults needs a degrade policy "
+                             "(unchecked engines must not ingest damage)")
+        self._fault_codes = jnp.asarray(np.asarray(codes), jnp.int32)
+
+    def resync(self, state: DSIMState) -> DSIMState:
+        """Quarantine exit: instantaneous full-boundary refresh.
+
+        Recomputes every ghost from the *current* spins — exactly the
+        exchange a no-fault run would have performed at this point, so the
+        returned ghosts are bitwise the no-fault trajectory's (verified in
+        tests).  Clears staleness/freeze on the health monitor."""
+        ghosts = self.boundary_exchange_fn()(state)
+        if self.health is not None:
+            self.health.on_resync()
+        return dataclasses.replace(state, ghosts=ghosts)
+
     def run_recorded_full(self, state: DSIMState, schedule,
                           record_points: Sequence[int], *,
                           cursor: bool = False,
@@ -487,6 +692,16 @@ class DistDSIMEngine:
         ``cursor=True``, the resumable RecordedCursor."""
         sync = sync_every if sync_every in ("phase", None) else int(sync_every)
 
+        deg = self.degrade is not None
+        if deg and sync in ("phase", None):
+            raise ValueError("degrade policies need an integer sync_every "
+                             "(one checked exchange per S sweeps)")
+        if deg:
+            self.health.reset()
+            codes = self._fault_codes
+            freeze = self.degrade.mode == "freeze_boundary"
+            has_codes = codes is not None
+
         if self.precision != "f32":
             # the staircase becomes LUT row indices (beta is in the table)
             beta_arr = np.asarray(schedule.beta_array(), np.float32)
@@ -494,15 +709,35 @@ class DistDSIMEngine:
             lut = self._lut_for(table)
             sched = ArraySchedule(beta_row_indices(beta_arr, table))
 
-            def chunk(st, rows2d, iters, S):
-                return self._run_chunk(iters, S, sync)(st, rows2d,
-                                                       self._consts, lut)
+            if deg:
+                def chunk(st, rows2d, iters, S):
+                    rest = ((codes,) if has_codes else ()) + (lut,)
+                    st, carry = self._run_chunk_deg(
+                        iters, S, freeze, has_codes)(
+                            st, rows2d, self._consts,
+                            self.health.carry, *rest)
+                    self.health.update(carry, exchanges=iters)
+                    return st
+            else:
+                def chunk(st, rows2d, iters, S):
+                    return self._run_chunk(iters, S, sync)(st, rows2d,
+                                                           self._consts, lut)
         else:
             sched = schedule
 
-            def chunk(st, betas2d, iters, S):
-                return self._run_chunk(iters, S, sync)(st, betas2d,
-                                                       self._consts)
+            if deg:
+                def chunk(st, betas2d, iters, S):
+                    rest = (codes,) if has_codes else ()
+                    st, carry = self._run_chunk_deg(
+                        iters, S, freeze, has_codes)(
+                            st, betas2d, self._consts,
+                            self.health.carry, *rest)
+                    self.health.update(carry, exchanges=iters)
+                    return st
+            else:
+                def chunk(st, betas2d, iters, S):
+                    return self._run_chunk(iters, S, sync)(st, betas2d,
+                                                           self._consts)
 
         kw = dict(
             state=state, schedule=sched, record_points=record_points,

@@ -31,6 +31,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .annealing import ArraySchedule, beta_row_indices, beta_table
+from .degrade import DegradePolicy, MeshHealthMonitor, wire_checksum
 from .lattice import LatticeProblem
 from .packing import (LANE_WIDTH, pack_lanes, pack_pm1, unpack_lanes,
                       unpack_pm1, pad_to_multiple)
@@ -165,7 +166,8 @@ class LatticeDSIM:
                  kernel_bx: Optional[int] = None, bitpack_halos: bool = True,
                  fused: bool = True, replicas: int = 1,
                  precision: str = "f32",
-                 vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET):
+                 vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET,
+                 degrade: Union[None, str, DegradePolicy] = None):
         if precision not in ("f32", "int8", "bitplane"):
             raise ValueError(f"unknown precision {precision!r}")
         self.p = prob
@@ -294,6 +296,12 @@ class LatticeDSIM:
         self._shard = lambda spec: NamedSharding(mesh, spec)
         self._chunk_cache = {}
         self._energy_fn = None
+        self._exchange_only_fn = None
+        # degraded-mode fabric: the six faces are the boundary sources
+        self.degrade = DegradePolicy.parse(degrade)
+        self.health = MeshHealthMonitor(self.degrade, 6, kind="faces") \
+            if self.degrade is not None else None
+        self._fault_codes = None
 
     @property
     def kernel_path(self) -> str:
@@ -471,8 +479,8 @@ class LatticeDSIM:
         return lambda mr, sr, hr, ps: self._sweep_phases_block(
             mr, sr, hr, ps, masks, h, w6)
 
-    def _iteration_block(self, m, s, halos, sched_S, masks, h, w6, lut=None):
-        """S sweeps for all R replicas, then one halo exchange.
+    def _sweep_block(self, m, s, halos, sched_S, masks, h, w6, lut=None):
+        """S sweeps for all R replicas against fixed halos (no exchange).
 
         m/s (R, bx, by, bz); halos 6 x (R, plane).  ``sched_S`` is the
         per-sweep schedule — (S,) shared or (S, R) per-replica; f32 betas on
@@ -493,8 +501,116 @@ class LatticeDSIM:
             m = jnp.stack([o[0] for o in outs])
             s = jnp.stack([o[1] for o in outs])
             fl = jnp.stack([o[2] for o in outs])
+        return m, s, fl
+
+    def _iteration_block(self, m, s, halos, sched_S, masks, h, w6, lut=None):
+        """S sweeps for all R replicas, then one halo exchange."""
+        m, s, fl = self._sweep_block(m, s, halos, sched_S, masks, h, w6, lut)
         halos = self._exchange_block(m)
         return m, s, halos, fl
+
+    # -- degraded-mode exchange (integrity header + stale hold) ----------------------
+
+    def _exchange_block_checked(self, m, halos_prev, health, codes,
+                                freeze: bool):
+        """The six-face halo exchange with the integrity layer on.
+
+        Every wired face ships a ``[seq, checksum]`` uint32 header over the
+        same ppermute link as its payload; the receiver re-checksums what
+        actually arrived and compares.  A face that fails (or a ``codes``
+        fault injected at this — the engine — boundary) is *held* at its
+        last-known-good plane from ``halos_prev``; its staleness counter
+        advances.  Open-chain edge devices have no inbound neighbor on
+        their outer faces: those planes are legitimate zeros, not wire
+        traffic, and are always accepted (``has_src`` mask).  Unwired axes
+        (k == 1) never touch a link and are always accepted.  With zero
+        faults the selected halos are bitwise the unchecked exchange's.
+
+        ``halos_prev`` and the returned halos are the *squeezed* planes (as
+        carried inside the chunk scan).  Health carries per-face staleness;
+        per-device divergence (edges) is pmax-reduced at chunk end.
+        """
+        seq, stale, frozen, det, held, maxst = health
+        ax, ay, az = self.dim_axes
+        kx, ky, kz = self.nb
+        word = self.precision == "bitplane"
+        bitpack = (not word) and self.bitpack_halos
+
+        faces = [
+            (m[:, -1:, :, :], ax, kx, True, False),    # xlo <- -x neighbor
+            (m[:, :1, :, :], ax, kx, False, False),    # xhi <- +x neighbor
+            (m[:, :, -1:, :], ay, ky, True, False),
+            (m[:, :, :1, :], ay, ky, False, False),
+            (m[:, :, :, -1:], az, kz, True, True),     # z is a periodic ring
+            (m[:, :, :, :1], az, kz, False, True),
+        ]
+        squeeze = (lambda p: p[:, 0], lambda p: p[:, 0],
+                   lambda p: p[:, :, 0, :], lambda p: p[:, :, 0, :],
+                   lambda p: p[:, :, :, 0], lambda p: p[:, :, :, 0])
+
+        corrupt = drop = None
+        if codes is not None:
+            total = jnp.uint32(codes.shape[0])
+            code = jnp.where(
+                seq < total,
+                codes[jnp.clip(seq, 0, total - 1).astype(jnp.int32)], 0)
+            corrupt, drop = code == 2, code == 1
+
+        new_faces, oks = [], []
+        for i, (plane, axis_name, k, up, periodic) in enumerate(faces):
+            wired = axis_name is not None and k > 1
+            if not wired:
+                # no link: periodic k==1 wraps my own face, open k==1 is a
+                # fixed zero boundary — nothing to verify
+                rx = self._halo_shift(plane, axis_name, k, up, periodic,
+                                      bitpack_pm1=False)
+                new_faces.append(squeeze[i](rx))
+                oks.append(jnp.bool_(True))
+                continue
+            rx = self._halo_shift(plane, axis_name, k, up, periodic,
+                                  bitpack_pm1=bitpack)
+            hdr = jnp.stack([seq, wire_checksum(plane)])
+            hdr_rx = self._halo_shift(hdr, axis_name, k, up, periodic,
+                                      bitpack_pm1=False)
+            idx = jax.lax.axis_index(axis_name)
+            has_src = jnp.bool_(True) if periodic else \
+                (idx > 0 if up else idx < k - 1)
+            if corrupt is not None:
+                hit, dr = corrupt & has_src, drop & has_src
+                flip = jnp.uint32(1) if word else jnp.int8(2)
+                rx = jnp.where(hit, rx ^ flip, rx)
+                rx = jnp.where(dr, jnp.zeros_like(rx), rx)
+                hdr_rx = jnp.where(dr, jnp.full_like(hdr_rx, 0xFFFFFFFF),
+                                   hdr_rx)
+            ok = (wire_checksum(rx) == hdr_rx[1]) & (hdr_rx[0] == seq)
+            oks.append(ok | ~has_src)
+            new_faces.append(squeeze[i](rx))
+
+        ok6 = jnp.stack(oks)
+        if freeze:
+            frozen = jnp.maximum(frozen, (~ok6).any().astype(jnp.int32))
+            bad6 = (~ok6) | (frozen > 0)
+        else:
+            bad6 = ~ok6
+        det = det + (~ok6).any().astype(jnp.int32)
+        held = held + bad6.any().astype(jnp.int32)
+        stale = jnp.where(bad6, stale + 1, 0)
+        maxst = jnp.maximum(maxst, stale.max())
+        seq = seq + jnp.uint32(1)
+        halos = tuple(jnp.where(bad6[i], halos_prev[i], new_faces[i])
+                      for i in range(6))
+        return halos, (seq, stale, frozen, det, held, maxst)
+
+    @staticmethod
+    def _health_pmax(health, axes_all):
+        """Replicate the health carry: per-device staleness diverges at
+        open-chain edges (outer faces carry no wire), so keep the mesh-wide
+        worst case.  seq advances identically everywhere."""
+        if not axes_all:
+            return health
+        seq, stale, frozen, det, held, maxst = health
+        pm = lambda x: jax.lax.pmax(x, axes_all)  # noqa: E731
+        return (seq, pm(stale), pm(frozen), pm(det), pm(held), pm(maxst))
 
     # -- runners ------------------------------------------------------------------------
 
@@ -618,6 +734,164 @@ class LatticeDSIM:
         self._chunk_cache[key] = run
         return run
 
+    def _run_chunk_deg(self, iters: int, S: int, per_rep: bool,
+                       freeze: bool, has_codes: bool):
+        """int8/f32 chunk runner with the integrity layer on: threads the
+        health carry through the scan and runs the checked exchange."""
+        key = ("deg", iters, S, per_rep, freeze, has_codes)
+        if key in self._chunk_cache:
+            return self._chunk_cache[key]
+        spec_m, spec_masks = self.spec_m, self.spec_masks
+        spec_flat = self.spec_flat
+        hspecs = self.halo_specs
+        axes_all = self._axes_all()
+        R = self.replicas
+        int8 = self.precision == "int8"
+        hlspec = tuple(P() for _ in range(6))
+
+        def block(m, s, halos, sched, masks, h, w6, health, *rest):
+            codes = rest[0] if has_codes else None
+            lut = rest[-1] if int8 else None
+            xlo, xhi, ylo, yhi, zlo, zhi = halos
+            halos = (xlo[:, 0], xhi[:, 0], ylo[:, :, 0, :], yhi[:, :, 0, :],
+                     zlo[:, :, :, 0], zhi[:, :, :, 0])
+            local = jnp.zeros((R,), jnp.int32)
+
+            def it(carry, b):
+                m, s, halos, fl, health = carry
+                m, s, f = self._sweep_block(m, s, halos, b, masks, h, w6,
+                                            lut)
+                halos, health = self._exchange_block_checked(
+                    m, halos, health, codes, freeze)
+                return (m, s, halos, fl + f, health), None
+            (m, s, halos, local, health), _ = jax.lax.scan(
+                it, (m, s, halos, local, health), sched)
+            flips = jax.lax.psum(local, axes_all) if axes_all else local
+            health = self._health_pmax(health, axes_all)
+            xlo, xhi, ylo, yhi, zlo, zhi = halos
+            halos = (xlo[:, None], xhi[:, None],
+                     ylo[:, :, None, :], yhi[:, :, None, :],
+                     zlo[:, :, :, None], zhi[:, :, :, None])
+            return m, s, halos, flips, health
+
+        in_specs = (spec_m, spec_m, hspecs, P(), spec_masks, spec_flat,
+                    tuple(spec_flat for _ in range(6)), hlspec)
+        if has_codes:
+            in_specs = in_specs + (P(),)
+        if int8:
+            in_specs = in_specs + (P(),)
+        smapped = shard_map(
+            block, mesh=self.mesh, in_specs=in_specs,
+            out_specs=(spec_m, spec_m, hspecs, P(), hlspec),
+            check_vma=False,
+        )
+
+        @jax.jit
+        def run(state: LatticeState, sched, masks, h, w6, health, *rest):
+            m, s, halos, fl, health = smapped(
+                state.m, state.s, state.halos, sched, masks, h, w6,
+                health, *rest)
+            st = LatticeState(
+                m=m, s=s, halos=halos,
+                sweep=state.sweep + sched.shape[0] * sched.shape[1],
+                flips=state.flips + fl)
+            return st, health
+
+        self._chunk_cache[key] = run
+        return run
+
+    def _run_chunk_bp_deg(self, iters: int, S: int, freeze: bool,
+                          has_codes: bool):
+        """Bitplane chunk runner with the integrity layer on."""
+        key = ("bp-deg", iters, S, freeze, has_codes)
+        if key in self._chunk_cache:
+            return self._chunk_cache[key]
+        spec_w, spec_m = self.spec_m, self.spec_m
+        spec_masks, spec_flat = self.spec_masks_w, self.spec_flat
+        hspecs = self.halo_specs
+        axes_all = self._axes_all()
+        R = self.replicas
+        hlspec = tuple(P() for _ in range(6))
+
+        def block(mw, s, halos, sched, masks_w, signs, nz, base, lut,
+                  health, *rest):
+            codes = rest[0] if has_codes else None
+            xlo, xhi, ylo, yhi, zlo, zhi = halos
+            halos = (xlo[:, 0], xhi[:, 0], ylo[:, :, 0, :], yhi[:, :, 0, :],
+                     zlo[:, :, :, 0], zhi[:, :, :, 0])
+            local = jnp.zeros((R,), jnp.int32)
+
+            def it(carry, b):
+                mw, s, halos, fl, health = carry
+                mw, s, f = pbit_bitplane_sweep_op(
+                    mw, s, b, masks_w, signs, nz, base, halos, lut,
+                    impl=self.impl)
+                halos, health = self._exchange_block_checked(
+                    mw, halos, health, codes, freeze)
+                return (mw, s, halos, fl + f, health), None
+            (mw, s, halos, local, health), _ = jax.lax.scan(
+                it, (mw, s, halos, local, health), sched)
+            flips = jax.lax.psum(local, axes_all) if axes_all else local
+            health = self._health_pmax(health, axes_all)
+            xlo, xhi, ylo, yhi, zlo, zhi = halos
+            halos = (xlo[:, None], xhi[:, None],
+                     ylo[:, :, None, :], yhi[:, :, None, :],
+                     zlo[:, :, :, None], zhi[:, :, :, None])
+            return mw, s, halos, flips, health
+
+        in_specs = (spec_w, spec_m, hspecs, P(), spec_masks,
+                    tuple(spec_flat for _ in range(6)),
+                    tuple(spec_flat for _ in range(6)), spec_flat, P(),
+                    hlspec)
+        if has_codes:
+            in_specs = in_specs + (P(),)
+        smapped = shard_map(
+            block, mesh=self.mesh, in_specs=in_specs,
+            out_specs=(spec_w, spec_m, hspecs, P(), hlspec),
+            check_vma=False,
+        )
+
+        @jax.jit
+        def run(state: BitplaneLatticeState, sched, masks_w, signs, nz,
+                base, lut, health, *rest):
+            mw, s, halos, fl, health = smapped(
+                state.m, state.s, state.halos, sched, masks_w, signs, nz,
+                base, lut, health, *rest)
+            st = BitplaneLatticeState(
+                m=mw, s=s, halos=halos,
+                sweep=state.sweep + sched.shape[0] * sched.shape[1],
+                flips=state.flips + fl)
+            return st, health
+
+        self._chunk_cache[key] = run
+        return run
+
+    def set_exchange_faults(self, codes):
+        """Schedule engine-boundary exchange faults: ``codes[seq]`` in
+        {0 ok, 1 drop, 2 corrupt} applied to the *received* halo planes at
+        global exchange ``seq`` (see ``serve.faults.FaultPlan``).  ``None``
+        clears.  Requires a degrade policy — an unchecked engine would
+        silently ingest the damage."""
+        if codes is None:
+            self._fault_codes = None
+            return
+        if self.degrade is None:
+            raise ValueError("set_exchange_faults needs a degrade policy "
+                             "(unchecked engines must not ingest damage)")
+        self._fault_codes = jnp.asarray(np.asarray(codes), jnp.int32)
+
+    def resync(self, state):
+        """Quarantine exit: instantaneous full-boundary refresh.
+
+        Re-derives every halo plane from the *current* spins — exactly the
+        exchange a no-fault run would have performed here, so the returned
+        halos are bitwise the no-fault trajectory's (verified in tests).
+        Clears staleness/freeze on the health monitor."""
+        st = self._refresh_halos(state)
+        if self.health is not None:
+            self.health.on_resync()
+        return st
+
     def init_state(self, seed: int = 0,
                    seeds: Optional[Sequence[int]] = None) -> LatticeState:
         """Fresh replicated state.  ``seeds=[...]`` (length R) gives every
@@ -660,6 +934,9 @@ class LatticeDSIM:
         return self._refresh_halos(st)
 
     def shard_state(self, st):
+        # drop the cached exchange-only closure: it closed over the old
+        # sharding, and a restore()/re-shard must not probe stale layouts
+        self._exchange_only_fn = None
         put = jax.device_put
         cls = type(st)
         # bitplane words lead with the W stacked planes, unpacked spins
@@ -714,29 +991,65 @@ class LatticeDSIM:
         beta_arr = np.asarray(schedule.beta_array(), np.float32)
         per_rep = beta_arr.ndim == 2
 
+        deg = self.degrade is not None
+        if deg:
+            self.health.reset()
+            codes = self._fault_codes
+            freeze = self.degrade.mode == "freeze_boundary"
+            has_codes = codes is not None
+            code_args = (codes,) if has_codes else ()
+
         if self.precision == "bitplane":
             table = beta_table(beta_arr)
             lut = self._lut_for(table)
             sched = ArraySchedule(beta_row_indices(beta_arr, table))
 
-            def chunk(st, rows2d, iters, S):
-                return self._run_chunk_bp(iters, S)(
-                    st, rows2d, self.masks_w, self.signs6_w, self.nz6_w,
-                    self.base_w, lut)
+            if deg:
+                def chunk(st, rows2d, iters, S):
+                    st, carry = self._run_chunk_bp_deg(
+                        iters, S, freeze, has_codes)(
+                            st, rows2d, self.masks_w, self.signs6_w,
+                            self.nz6_w, self.base_w, lut,
+                            self.health.carry, *code_args)
+                    self.health.update(carry, exchanges=iters)
+                    return st
+            else:
+                def chunk(st, rows2d, iters, S):
+                    return self._run_chunk_bp(iters, S)(
+                        st, rows2d, self.masks_w, self.signs6_w,
+                        self.nz6_w, self.base_w, lut)
         elif self.precision == "int8":
             table = beta_table(beta_arr)
             lut = self._lut_for(table)
             sched = ArraySchedule(beta_row_indices(beta_arr, table))
 
-            def chunk(st, rows2d, iters, S):
-                return self._run_chunk(iters, S, per_rep)(
-                    st, rows2d, self.p.masks, self.h_q, self.w6_q, lut)
+            if deg:
+                def chunk(st, rows2d, iters, S):
+                    st, carry = self._run_chunk_deg(
+                        iters, S, per_rep, freeze, has_codes)(
+                            st, rows2d, self.p.masks, self.h_q, self.w6_q,
+                            self.health.carry, *(code_args + (lut,)))
+                    self.health.update(carry, exchanges=iters)
+                    return st
+            else:
+                def chunk(st, rows2d, iters, S):
+                    return self._run_chunk(iters, S, per_rep)(
+                        st, rows2d, self.p.masks, self.h_q, self.w6_q, lut)
         else:
             sched = ArraySchedule(beta_arr) if per_rep else schedule
 
-            def chunk(st, betas2d, iters, S):
-                return self._run_chunk(iters, S, per_rep)(
-                    st, betas2d, self.p.masks, self.p.h, self.p.w6)
+            if deg:
+                def chunk(st, betas2d, iters, S):
+                    st, carry = self._run_chunk_deg(
+                        iters, S, per_rep, freeze, has_codes)(
+                            st, betas2d, self.p.masks, self.p.h, self.p.w6,
+                            self.health.carry, *code_args)
+                    self.health.update(carry, exchanges=iters)
+                    return st
+            else:
+                def chunk(st, betas2d, iters, S):
+                    return self._run_chunk(iters, S, per_rep)(
+                        st, betas2d, self.p.masks, self.p.h, self.p.w6)
 
         kw = dict(
             state=state, schedule=sched, record_points=record_points,

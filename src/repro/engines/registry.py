@@ -331,7 +331,8 @@ def make_engine(name: str, graph=None, *, coloring: Optional[Coloring] = None,
                 impl: str = "auto", bitpack: bool = True,
                 fused: bool = True, kernel_bx: Optional[int] = None,
                 bitpack_halos: bool = True, precision: str = "f32",
-                vmem_budget_bytes: Optional[int] = None):
+                vmem_budget_bytes: Optional[int] = None,
+                degrade=None):
     """Build a sampling engine by name.
 
       "gibbs"     — monolithic chromatic Gibbs; needs ``graph`` (+coloring).
@@ -356,6 +357,10 @@ def make_engine(name: str, graph=None, *, coloring: Optional[Coloring] = None,
     boundary site for all 32 chains, zero pack/unpack on the collective
     path).  ``"f32"`` (default) is the floating reference the integer
     paths are statistically compared against.
+
+    ``degrade=`` (mesh engines only) turns on the boundary-integrity
+    layer with a ``core.degrade.DegradePolicy`` — None, a policy object,
+    or "fail_fast" | "stale_hold[:N]" | "freeze_boundary".
     """
     if name not in ENGINE_NAMES:
         raise ValueError(f"unknown engine {name!r}; choose from {ENGINE_NAMES}")
@@ -363,6 +368,10 @@ def make_engine(name: str, graph=None, *, coloring: Optional[Coloring] = None,
         raise ValueError("replicas must be >= 1")
     check_precision(name, precision)
     check_lanes(precision, replicas)
+    if degrade is not None and name not in ("dsim_dist", "lattice"):
+        raise ValueError(
+            f"degrade policies apply to the mesh engines "
+            f"(dsim_dist, lattice), not {name!r}")
 
     if name == "gibbs":
         if not isinstance(graph, IsingGraph):
@@ -389,7 +398,7 @@ def make_engine(name: str, graph=None, *, coloring: Optional[Coloring] = None,
             mesh = make_mesh((prob.K,), (axis,), axis_types=auto_axes(1))
         eng = DistDSIMEngine(prob, mesh, axis=axis, rng=rng, fmt=fmt,
                              mode=mode, bitpack=bitpack, replicas=replicas,
-                             precision=precision)
+                             precision=precision, degrade=degrade)
         return _DistHandle(eng, replicas, prob.n)
 
     # name == "lattice"
@@ -408,5 +417,5 @@ def make_engine(name: str, graph=None, *, coloring: Optional[Coloring] = None,
     eng = LatticeDSIM(prob, mesh, dim_axes=dim_axes, fmt=fmt, impl=impl,
                       kernel_bx=kernel_bx, bitpack_halos=bitpack_halos,
                       fused=fused, replicas=replicas, precision=precision,
-                      **extra)
+                      degrade=degrade, **extra)
     return _LatticeHandle(eng, replicas, prob.n_active)

@@ -74,6 +74,9 @@ class EtaMeter:
         self._chunks = 0
         self._ex_s = 0.0
         self._ex_n = 0
+        self._stale = 0
+        self._stale_total = 0
+        self._max_staleness = 0
 
     # -- recording ------------------------------------------------------------------
 
@@ -124,7 +127,45 @@ class EtaMeter:
         self.record_exchange(dt, reps)
         return dt / reps
 
+    def note_stale(self, held: int, total: int,
+                   max_staleness: int = 0) -> None:
+        """Degraded-mode accounting from a mesh engine's health monitor:
+        ``held`` of ``total`` attempted exchanges were held at last-known-
+        good ghosts (cumulative; feed per-run totals once, or deltas)."""
+        with self._lock:
+            self._stale += int(held)
+            self._stale_total += int(total)
+            self._max_staleness = max(self._max_staleness,
+                                      int(max_staleness))
+
     # -- derived quantities ----------------------------------------------------------
+
+    @property
+    def stale_exchanges(self) -> int:
+        with self._lock:
+            return self._stale
+
+    @property
+    def max_staleness_seen(self) -> int:
+        with self._lock:
+            return self._max_staleness
+
+    @property
+    def delivered_fraction(self) -> float:
+        """Fraction of attempted exchanges actually ingested (1.0 until
+        degraded-mode accounting reports otherwise)."""
+        with self._lock:
+            if not self._stale_total:
+                return 1.0
+            return max(0.0, 1.0 - self._stale / self._stale_total)
+
+    @property
+    def effective_eta(self) -> float:
+        """Measured η scaled by the delivered-exchange fraction: held
+        exchanges don't refresh the boundary, so the *effective* comm
+        frequency — the quantity the paper's threshold bounds — drops in
+        proportion.  Equal to ``eta`` on a healthy mesh."""
+        return self.eta * self.delivered_fraction
 
     @property
     def t_exchange_s(self) -> float:
@@ -177,12 +218,22 @@ class EtaMeter:
         eta = self.eta
         thr = self.eta_threshold
         margin = eta / thr if thr and thr == thr else float("nan")
+        eff = self.effective_eta
+        eff_margin = eff / thr if thr and thr == thr else float("nan")
         return {
             "measured_eta": eta,
             "eta_threshold": thr,
             "margin": margin,
             "behaves_unpartitioned": bool(margin >= 1.0)
             if margin == margin else None,
+            "effective_eta": eff,
+            "delivered_fraction": self.delivered_fraction,
+            "stale_exchanges": self.stale_exchanges,
+            "max_staleness_seen": self.max_staleness_seen,
+            # degradation crossed the paper's topology threshold: the held
+            # exchanges alone pushed an above-threshold mesh below Eq. 2
+            "degraded_below_threshold": bool(margin >= 1.0 > eff_margin)
+            if margin == margin and eff_margin == eff_margin else None,
             "f_comm_hz": self.f_comm_hz,
             "f_pbit_hz": self.f_pbit_hz,
             "t_exchange_s": self.t_exchange_s,

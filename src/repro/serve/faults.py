@@ -9,8 +9,9 @@ it is trustworthy unless it can be *driven* deterministically.  This
 module is that driver:
 
 - **Failure taxonomy** — :class:`TransientFault` / :class:`PermanentFault`
-  (injected), :class:`StateCorruption` (the server's integrity guard
-  tripped on non-finite energies), and :func:`classify_error`, the one
+  (injected), :class:`StateCorruption` (re-exported from
+  ``core.degrade``: the server's integrity guard or a mesh engine's
+  boundary-integrity layer tripped), and :func:`classify_error`, the one
   place that decides transient-vs-permanent for retry policy.
 - **:class:`FaultPlan`** — a seeded, replayable list of
   :class:`FaultRule`\\ s that raise, hang, or corrupt at chosen sites:
@@ -19,6 +20,11 @@ module is that driver:
   cursor's per-chunk boundary hook inside ``RecordedCursor.advance``).
   Wired through ``SampleServer(fault_plan=...)``; every recovery path in
   tests is exercised by a plan, never by sleeps-and-hope chaos.
+- **Engine-boundary sites** — ``"exchange_corrupt"`` / ``"exchange_drop"``
+  rules damage the *wire itself*, inside the jitted chunk, not the pump:
+  :meth:`FaultPlan.exchange_codes` compiles them into a per-exchange code
+  array the mesh engines consume via ``set_exchange_faults`` — the
+  degraded-mode integrity layer (``core.degrade``) must detect every one.
 - **:func:`compute_backoff`** — pure, seeded exponential backoff with
   jitter, so retry pacing is unit-testable arithmetic.
 
@@ -55,10 +61,10 @@ class PermanentFault(InjectedFault):
     """Injected fault that must fail the job (no retry)."""
 
 
-class StateCorruption(RuntimeError):
-    """The server's integrity guard found non-finite energies in a fresh
-    record row — the sampler state is garbage.  Classified transient: a
-    retry from the last (pre-corruption) checkpoint repairs it."""
+# StateCorruption moved to core.degrade (the mesh integrity layer raises it
+# inside the engines); re-exported here so serve-layer callers and the
+# transient classification below keep one exception identity.
+from repro.core.degrade import StateCorruption  # noqa: E402
 
 
 class DeadlineExceeded(RuntimeError):
@@ -78,14 +84,30 @@ _PERMANENT = (PermanentFault, ValueError, TypeError, KeyError,
               NotImplementedError, AssertionError, AttributeError)
 
 
+def _is_xla_runtime_error(err: BaseException) -> bool:
+    """Duck-typed check for jaxlib's XlaRuntimeError (its import path has
+    moved across jaxlib versions; the class *name* is the stable part)."""
+    return any(c.__name__ == "XlaRuntimeError" for c in type(err).__mro__)
+
+
 def classify_error(err: BaseException) -> str:
     """``"transient"`` or ``"permanent"`` — the retry-policy split.
+
+    JAX runtime errors split on their embedded status code:
+    ``INVALID_ARGUMENT`` is a deterministic property of the request
+    (permanent); ``RESOURCE_EXHAUSTED`` (device OOM under co-tenancy) and
+    every other runtime status are worth a bounded retry (transient).
 
     Unknown exception types classify transient: on a serving tier a
     bounded retry of an unrecognized failure is cheaper than wrongly
     failing a tenant, and ``max_retries`` bounds the waste.  (The pool's
     ``CircuitOpen`` classifies transient via its ``TimeoutError`` base.)
     """
+    if _is_xla_runtime_error(err):
+        msg = str(err)
+        if "INVALID_ARGUMENT" in msg:
+            return "permanent"
+        return "transient"     # RESOURCE_EXHAUSTED, INTERNAL, ... — retry
     if isinstance(err, _PERMANENT):
         return "permanent"
     if isinstance(err, _TRANSIENT):
@@ -140,7 +162,11 @@ def corrupt_pytree(state):
 class FaultRule:
     """One injection rule; all given coordinates must match for it to fire.
 
-    site:   "build" | "chunk" | "exchange".
+    site:   "build" | "chunk" | "exchange" — host-side injection — or the
+            engine-boundary sites "exchange_corrupt" | "exchange_drop",
+            which damage the wire *inside* the jitted chunk (compiled into
+            a code array by :meth:`FaultPlan.exchange_codes`; ``index``
+            selects an exact exchange seq, ``rate`` a Bernoulli fraction).
     action: "raise" (default) | "hang" (sleep ``hang_s`` inside the timed
             chunk window — the watchdog's prey) | "corrupt" (scramble the
             cursor state via :func:`corrupt_pytree`).
@@ -150,7 +176,8 @@ class FaultRule:
     job:    fire only when this job id (or seed) is in the batch.
     key:    fire only when ``repr(pool key)`` contains this substring.
     rate:   firing probability when matched (seeded; 1.0 = always).
-    times:  total firing budget (None = unlimited).
+    times:  total firing budget (None = unlimited; ignored by the
+            engine-boundary sites, whose whole schedule is precompiled).
     """
 
     site: str
@@ -164,8 +191,11 @@ class FaultRule:
     times: Optional[int] = 1
     hang_s: float = 0.05
 
+    ENGINE_SITES = ("exchange_corrupt", "exchange_drop")
+
     def __post_init__(self):
-        if self.site not in ("build", "chunk", "exchange"):
+        if self.site not in ("build", "chunk", "exchange") + \
+                self.ENGINE_SITES:
             raise ValueError(f"unknown fault site {self.site!r}")
         if self.action not in ("raise", "hang", "corrupt"):
             raise ValueError(f"unknown fault action {self.action!r}")
@@ -244,6 +274,44 @@ class FaultPlan:
         exc = TransientFault if r.kind == "transient" else PermanentFault
         raise exc(f"injected {r.kind} fault at {site}"
                   f"[{'any' if index is None else index}]")
+
+    def exchange_codes(self, total: int) -> Optional[np.ndarray]:
+        """Compile the engine-boundary rules into a per-exchange code array.
+
+        Returns ``codes`` (total,) int32 with 0 = deliver, 1 = drop,
+        2 = corrupt — indexed by the engine's traced exchange sequence
+        number and consumed via ``engine.set_exchange_faults`` — or None
+        when the plan has no ``exchange_corrupt``/``exchange_drop`` rules.
+
+        Deterministic by construction: rate-based rules draw a Bernoulli
+        mask from a generator seeded by (plan seed, site) — independent of
+        host call order and identical on :meth:`replay` — and exact-index
+        rules pin single exchanges.  ``times`` budgets don't apply: the
+        whole schedule is compiled up front, not fired one event at a
+        time.  Corrupt wins where rules overlap (damage beats absence).
+        """
+        total = int(total)
+        codes = np.zeros(total, np.int32)
+        hit = False
+        for code, site in ((1, "exchange_drop"), (2, "exchange_corrupt")):
+            for r in self.rules:
+                if r.site != site:
+                    continue
+                hit = True
+                if r.index is not None:
+                    if 0 <= int(r.index) < total:
+                        codes[int(r.index)] = code
+                    continue
+                lo = int(r.after) if r.after is not None else 0
+                if r.rate >= 1.0:
+                    codes[lo:] = code
+                else:
+                    rng = np.random.default_rng((self.seed & 0x7FFFFFFF,
+                                                 code, lo))
+                    mask = rng.random(total) < float(r.rate)
+                    mask[:lo] = False
+                    codes[mask] = code
+        return codes if hit else None
 
     @property
     def fired(self) -> int:

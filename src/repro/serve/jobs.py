@@ -88,13 +88,17 @@ class JobSpec:
     deadline_s: Optional[float] = None   # wall budget from submit; enforced
     #                                      between chunks (DeadlineExceeded)
     checkpoint_every: Optional[int] = None  # sweeps between spool snapshots
+    # mesh degraded-mode policy: None | "fail_fast" | "stale_hold[:N]" |
+    # "freeze_boundary" (core.degrade.DegradePolicy.parse vocabulary);
+    # only meaningful for the mesh engines (dsim_dist / lattice)
+    degrade_policy: Optional[str] = None
 
 
 def pack_key(spec: JobSpec, problem_fp: str, schedule_fp: str) -> tuple:
     """Compatibility class for replica packing: jobs with equal keys can
     share one batched engine call (each job owns a replica slice)."""
     return (problem_fp, spec.engine, spec.precision, str(spec.sync_every),
-            schedule_fp)
+            schedule_fp, str(spec.degrade_policy))
 
 
 class Job:
@@ -145,6 +149,9 @@ class Job:
         # batching facts (filled when the batch starts)
         self.packed_with: int = 0
         self.pool_hit: Optional[bool] = None
+        # degraded-mode provenance (mesh engines with a degrade policy:
+        # the health monitor's report at batch end)
+        self.degrade: Optional[Dict[str, Any]] = None
 
     # -- streaming updates (caller holds the server lock) ----------------------
 
@@ -207,6 +214,7 @@ class Job:
             "bisect_runs": self.bisect_runs,
             "resumed_sweeps": self.resumed_sweeps,
             "restarted_sweeps": self.restarted_sweeps,
+            "degrade": None if self.degrade is None else dict(self.degrade),
         }
         return out
 

@@ -92,6 +92,7 @@ class Batch:
     ck_digest: Optional[str] = None   # its spool address (if spooled)
     ck_token: Any = None              # checkpoint lineage id
     last_ck_sweep: int = 0            # sweeps_done at the last checkpoint
+    degrade_harvested: bool = False   # health report copied to tenants once
 
     @property
     def started(self) -> bool:

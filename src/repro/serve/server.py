@@ -56,6 +56,7 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.annealing import ea_schedule
+from repro.core.degrade import DegradePolicy
 from repro.engines import make_engine
 from repro.engines.base import (LANE_WIDTH, MAX_LANE_WORDS, check_precision,
                                 lanes_of, quantize_record_points, spawn_seeds)
@@ -144,6 +145,15 @@ class SampleServer:
                                 "batches restored from a checkpoint"),
         "recovered_jobs": ("serve_recovered_jobs_total",
                            "jobs re-admitted by recover()"),
+        "exchange_integrity_failures": (
+            "serve_exchange_integrity_failures_total",
+            "corrupted/out-of-order boundary exchanges detected (and "
+            "NOT ingested) by the mesh engines' integrity layer"),
+        "stale_exchanges": ("serve_stale_exchanges_total",
+                            "boundary exchanges held at last-known-good "
+                            "ghosts under a degrade policy"),
+        "mesh_resyncs": ("serve_mesh_resyncs_total",
+                         "quarantined meshes resynced to ground truth"),
     }
 
     def __init__(self, *, pool_capacity: int = 8, max_queue_depth: int = 128,
@@ -316,12 +326,21 @@ class SampleServer:
                priority: int = 0, schedule=None,
                max_retries: Optional[int] = None,
                deadline_s: Optional[float] = None,
-               checkpoint_every: Optional[int] = None) -> str:
+               checkpoint_every: Optional[int] = None,
+               degrade_policy: Optional[str] = None) -> str:
         """Admit one annealing job; returns its job id (non-blocking).
 
         ``max_retries`` / ``deadline_s`` / ``checkpoint_every`` override
         the server-level fault-tolerance defaults for this job alone
         (deadline is wall time from submission, enforced between chunks).
+
+        ``degrade_policy`` arms the mesh engines' boundary-integrity
+        layer: ``"fail_fast"`` | ``"stale_hold[:N]"`` |
+        ``"freeze_boundary"`` (see :class:`repro.core.degrade
+        .DegradePolicy`).  Mesh engines (dsim_dist / lattice) only, and
+        the job's ``sync_every`` must be an integer (one checked
+        exchange per S sweeps).  The health monitor's end-of-run report
+        lands in the job's ``degrade`` result field.
         """
         if deadline_s is not None and deadline_s < 0:
             raise ValueError(f"deadline_s must be >= 0, got {deadline_s}")
@@ -343,6 +362,16 @@ class SampleServer:
         # unsupported (engine, precision) pair is a clear submit error,
         # not a failed job (let alone a downstream shape error)
         check_precision(engine, precision)
+        if degrade_policy is not None:
+            DegradePolicy.parse(degrade_policy)   # vocabulary check
+            if engine not in ("dsim_dist", "lattice"):
+                raise ValueError(
+                    "degrade_policy applies to the mesh engines "
+                    f"(dsim_dist, lattice), not {engine!r}")
+            if sync_every in ("phase", None):
+                raise ValueError(
+                    "degrade_policy needs an integer sync_every (one "
+                    f"checked exchange per S sweeps), got {sync_every!r}")
         r_cap = self.scheduler.replica_budget(precision)
         if replicas < 1 or replicas > r_cap:
             raise ValueError(
@@ -370,7 +399,8 @@ class SampleServer:
                        record_points=record_points, priority=int(priority),
                        schedule=schedule, max_retries=max_retries,
                        deadline_s=deadline_s,
-                       checkpoint_every=checkpoint_every)
+                       checkpoint_every=checkpoint_every,
+                       degrade_policy=degrade_policy)
         with self._lock:
             if len(self._queue) >= self.max_queue_depth:
                 self._count("rejected")
@@ -601,8 +631,12 @@ class SampleServer:
         return batch
 
     def _engine_key_builder(self, prob: _Problem, spec: JobSpec, r_exec: int):
+        # a degrade policy compiles a *different* chunk executable (the
+        # checked-exchange path with the health carry), so it is part of
+        # the pool identity — a degraded job never reuses (or poisons)
+        # the clean executable of its policy-free twin
         key = (prob.fingerprint, spec.engine, spec.precision, r_exec,
-               _hashable_kw(prob.engine_kw))
+               str(spec.degrade_policy), _hashable_kw(prob.engine_kw))
 
         def builder():
             if self.fault_plan is not None:
@@ -611,6 +645,8 @@ class SampleServer:
                 # exactly like real compile failures
                 self.fault_plan.apply("build", key=key)
             kw = dict(prob.engine_kw)
+            if spec.degrade_policy is not None:
+                kw["degrade"] = spec.degrade_policy
             if spec.engine == "lattice":
                 return make_engine("lattice", L=prob.L, seed=prob.seed,
                                    replicas=r_exec,
@@ -655,6 +691,18 @@ class SampleServer:
         else:
             state = handle.init_state(seed=lead.seed)
         sweeps = batch.jobs[0].total_sweeps
+        eng = getattr(handle, "eng", None)
+        if lead.degrade_policy is not None \
+                and getattr(eng, "health", None) is not None:
+            # engine-boundary fault site: compile the plan's
+            # exchange_corrupt/exchange_drop rules into one code per
+            # checked exchange and arm them on the engine — injection
+            # happens on the device-side wire, upstream of the
+            # integrity layer, not in the cursor hook
+            codes = None if self.fault_plan is None else \
+                self.fault_plan.exchange_codes(
+                    max(sweeps // int(lead.sync_every), 1))
+            eng.set_exchange_faults(codes)
         pts = self._record_points([j.spec.record_points for j in batch.jobs],
                                   sweeps)
         cursor = handle.start_recorded(state, batch.jobs[0].schedule, pts,
@@ -769,6 +817,23 @@ class SampleServer:
         batch.resume_ck = None
         return restored
 
+    def _harvest_degrade(self, batch: Batch):
+        """Under the lock, at batch retirement: copy the mesh health
+        monitor's report into every degraded tenant's ``degrade`` result
+        field and roll its totals into the server counter families."""
+        eng = getattr(getattr(batch, "handle", None), "eng", None)
+        health = getattr(eng, "health", None)
+        if health is None or batch.degrade_harvested:
+            return
+        batch.degrade_harvested = True
+        rep = health.report()
+        for j in batch.jobs:
+            if j.spec.degrade_policy is not None:
+                j.degrade = dict(rep)
+        self._count("exchange_integrity_failures", int(rep["detections"]))
+        self._count("stale_exchanges", int(rep["stale_exchanges"]))
+        self._count("mesh_resyncs", int(rep["resyncs"]))
+
     def _advance_batch(self, batch: Batch):
         cur = batch.cursor
         chunk_idx = batch.chunks_done
@@ -819,6 +884,7 @@ class SampleServer:
                     else:
                         alive = True
                 if not alive:
+                    self._harvest_degrade(batch)
                     if batch in self._batches:
                         self._batches.remove(batch)
                     if self._current is batch:
@@ -889,6 +955,7 @@ class SampleServer:
                      if j.status is JobStatus.RUNNING]
             batch.points_seen = len(rec.times)
             if cur.done or not alive:
+                self._harvest_degrade(batch)
                 for j in alive:
                     self._finalize(j, JobStatus.DONE)
                 if batch in self._batches:
@@ -969,6 +1036,11 @@ class SampleServer:
         kind = classify_error(err)
         now = time.perf_counter()
         with self._lock:
+            # a degraded mesh that escalated (fail_fast detection,
+            # stale_hold budget blown) still reports: harvest before the
+            # retry machinery tears the batch down, so the detections
+            # that caused this failure are counted and visible
+            self._harvest_degrade(batch)
             if batch in self._batches:
                 self._batches.remove(batch)
             if self._current is batch:
@@ -1037,6 +1109,7 @@ class SampleServer:
 
     def _fail_batch(self, batch: Batch, err: Exception):
         with self._lock:
+            self._harvest_degrade(batch)
             for j in batch.jobs:
                 if not j.status.terminal:
                     j.error = f"{type(err).__name__}: {err}"

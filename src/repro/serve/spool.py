@@ -30,8 +30,7 @@ import os
 import pickle
 from typing import Any, List, Optional, Tuple
 
-from repro.core.snapshot import (load_snapshot_file, snapshot_digest,
-                                 write_snapshot_file)
+from repro.core.snapshot import snapshot_digest, write_snapshot_file
 
 __all__ = ["CheckpointSpool"]
 
@@ -49,6 +48,7 @@ class CheckpointSpool:
         os.makedirs(self.root, exist_ok=True)
         self.puts = 0
         self.evictions = 0
+        self.corrupt_checkpoints = 0
 
     def _path(self, digest: str) -> str:
         return os.path.join(self.root, digest + _SUFFIX)
@@ -69,7 +69,30 @@ class CheckpointSpool:
         return digest
 
     def load(self, digest: str) -> Any:
-        return load_snapshot_file(self._path(digest))
+        """Load a record, verifying its bytes still hash to ``digest``.
+
+        A bit-flipped or truncated file (disk rot, torn write) is treated
+        as *missing* — counted in ``corrupt_checkpoints`` and removed so
+        the next scan doesn't re-verify it — rather than letting a random
+        ``UnpicklingError`` (or worse, a silently wrong record) escape
+        into the resume/retry path.  Callers already handle missing
+        checkpoints with a from-scratch restart."""
+        path = self._path(digest)
+        try:
+            with open(path, "rb") as f:
+                blob = f.read()
+        except OSError:
+            raise FileNotFoundError(path)
+        if snapshot_digest(blob) != digest:
+            self.corrupt_checkpoints += 1
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            raise FileNotFoundError(
+                f"checkpoint {digest} failed content-hash verification; "
+                "treated as missing")
+        return pickle.loads(blob)
 
     def remove(self, digest: str) -> bool:
         try:
@@ -132,4 +155,5 @@ class CheckpointSpool:
     def stats(self) -> dict:
         return {"root": self.root, "records": len(self),
                 "nbytes": self.nbytes(), "max_bytes": self.max_bytes,
-                "puts": self.puts, "evictions": self.evictions}
+                "puts": self.puts, "evictions": self.evictions,
+                "corrupt_checkpoints": self.corrupt_checkpoints}

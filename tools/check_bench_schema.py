@@ -42,7 +42,14 @@ REQUIRED_KEYS = REQUIRED_NUMBERS + [
     "dsim_dist_bitplane", "apt_icm_packed",
     # the multi-word fabric: per-lane rate across stacked word planes
     "bitplane_word_scaling",
+    # degraded-mode mesh: stale_hold under 0/10/30% dropped exchanges
+    "degraded_mesh",
 ]
+# the degraded arms the record must carry, in drop-fraction order; the
+# gates: every arm completes, effective_eta is finite-positive and
+# monotone non-increasing in the drop fraction, and exchanges dropped on
+# the wire are DETECTED (not silently ingested)
+DEGRADED_ARMS = ("0.0", "0.1", "0.3")
 SPREAD_FIELDS = ("best", "min", "median", "trimmed_median", "max", "reps")
 
 # every BENCH record carries a telemetry block from the obs subsystem:
@@ -99,6 +106,56 @@ def _check_telemetry(payload: dict, errors: list, which: str):
             errors.append("telemetry.overhead.overhead_fraction: expected "
                           f"a finite number, got {frac!r} — the chunk-"
                           "timer cost was never measured")
+
+
+def _check_degraded_mesh(payload: dict, errors: list):
+    deg = payload.get("degraded_mesh")
+    if not isinstance(deg, dict):
+        if "degraded_mesh" in payload:
+            errors.append(f"degraded_mesh: expected a dict, got {deg!r}")
+        return
+    _finite_positive("degraded_mesh.measured_eta_clean",
+                     deg.get("measured_eta_clean"), errors)
+    _finite_positive("degraded_mesh.eta_threshold",
+                     deg.get("eta_threshold"), errors)
+    arms = deg.get("arms")
+    if not isinstance(arms, dict):
+        errors.append(f"degraded_mesh.arms: expected a dict, got {arms!r}")
+        return
+    prev_eta = None
+    for frac in DEGRADED_ARMS:
+        arm = arms.get(frac)
+        if not isinstance(arm, dict):
+            errors.append(f"degraded_mesh.arms[{frac}]: missing arm — the "
+                          "degraded sweep did not cover this drop fraction")
+            continue
+        if arm.get("completed") is not True:
+            errors.append(f"degraded_mesh.arms[{frac}]: the job did not "
+                          "complete (stale_hold must finish at <= 30% "
+                          "dropped exchanges)")
+        eta = arm.get("effective_eta")
+        _finite_positive(f"degraded_mesh.arms[{frac}].effective_eta", eta,
+                         errors)
+        df = arm.get("delivered_fraction")
+        if not isinstance(df, (int, float)) or isinstance(df, bool) \
+                or not math.isfinite(df) or not 0.0 <= df <= 1.0:
+            errors.append(f"degraded_mesh.arms[{frac}].delivered_fraction: "
+                          f"expected a number in [0, 1], got {df!r}")
+        if isinstance(eta, (int, float)) and math.isfinite(eta):
+            if prev_eta is not None and eta > prev_eta:
+                errors.append(
+                    f"degraded_mesh.arms[{frac}]: effective_eta {eta} rose "
+                    f"above the previous arm's {prev_eta} — held exchanges "
+                    "must not raise the effective comm frequency")
+            prev_eta = eta
+        det = arm.get("detections")
+        if float(frac) > 0 and (not isinstance(det, int) or det < 1):
+            errors.append(f"degraded_mesh.arms[{frac}]: dropped exchanges "
+                          f"but detections={det!r} — the integrity layer "
+                          "ingested corrupt boundaries silently")
+        if float(frac) == 0 and det != 0:
+            errors.append(f"degraded_mesh.arms[{frac}]: detections={det!r} "
+                          "with zero injected faults (false positives)")
 
 
 def _finite_positive(name, v, errors):
@@ -221,6 +278,7 @@ def check(payload: dict) -> list:
                                      errors)
         _finite_positive("kernel_int8_vs_f32.speedup_int8_vs_f32",
                          k2k.get("speedup_int8_vs_f32"), errors)
+    _check_degraded_mesh(payload, errors)
     _check_telemetry(payload, errors, "flip_rate")
     return errors
 

@@ -1,0 +1,25 @@
+"""Static contract auditor for the p-bit machine's structural guarantees.
+
+The repo's headline contracts — couplings never leave local memory, devices
+exchange nothing but the declared packed boundary payloads, the integer
+inner loop contains zero floating point, counters are uint32-modular — are
+properties of the *lowered program*, not of any particular run.  This
+package checks them statically, in milliseconds, on a single-device host:
+
+* :mod:`repro.analyze.ir_rules` — Layer 1: walk every registered engine x
+  precision x (sync, degrade) configuration through ``trace_chunk`` (over
+  an ``AbstractMesh``, so mesh collectives appear without multi-device
+  backing) and assert the IR-A..IR-F contract rules on the jaxpr.
+* :mod:`repro.analyze.lint` — Layer 2: repo-specific AST rules over
+  ``src/`` (AL-RANDOM, AL-KEY, AL-LOCK, AL-EXCEPT).
+* :mod:`repro.analyze.deadcode` — tier-1 import-graph reachability
+  (AL-DEAD) and the dead-code report.
+* :mod:`repro.analyze.runner` — orchestration, waiver file handling, and
+  the report format shared by ``tools/repro_analyze.py``.
+
+Run the gate locally with ``python tools/repro_analyze.py`` (see the
+"Static analysis" section of DESIGN.md for the rule catalogue).
+"""
+
+from .findings import Finding, Waivers  # noqa: F401
+from .runner import run_ir, run_lint, run_deadcode, run_all  # noqa: F401

@@ -1,0 +1,236 @@
+"""Layer 1 — IR contract rules over traced chunk programs.
+
+Each rule takes a :class:`ChunkAudit` (one engine x precision x variant
+configuration traced through ``trace_chunk``) and returns findings.  The
+rule catalogue (also in DESIGN.md):
+
+  IR-A  no f32/f64 arithmetic in int8/bitplane chunk bodies
+  IR-B  wire dtype/payload: collectives carry only the declared payload
+        dtype and byte count; bitplane chunks never put 8-bit or unpacked
+        tensors on the wire; headers are uint32
+  IR-C  collective executions per chunk == the sync_every prediction
+  IR-D  no host callbacks inside jitted chunks
+  IR-E  chunk-crossing flip/seq counters are uint32-modular, never i32
+  IR-F  the fused_working_set_bytes VMEM model agrees with the traced
+        buffer sizes within a declared tolerance
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .findings import Finding
+from .jaxpr_utils import (aval_bytes, callback_eqns, collective_counts,
+                          collectives, eqn_bytes, first_float_arith,
+                          iter_eqns, outvar_producer, unwrap)
+
+__all__ = ["ChunkAudit", "audit_chunk", "IR_RULES"]
+
+# a chunk's working set must stay within this factor of the declared
+# VMEM model (IR-F): the traced jaxpr carries intermediates and padding
+# the per-site model folds into constants, so agreement is coarse — the
+# rule exists to catch order-of-magnitude drift (a forgotten buffer, a
+# silently materialized halo pool), not byte-exact accounting
+WORKING_SET_TOLERANCE = 4.0
+
+
+@dataclasses.dataclass
+class ChunkAudit:
+    """One traced configuration plus its declared contracts."""
+
+    engine: str
+    precision: str
+    variant: str                      # "sync=4" | "degrade" | ...
+    closed: object                    # ClosedJaxpr from trace_chunk
+    predicted: Dict[str, int]         # collective -> runtime executions
+    payload_dtypes: Tuple[np.dtype, ...]   # allowed payload operand dtypes
+    payload_bytes: Tuple[int, ...]    # allowed device-local payload sizes
+    counters: Dict[str, int]          # "flips"/"seq" -> flat outvar index
+    working_set: Optional[Tuple[int, Tuple[int, int, int]]] = None
+    # (model bytes, device brick) — lattice only
+
+    @property
+    def loc(self) -> str:
+        return f"ir:{self.engine}/{self.precision}/{self.variant}"
+
+    @property
+    def integer_body(self) -> bool:
+        return self.precision in ("int8", "bitplane")
+
+
+def _classify(audit: ChunkAudit):
+    """Split the chunk's collectives into (payload, header, reduction)."""
+    payload, header, reduction = [], [], []
+    for eq, m in collectives(audit.closed):
+        name = eq.primitive.name
+        if name in ("psum", "pmax", "pmin"):
+            reduction.append((eq, m))
+            continue
+        aval = eq.invars[0].aval
+        if tuple(aval.shape) == (2,) and aval.dtype == np.uint32:
+            header.append((eq, m))
+        else:
+            payload.append((eq, m))
+    return payload, header, reduction
+
+
+def rule_a_no_float_in_integer_body(audit: ChunkAudit) -> List[Finding]:
+    if not audit.integer_body:
+        return []
+    hit = first_float_arith(audit.closed)
+    if hit is None:
+        return []
+    eq, _ = hit
+    dts = [str(v.aval.dtype) for v in eq.invars if hasattr(v, "aval")]
+    return [Finding(
+        "IR-A", audit.loc,
+        f"float arithmetic `{eq.primitive.name}` ({', '.join(dts)}) inside "
+        f"the {audit.precision} chunk body",
+        "keep the integer inner loop float-free: move the computation to "
+        "LUT build time or gate it on the f32/cmft path")]
+
+
+def rule_b_wire_format(audit: ChunkAudit) -> List[Finding]:
+    out: List[Finding] = []
+    payload, header, _ = _classify(audit)
+    for eq, _ in payload:
+        aval = eq.invars[0].aval
+        if aval.dtype not in audit.payload_dtypes:
+            allowed = "/".join(str(np.dtype(d)) for d in audit.payload_dtypes)
+            out.append(Finding(
+                "IR-B", audit.loc,
+                f"`{eq.primitive.name}` puts {aval.dtype}{tuple(aval.shape)} "
+                f"on the wire; this configuration declares {allowed}",
+                "publish the declared wire format and convert AFTER the "
+                "collective (see boundary_payload())"))
+            continue
+        got = aval_bytes(aval)
+        if audit.payload_bytes and got not in audit.payload_bytes:
+            out.append(Finding(
+                "IR-B", audit.loc,
+                f"`{eq.primitive.name}` ships {got} B/device but the "
+                f"declared boundary payload is "
+                f"{sorted(set(audit.payload_bytes))} B",
+                "the collective operand must be exactly the declared "
+                "boundary slice — no widened or duplicated tensors"))
+    for eq, _ in header:
+        if eq.invars[0].aval.dtype != np.uint32:
+            out.append(Finding(
+                "IR-B", audit.loc,
+                f"integrity header via `{eq.primitive.name}` is not uint32",
+                "headers are [seq, checksum] uint32 pairs"))
+    if audit.precision == "bitplane":
+        for eq, _ in collectives(audit.closed):
+            aval = eq.invars[0].aval
+            if aval.dtype.itemsize == 1:
+                out.append(Finding(
+                    "IR-B", audit.loc,
+                    f"8-bit tensor ({aval.dtype}) on the wire in a bitplane "
+                    f"chunk via `{eq.primitive.name}`",
+                    "bitplane chunks ship packed uint32 word planes only"))
+    return out
+
+
+def rule_c_collective_count(audit: ChunkAudit) -> List[Finding]:
+    got = collective_counts(audit.closed)
+    if got == audit.predicted:
+        return []
+    return [Finding(
+        "IR-C", audit.loc,
+        f"collective executions per chunk {got} != sync_every prediction "
+        f"{audit.predicted}",
+        "an exchange was added/removed without updating the staleness "
+        "schedule (or the prediction in analyze/configs.py)")]
+
+
+def rule_d_no_callbacks(audit: ChunkAudit) -> List[Finding]:
+    hits = callback_eqns(audit.closed)
+    if not hits:
+        return []
+    names = sorted({eq.primitive.name for eq, _ in hits})
+    return [Finding(
+        "IR-D", audit.loc,
+        f"host callback(s) {names} inside the jitted chunk",
+        "chunks must be pure device programs; hoist host I/O to the "
+        "recording driver")]
+
+
+def rule_e_modular_counters(audit: ChunkAudit) -> List[Finding]:
+    out: List[Finding] = []
+    for name, idx in audit.counters.items():
+        jx = unwrap(audit.closed)
+        aval = jx.outvars[idx].aval
+        if name == "seq":
+            if aval.dtype != np.uint32:
+                out.append(Finding(
+                    "IR-E", audit.loc,
+                    f"exchange counter `seq` (output {idx}) is "
+                    f"{aval.dtype}, not uint32",
+                    "sequence counters advance in uint32"))
+            continue
+        prim, eq = outvar_producer(audit.closed, idx)
+        ok = False
+        if prim == "bitcast_convert_type" and eq is not None:
+            src = eq.invars[0].aval
+            ok = (src.dtype == np.uint32 and aval.dtype == np.int32)
+        elif aval.dtype == np.uint32:
+            ok = True
+        if not ok:
+            out.append(Finding(
+                "IR-E", audit.loc,
+                f"counter `{name}` (output {idx}, {aval.dtype}) is "
+                f"published by `{prim}` — not the uint32-modular "
+                "accumulate + bitcast pattern",
+                "accumulate flip deltas in uint32 and publish via "
+                "core.pbit.flips_publish (int32 is only the storage view)"))
+    return out
+
+
+def rule_f_working_set(audit: ChunkAudit) -> List[Finding]:
+    if audit.working_set is None:
+        return []
+    model, brick = audit.working_set
+    # the device-local working set: every buffer entering the shard_map
+    # body plus the widest intermediate the body materializes
+    body = None
+    for eq, _ in iter_eqns(audit.closed):
+        if eq.primitive.name == "shard_map":
+            body = unwrap(eq.params["jaxpr"])
+            break
+    if body is None:
+        return [Finding(
+            "IR-F", audit.loc,
+            "no shard_map body found to measure the working set against",
+            "fused chunks run device-local inside shard_map")]
+    invar_bytes = sum(aval_bytes(v.aval) for v in body.invars)
+    widest = max((eqn_bytes(eq) for eq, _ in iter_eqns(body)), default=0)
+    actual = invar_bytes + widest
+    ratio = actual / float(model) if model else float("inf")
+    if 1.0 / WORKING_SET_TOLERANCE <= ratio <= WORKING_SET_TOLERANCE:
+        return []
+    return [Finding(
+        "IR-F", audit.loc,
+        f"traced working set {actual} B vs fused_working_set_bytes model "
+        f"{model} B for brick {brick} (ratio {ratio:.2f}, tolerance "
+        f"x{WORKING_SET_TOLERANCE})",
+        "re-derive _per_site_bytes or find the buffer the model forgot")]
+
+
+IR_RULES: Tuple[Callable[[ChunkAudit], List[Finding]], ...] = (
+    rule_a_no_float_in_integer_body,
+    rule_b_wire_format,
+    rule_c_collective_count,
+    rule_d_no_callbacks,
+    rule_e_modular_counters,
+    rule_f_working_set,
+)
+
+
+def audit_chunk(audit: ChunkAudit) -> List[Finding]:
+    out: List[Finding] = []
+    for rule in IR_RULES:
+        out.extend(rule(audit))
+    return out

@@ -1,0 +1,179 @@
+"""Jaxpr walking primitives for the IR contract rules.
+
+Everything here is dtype/shape bookkeeping over a ``ClosedJaxpr`` obtained
+from ``trace_chunk`` — no device, no compile.  The recursion understands
+the three nesting styles that actually occur in the engines' chunk
+programs: call-like primitives whose param is a ``ClosedJaxpr`` (pjit,
+scan, while, cond, remat), ``shard_map`` whose param is a *raw* ``Jaxpr``,
+and list-valued params (cond branches).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["unwrap", "iter_eqns", "collective_counts", "outvar_producer",
+           "eqn_bytes", "aval_bytes", "COLLECTIVE_PRIMS",
+           "FLOAT_ARITH_PRIMS", "CALLBACK_PRIMS", "first_float_arith",
+           "callback_eqns", "collectives", "shard_body_cost"]
+
+COLLECTIVE_PRIMS = frozenset({
+    "all_gather", "ppermute", "psum", "pmax", "pmin", "all_to_all",
+    "reduce_scatter", "psum_scatter", "pbroadcast", "axis_index"}
+    - {"axis_index"})
+
+# float arithmetic the int8/bitplane chunk bodies must not contain; data
+# movement (gather/concat/select/transpose), conversions, bitcasts, and
+# comparisons are allowed — they don't do float math, they move or
+# reinterpret values
+FLOAT_ARITH_PRIMS = frozenset({
+    "add", "sub", "mul", "div", "rem", "neg", "max", "min", "abs", "sign",
+    "exp", "log", "log1p", "expm1", "tanh", "logistic", "erf", "erf_inv",
+    "rsqrt", "sqrt", "cbrt", "pow", "integer_pow", "atan2", "sin", "cos",
+    "tan", "dot_general", "reduce_sum", "reduce_max", "reduce_min",
+    "reduce_prod", "cumsum", "cumprod", "cumlogsumexp", "add_any",
+    "floor", "ceil", "round", "nextafter", "clamp",
+})
+
+CALLBACK_PRIMS = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "python_callback",
+    "callback", "outside_call", "host_callback_call",
+})
+
+# shape-only ops the counter-producer resolution may look through
+_PASSTHROUGH = frozenset({
+    "reshape", "squeeze", "broadcast_in_dim", "transpose", "copy",
+    "expand_dims", "rev",
+})
+
+
+def unwrap(j):
+    """ClosedJaxpr | Jaxpr -> Jaxpr."""
+    return j.jaxpr if hasattr(j, "jaxpr") and hasattr(j.jaxpr, "eqns") else j
+
+
+def _sub_jaxprs(eqn):
+    for v in eqn.params.values():
+        for vv in (v if isinstance(v, (list, tuple)) else (v,)):
+            if hasattr(vv, "eqns"):
+                yield vv
+            elif hasattr(vv, "jaxpr") and hasattr(vv.jaxpr, "eqns"):
+                yield vv.jaxpr
+
+
+def iter_eqns(jaxpr, mult: int = 1) -> Iterator[Tuple[object, int]]:
+    """Yield ``(eqn, runtime_multiplier)`` over the whole nested program.
+
+    The multiplier folds in enclosing scan lengths, so summing it per
+    primitive gives the number of *executions* per chunk call — the
+    quantity the sync_every staleness contract (IR-C) predicts.
+    """
+    for eq in unwrap(jaxpr).eqns:
+        yield eq, mult
+        m2 = mult
+        if eq.primitive.name == "scan":
+            m2 = mult * int(eq.params.get("length", 1))
+        elif eq.primitive.name == "while":
+            m2 = mult  # trip count is dynamic; treat as one (engines
+            #            never put collectives inside while loops)
+        for sub in _sub_jaxprs(eq):
+            yield from iter_eqns(sub, m2)
+
+
+def collectives(jaxpr):
+    """[(eqn, mult)] for every collective in the program."""
+    return [(eq, m) for eq, m in iter_eqns(jaxpr)
+            if eq.primitive.name in COLLECTIVE_PRIMS]
+
+
+def collective_counts(jaxpr) -> dict:
+    """{primitive name: runtime executions per chunk call}."""
+    out: dict = {}
+    for eq, m in collectives(jaxpr):
+        out[eq.primitive.name] = out.get(eq.primitive.name, 0) + m
+    return out
+
+
+def first_float_arith(jaxpr) -> Optional[tuple]:
+    """First (eqn, mult) doing f32/f64 arithmetic, else None."""
+    for eq, m in iter_eqns(jaxpr):
+        if eq.primitive.name not in FLOAT_ARITH_PRIMS:
+            continue
+        avals = [v.aval for v in list(eq.invars) + list(eq.outvars)
+                 if hasattr(v, "aval")]
+        if any(np.issubdtype(a.dtype, np.floating) for a in avals
+               if hasattr(a, "dtype")):
+            return eq, m
+    return None
+
+
+def callback_eqns(jaxpr):
+    return [(eq, m) for eq, m in iter_eqns(jaxpr)
+            if eq.primitive.name in CALLBACK_PRIMS]
+
+
+def aval_bytes(aval) -> int:
+    return int(np.prod(aval.shape, dtype=np.int64)) * aval.dtype.itemsize
+
+
+def eqn_bytes(eqn) -> int:
+    """Total operand + result bytes of one equation."""
+    tot = 0
+    for v in list(eqn.invars) + list(eqn.outvars):
+        if hasattr(v, "aval") and hasattr(v.aval, "shape"):
+            tot += aval_bytes(v.aval)
+    return tot
+
+
+def outvar_producer(jaxpr, index: int):
+    """Resolve the primitive that produces output ``index`` of the program.
+
+    Descends through call-like primitives (pjit/shard_map/remat: output j
+    maps to inner outvar j of the sub-jaxpr; scan/while: carries map
+    positionally) and looks through shape-only ops.  Returns
+    ``(primitive_name, eqn | None)``; ``("<input>", None)`` if the output
+    is a passed-through input, ``("<literal>", None)`` for constants.
+    """
+    j = unwrap(jaxpr)
+    var = j.outvars[index]
+    seen = 0
+    while True:
+        seen += 1
+        if seen > 200:
+            return "<cycle>", None
+        if not hasattr(var, "count") and hasattr(var, "val"):
+            return "<literal>", None
+        if any(var is v for v in j.invars) \
+                or any(var is v for v in getattr(j, "constvars", ())):
+            return "<input>", None
+        producer = None
+        for eq in reversed(j.eqns):
+            if any(var is v for v in eq.outvars):
+                producer = eq
+                break
+        if producer is None:
+            return "<unknown>", None
+        name = producer.primitive.name
+        pos = [i for i, v in enumerate(producer.outvars) if v is var][0]
+        subs = list(_sub_jaxprs(producer))
+        if name in ("pjit", "closed_call", "core_call", "remat", "remat2",
+                    "custom_jvp_call", "custom_vjp_call", "shard_map",
+                    "scan", "while"):
+            if not subs:
+                return name, producer
+            # scan/while outputs are [carries..., ys...] in both the eqn
+            # and the body jaxpr, so the same position works; call-like
+            # primitives map outputs 1:1
+            j = unwrap(subs[0])
+            if pos >= len(j.outvars):
+                return name, producer
+            var = j.outvars[pos]
+            continue
+        if name in _PASSTHROUGH and producer.invars:
+            var = producer.invars[0]
+            if not hasattr(var, "aval"):
+                return "<literal>", None
+            continue
+        return name, producer

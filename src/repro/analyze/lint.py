@@ -1,0 +1,377 @@
+"""Layer 2 — repo-specific AST lint over ``src/``.
+
+Four rules, each born from a real defect class in this repo's history:
+
+  AL-RANDOM  host randomness / wall-clock calls inside traced functions
+             (they freeze at trace time and silently repeat per call)
+  AL-KEY     unhashable values (arrays, lists, dicts) used in cache/pool
+             keys — the PR-5 engine-pool crash class; keys must be
+             hashable by construction (digest arrays first)
+  AL-LOCK    attributes annotated ``# guarded_by: <lock>`` accessed
+             outside ``with self.<lock>:`` / ``# lock_held:`` methods —
+             the PR-8 ``stats()`` torn-read class
+  AL-EXCEPT  silent ``except: pass`` around collective/exchange calls
+             (swallowing a boundary failure desynchronizes the mesh)
+
+Pure ``ast`` + ``tokenize`` — no imports of the scanned code, so the lint
+can never be broken by an import-time crash in the target.
+"""
+
+from __future__ import annotations
+
+import ast
+import io
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .findings import Finding
+
+__all__ = ["lint_file", "lint_tree", "LINT_RULES"]
+
+_TRACE_ENTRY_FUNCS = {
+    "scan", "while_loop", "fori_loop", "cond", "switch", "vmap", "pmap",
+    "jit", "shard_map", "checkpoint", "remat", "custom_jvp", "custom_vjp",
+    "associative_scan",
+}
+
+_BANNED_IN_TRACE = {
+    # host RNG: traces to a constant, not a random stream
+    "np.random", "numpy.random", "random.random", "random.randint",
+    "random.choice", "random.shuffle", "random.uniform", "random.gauss",
+    "random.sample", "random.randrange",
+    # wall clock: freezes at trace time
+    "time.time", "time.perf_counter", "time.monotonic", "time.time_ns",
+    "time.perf_counter_ns", "datetime.now", "datetime.datetime.now",
+    "datetime.utcnow",
+}
+
+_ARRAY_CONSTRUCTORS = {
+    "np.array", "np.asarray", "np.zeros", "np.ones", "np.arange",
+    "np.empty", "np.full", "numpy.array", "numpy.asarray",
+    "jnp.array", "jnp.asarray", "jnp.zeros", "jnp.ones", "jnp.arange",
+    "jax.numpy.array", "jax.numpy.asarray",
+}
+
+_KEYED_CONTAINER_MARKERS = ("cache", "pool", "memo")
+
+_COLLECTIVE_CALL_MARKERS = (
+    "all_gather", "ppermute", "psum", "pmax", "pmin", "all_to_all",
+    "exchange",
+)
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'np.random.rand' for Attribute/Name chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _comments_by_line(source: str) -> Dict[int, str]:
+    out: Dict[int, str] = {}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                out[tok.start[0]] = tok.string
+    except tokenize.TokenizeError:
+        pass
+    return out
+
+
+# ---------------------------------------------------------------- AL-RANDOM
+
+def _traced_functions(tree: ast.Module) -> Set[ast.AST]:
+    """Function defs that run under JAX tracing.
+
+    A function is traced if it is decorated with jit/vmap/etc. (directly
+    or via functools.partial) or passed by name as an argument to a
+    trace-entry call (jax.lax.scan, shard_map, ...).
+    """
+    defs: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, []).append(node)
+
+    traced: Set[ast.AST] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                name = _dotted(target) or ""
+                leaf = name.rsplit(".", 1)[-1]
+                if leaf in _TRACE_ENTRY_FUNCS:
+                    traced.add(node)
+                elif leaf == "partial" and isinstance(dec, ast.Call):
+                    inner = [_dotted(a) or "" for a in dec.args]
+                    if any(n.rsplit(".", 1)[-1] in _TRACE_ENTRY_FUNCS
+                           for n in inner):
+                        traced.add(node)
+        elif isinstance(node, ast.Call):
+            name = _dotted(node.func) or ""
+            if name.rsplit(".", 1)[-1] not in _TRACE_ENTRY_FUNCS:
+                continue
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                if isinstance(arg, ast.Name) and arg.id in defs:
+                    traced.update(defs[arg.id])
+
+    # tracing is transitive into lexically nested defs
+    closure: Set[ast.AST] = set()
+    for fn in traced:
+        for sub in ast.walk(fn):
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                closure.add(sub)
+    return closure
+
+
+def rule_random(path: str, tree: ast.Module, source: str,
+                comments: Dict[int, str]) -> List[Finding]:
+    out: List[Finding] = []
+    for fn in _traced_functions(tree):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _dotted(node.func) or ""
+            if name in _BANNED_IN_TRACE or any(
+                    name.startswith(b + ".") for b in
+                    ("np.random", "numpy.random")):
+                out.append(Finding(
+                    "AL-RANDOM", f"{path}:{node.lineno}",
+                    f"`{name}` inside traced function `{fn.name}` — the "
+                    "value freezes at trace time",
+                    "thread a jax PRNG key / LFSR state through the "
+                    "computation, or hoist the call to the host driver"))
+    return out
+
+
+# ------------------------------------------------------------------- AL-KEY
+
+def _array_like_names(fn: ast.AST) -> Set[str]:
+    """Names assigned from array constructors within this function."""
+    names: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            cname = _dotted(node.value.func) or ""
+            if cname in _ARRAY_CONSTRUCTORS:
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        names.add(t.id)
+    return names
+
+
+def _key_exprs(node: ast.AST) -> Iterable[Tuple[ast.AST, ast.AST]]:
+    """(container expr, key expr) for cache/pool-style keyed stores."""
+    if isinstance(node, ast.Assign):
+        for t in node.targets:
+            if isinstance(t, ast.Subscript):
+                yield t.value, t.slice
+    elif isinstance(node, ast.Subscript) and isinstance(node.ctx, ast.Load):
+        yield node.value, node.slice
+    elif isinstance(node, ast.Call):
+        name = _dotted(node.func) or ""
+        if name.rsplit(".", 1)[-1] in ("get", "setdefault", "pop") \
+                and isinstance(node.func, ast.Attribute) and node.args:
+            yield node.func.value, node.args[0]
+
+
+def _is_keyed_container(expr: ast.AST) -> bool:
+    name = (_dotted(expr) or "").lower()
+    return any(m in name for m in _KEYED_CONTAINER_MARKERS)
+
+
+def _unhashable_part(key: ast.AST, array_names: Set[str]) -> Optional[str]:
+    parts = list(key.elts) if isinstance(key, ast.Tuple) else [key]
+    for p in parts:
+        if isinstance(p, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                          ast.DictComp, ast.SetComp)):
+            return type(p).__name__.lower()
+        if isinstance(p, ast.Call):
+            cname = _dotted(p.func) or ""
+            if cname in _ARRAY_CONSTRUCTORS:
+                return cname
+        if isinstance(p, ast.Name) and p.id in array_names:
+            return f"array-valued `{p.id}`"
+    return None
+
+
+def rule_key(path: str, tree: ast.Module, source: str,
+             comments: Dict[int, str]) -> List[Finding]:
+    out: List[Finding] = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.Module)):
+            continue
+        array_names = _array_like_names(fn)
+        body = fn.body if isinstance(fn, ast.Module) else [fn]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                for container, key in _key_exprs(node):
+                    if not _is_keyed_container(container):
+                        continue
+                    bad = _unhashable_part(key, array_names)
+                    if bad is None:
+                        continue
+                    out.append(Finding(
+                        "AL-KEY", f"{path}:{node.lineno}",
+                        f"cache/pool key into "
+                        f"`{_dotted(container) or '<expr>'}` contains "
+                        f"unhashable {bad}",
+                        "build keys hashable by construction — digest "
+                        "arrays (see serve._hashable_kw) and use tuples, "
+                        "never lists/dicts/raw ndarrays"))
+    return out
+
+
+# ------------------------------------------------------------------ AL-LOCK
+
+def _guard_decls(cls: ast.ClassDef, comments: Dict[int, str]):
+    """(guarded: attr -> lock, aliases: attr -> lock) from __init__."""
+    guarded: Dict[str, str] = {}
+    aliases: Dict[str, str] = {}
+    for meth in cls.body:
+        if not (isinstance(meth, ast.FunctionDef)
+                and meth.name == "__init__"):
+            continue
+        for node in ast.walk(meth):
+            if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+                continue
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            cm = comments.get(node.lineno, "")
+            for t in targets:
+                if not (isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"):
+                    continue
+                if "guarded_by:" in cm:
+                    guarded[t.attr] = cm.split("guarded_by:")[1].split()[0]
+                elif "lock_alias:" in cm:
+                    aliases[t.attr] = cm.split("lock_alias:")[1].split()[0]
+    return guarded, aliases
+
+
+def _with_lock_spans(meth: ast.FunctionDef, locks: Set[str]):
+    """Line spans of ``with self.<lock>:`` blocks (lexical containment)."""
+    spans = []
+    for node in ast.walk(meth):
+        if not isinstance(node, ast.With):
+            continue
+        for item in node.items:
+            ce = item.context_expr
+            if isinstance(ce, ast.Attribute) \
+                    and isinstance(ce.value, ast.Name) \
+                    and ce.value.id == "self" and ce.attr in locks:
+                spans.append((node.lineno, node.end_lineno))
+    return spans
+
+
+def rule_lock(path: str, tree: ast.Module, source: str,
+              comments: Dict[int, str]) -> List[Finding]:
+    out: List[Finding] = []
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        guarded, aliases = _guard_decls(cls, comments)
+        if not guarded:
+            continue
+        for meth in cls.body:
+            if not isinstance(meth, ast.FunctionDef) \
+                    or meth.name == "__init__":
+                continue
+            held: Set[str] = set()
+            for ln in range(meth.lineno, min(meth.body[0].lineno,
+                                             meth.lineno + 3) + 1):
+                cm = comments.get(ln, "")
+                if "lock_held:" in cm:
+                    held.add(cm.split("lock_held:")[1].split()[0])
+            for node in ast.walk(meth):
+                if not (isinstance(node, ast.Attribute)
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id == "self"
+                        and node.attr in guarded):
+                    continue
+                lock = guarded[node.attr]
+                ok_locks = {lock} | {a for a, l in aliases.items()
+                                     if l == lock}
+                if lock in held or held & set(
+                        a for a, l in aliases.items() if l == lock):
+                    continue
+                spans = _with_lock_spans(meth, ok_locks)
+                if any(lo <= node.lineno <= hi for lo, hi in spans):
+                    continue
+                out.append(Finding(
+                    "AL-LOCK", f"{path}:{node.lineno}",
+                    f"`self.{node.attr}` (guarded_by: {lock}) accessed in "
+                    f"`{cls.name}.{meth.name}` outside `with "
+                    f"self.{lock}:`",
+                    f"take the lock, or annotate the method "
+                    f"`# lock_held: {lock}` if every caller holds it"))
+    return out
+
+
+# ---------------------------------------------------------------- AL-EXCEPT
+
+def _is_silent(handler: ast.ExceptHandler) -> bool:
+    for stmt in handler.body:
+        if isinstance(stmt, ast.Pass) or isinstance(stmt, ast.Continue):
+            continue
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value,
+                                                     ast.Constant):
+            continue  # docstring / Ellipsis
+        return False
+    return True
+
+
+def rule_except(path: str, tree: ast.Module, source: str,
+                comments: Dict[int, str]) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Try):
+            continue
+        calls = []
+        for sub in node.body:
+            for n in ast.walk(sub):
+                if isinstance(n, ast.Call):
+                    name = (_dotted(n.func) or "").rsplit(".", 1)[-1]
+                    if any(m in name for m in _COLLECTIVE_CALL_MARKERS):
+                        calls.append(name)
+        if not calls:
+            continue
+        for handler in node.handlers:
+            if _is_silent(handler):
+                out.append(Finding(
+                    "AL-EXCEPT", f"{path}:{handler.lineno}",
+                    f"silent except around collective/exchange call(s) "
+                    f"{sorted(set(calls))}",
+                    "a swallowed boundary failure desynchronizes the "
+                    "mesh — record it in the health state or re-raise"))
+    return out
+
+
+LINT_RULES = (rule_random, rule_key, rule_lock, rule_except)
+
+
+def lint_file(path: Path, rel: str) -> List[Finding]:
+    source = path.read_text()
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as e:
+        return [Finding("AL-PARSE", f"{rel}:{e.lineno or 0}",
+                        f"syntax error: {e.msg}", "")]
+    comments = _comments_by_line(source)
+    out: List[Finding] = []
+    for rule in LINT_RULES:
+        out.extend(rule(rel, tree, source, comments))
+    return out
+
+
+def lint_tree(root: Path, subdir: str = "src") -> List[Finding]:
+    out: List[Finding] = []
+    for path in sorted((root / subdir).rglob("*.py")):
+        out.extend(lint_file(path, str(path.relative_to(root))))
+    return out

@@ -1,0 +1,67 @@
+"""Orchestration for the contract auditor: sections, waivers, exit code.
+
+``run_all`` is what ``tools/repro_analyze.py`` (and CI's ``analyze``
+step) calls: IR audit + AST lint + dead-code report, filtered through
+the committed waiver file, rendered as one report whose exit code gates.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from .findings import Finding, Waivers, render_report
+
+__all__ = ["run_ir", "run_lint", "run_deadcode", "run_all",
+           "DEFAULT_WAIVER_FILE", "repo_root"]
+
+DEFAULT_WAIVER_FILE = "tools/analyze_waivers.txt"
+
+
+def repo_root() -> Path:
+    """The repo checkout containing this source tree."""
+    return Path(__file__).resolve().parents[3]
+
+
+def run_ir() -> List[Finding]:
+    """Layer 1: trace every engine x precision x variant and audit it."""
+    from .configs import build_audits, trace_failures
+    from .ir_rules import audit_chunk
+
+    audits, failures = build_audits()
+    out: List[Finding] = trace_failures(failures)
+    for a in audits:
+        out.extend(audit_chunk(a))
+    return out
+
+
+def run_lint(root: Optional[Path] = None) -> List[Finding]:
+    """Layer 2: AST rules over src/."""
+    from .lint import lint_tree
+    return lint_tree(root or repo_root())
+
+
+def run_deadcode(root: Optional[Path] = None) -> List[Finding]:
+    from . import deadcode
+    return deadcode.run(root or repo_root())
+
+
+def run_all(root: Optional[Path] = None,
+            sections: Optional[List[str]] = None,
+            waiver_file: Optional[str] = None,
+            json_path: Optional[str] = None):
+    """(report text, exit code).  ``sections`` defaults to all three."""
+    root = root or repo_root()
+    wanted = sections or ["ir", "lint", "deadcode"]
+    results: Dict[str, List[Finding]] = {}
+    for name in wanted:
+        if name == "ir":
+            results["ir"] = run_ir()
+        elif name == "lint":
+            results["lint"] = run_lint(root)
+        elif name == "deadcode":
+            results["deadcode"] = run_deadcode(root)
+        else:
+            raise ValueError(f"unknown section {name!r}")
+    waivers = Waivers.load(root / (waiver_file or DEFAULT_WAIVER_FILE))
+    return render_report(results, waivers, json_path=json_path)

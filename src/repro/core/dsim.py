@@ -319,7 +319,10 @@ class DSIMEngine:
         else:
             s = jnp.take_along_axis(rng, slots, axis=1)
             s = lfsr_next(s)
-            r = lfsr_uniform(s)
+            # the int8 accept draws raw bits from s; materializing the f32
+            # uniform too would put dead float math in the integer body
+            # (contract rule IR-A)
+            r = None if int8 else lfsr_uniform(s)
             rng = rng.at[self._rows, slots].set(s)
         old = jnp.take_along_axis(m, slots, axis=1)
         if int8:
@@ -353,19 +356,26 @@ class DSIMEngine:
                    sync: SyncSpec, lut=None) -> DSIMState:
         """S sweeps then one boundary exchange (or per-phase / none)."""
         m, ghosts, macc, rng = state.m, state.ghosts, state.macc, state.rng
-        flips = state.flips
+        # flip odometer arithmetic is uint32-modular (contract rule IR-E);
+        # the int32 state field is just the pytree/snapshot dtype view
+        fl_u = jax.lax.bitcast_convert_type(state.flips, jnp.uint32)
         S = betas_S.shape[0]
 
         def body(carry, beta):
-            m, ghosts, macc, rng, flips = carry
+            m, ghosts, macc, rng, fl_u = carry
             m, ghosts, rng, f = self._sweep(m, ghosts, rng, beta,
                                             sync_phase=(sync == "phase"),
                                             lut=lut)
-            macc = macc + m.astype(jnp.float32)
-            return (m, ghosts, macc, rng, flips + f), None
+            if self.mode == "cmft":
+                # dsim mode never reads the window accumulator — keeping
+                # the add here would put dead f32 arithmetic in the int8
+                # chunk body (contract rule IR-A)
+                macc = macc + m.astype(jnp.float32)
+            return (m, ghosts, macc, rng, fl_u + f.astype(jnp.uint32)), None
 
-        (m, ghosts, macc, rng, flips), _ = jax.lax.scan(
-            body, (m, ghosts, macc, rng, flips), betas_S)
+        (m, ghosts, macc, rng, fl_u), _ = jax.lax.scan(
+            body, (m, ghosts, macc, rng, fl_u), betas_S)
+        flips = jax.lax.bitcast_convert_type(fl_u, jnp.int32)
         if sync == "phase" or sync is None:
             pass  # ghosts already handled / never refreshed
         elif self.mode == "cmft":

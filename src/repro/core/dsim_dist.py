@@ -54,8 +54,8 @@ from .dsim import PartitionedProblem, DSIMState
 from .degrade import (DegradePolicy, MeshHealthMonitor, health_init,
                       wire_checksum)
 from .annealing import ArraySchedule, beta_row_indices, beta_table
-from .pbit import (FixedPoint, bitplane_planes, field_bound, lfsr_init,
-                   lfsr_next, lfsr_uniform, lut_accept, quantize,
+from .pbit import (FixedPoint, bitplane_planes, field_bound, flips_publish,
+                   lfsr_init, lfsr_next, lfsr_uniform, lut_accept, quantize,
                    quantize_couplings, threshold_lut_cached)
 from .packing import pack_pm1, unpack_pm1, pad_to_multiple, pack_lanes, \
     unpack_lanes, lane_coords
@@ -211,7 +211,8 @@ class DistDSIMEngine:
         m = jnp.where(jax.random.bernoulli(sub, 0.5, (p.K, R, p.n_max)), 1, -1)
         m = m.astype(jnp.int8)
         if self.rng_kind == "philox":
-            rng = jax.random.split(key, p.K * R).reshape(p.K, R)
+            # legacy uint32[2] keys: split returns (K*R, 2) raw key rows
+            rng = jax.random.split(key, p.K * R).reshape(p.K, R, 2)
         else:
             rng = lfsr_init(p.K * R * p.n_max, seed).reshape(p.K, R, p.n_max)
         ghosts = self._exchange_host(m)
@@ -342,7 +343,9 @@ class DistDSIMEngine:
         else:
             s = rng[:, slots]
             s = lfsr_next(s)
-            r = lfsr_uniform(s)
+            # int8 accepts draw raw bits from s — skip the f32 uniform so
+            # the integer body stays float-free (contract rule IR-A)
+            r = None if int8 else lfsr_uniform(s)
             rng = rng.at[:, slots].set(s)
         old = m[:, slots]
         if int8:
@@ -412,7 +415,11 @@ class DistDSIMEngine:
                 m, rng, f = self._phase_block(c, m, ghosts, rng, beta,
                                               consts, lut)
                 flips = flips + f.astype(flips.dtype)
-            macc = macc + m.astype(jnp.float32)
+            if self.mode == "cmft":
+                # dsim mode never reads the window accumulator — keeping
+                # the add there would put dead f32 arithmetic in the int8
+                # chunk body (contract rule IR-A)
+                macc = macc + m.astype(jnp.float32)
             return (m, ghosts, macc, rng, flips), None
 
         (m, ghosts, macc, rng, flips), _ = jax.lax.scan(
@@ -477,11 +484,11 @@ class DistDSIMEngine:
                 pool.reshape(K, lanes, self.b_pad), jnp.uint32)
             sent = bnd.astype(jnp.float32)
         else:
-            bnd = m[:, bnd_slots].astype(jnp.float32)
+            # int8 boundary states ARE the wire (1 B/site, the declared
+            # boundary_payload); widening to f32 happens AFTER the gather
+            bnd = m[:, bnd_slots]                 # (R, b_pad) int8
             pool = jax.lax.all_gather(bnd, self.axis, tiled=True)
-            wire = jax.lax.bitcast_convert_type(
-                pool.reshape(K, lanes, self.b_pad).astype(jnp.float32),
-                jnp.uint32)
+            wire = pool.reshape(K, lanes, self.b_pad)
             sent = bnd
         # header: my exchange counter + the checksum of what I published
         hdr = jnp.stack([seq, wire_checksum(sent)])
@@ -494,7 +501,9 @@ class DistDSIMEngine:
                 seq < total,
                 codes[jnp.clip(seq, 0, total - 1).astype(jnp.int32)], 0)
             corrupt, drop = code == 2, code == 1
-            wire = jnp.where(corrupt, wire ^ jnp.uint32(0x00400000), wire)
+            flip = jnp.asarray(2 if wire.dtype == jnp.int8 else 0x00400000,
+                               wire.dtype)
+            wire = jnp.where(corrupt, wire ^ flip, wire)
             wire = jnp.where(drop, jnp.zeros_like(wire), wire)
             hdrs = jnp.where(drop, jnp.full_like(hdrs, 0xFFFFFFFF), hdrs)
         ck_k = jax.vmap(wire_checksum)(wire)                     # (K,)
@@ -511,8 +520,12 @@ class DistDSIMEngine:
         maxst = jnp.maximum(maxst, stale.max())
         seq = seq + jnp.uint32(1)
         # ingest per source: held sources keep last-known-good ghosts
-        vals = wire if word \
-            else jax.lax.bitcast_convert_type(wire, jnp.float32)
+        if word:
+            vals = wire
+        elif wire.dtype == jnp.int8:
+            vals = wire.astype(jnp.float32)       # widen off the wire
+        else:
+            vals = jax.lax.bitcast_convert_type(wire, jnp.float32)
         pool2 = vals.transpose(1, 0, 2).reshape(lanes, -1)
         ghosts_new = pool2[:, consts["ghost_src_pool"]]
         bad_entry = bad_k[consts["ghost_src_part"]]              # (g_max,)
@@ -567,9 +580,7 @@ class DistDSIMEngine:
             (m, ghosts, macc, rng, local), _ = jax.lax.scan(
                 it, (m, ghosts, macc, rng, local), betas)
             total = jax.lax.psum(local, self.axis)
-            flips = jax.lax.bitcast_convert_type(
-                jax.lax.bitcast_convert_type(flips_in, jnp.uint32) + total,
-                jnp.int32)
+            flips = flips_publish(flips_in, total)
             return m[None], ghosts[None], macc[None], rng[None], flips
 
         in_specs = (spec_m, spec_m, spec_m, spec_m, P(), P(), cspec)
@@ -625,9 +636,7 @@ class DistDSIMEngine:
             (m, ghosts, macc, rng, local, health), _ = jax.lax.scan(
                 it, (m, ghosts, macc, rng, local, health), betas)
             total = jax.lax.psum(local, self.axis)
-            flips = jax.lax.bitcast_convert_type(
-                jax.lax.bitcast_convert_type(flips_in, jnp.uint32) + total,
-                jnp.int32)
+            flips = flips_publish(flips_in, total)
             return m[None], ghosts[None], macc[None], rng[None], flips, \
                 health
 
@@ -806,11 +815,15 @@ class DistDSIMEngine:
                 "bytes_per_site_all_chains": float(R), "chains": R,
                 "pack_compute": "none"}
 
-    # -- dry-run hook --------------------------------------------------------------------
+    # -- dry-run / audit hooks -----------------------------------------------------------
 
-    def lower_chunk(self, iters: int = 4, S: int = 4, sync: SyncSpec = 4):
-        """Lower (not run) one sampling chunk — used by the launch dry-run."""
-        run = self._run_chunk(iters, S, sync)
+    def _chunk_args(self, iters: int, S: int, sync: SyncSpec,
+                    degrade: bool = False, freeze: bool = False,
+                    has_codes: bool = False):
+        """(runner, abstract args) for one sampling chunk — shared by the
+        lowering dry-run and the static contract auditor's tracer.  With
+        ``degrade`` the checked-exchange runner (health carry, optional
+        fault-code operand) is selected instead of the plain one."""
         p, R = self.p, self.replicas
 
         def sds(x, shard):
@@ -834,7 +847,7 @@ class DistDSIMEngine:
             )
         else:
             rng_t = jax.random.split(jax.random.PRNGKey(0),
-                                     p.K * R).reshape(p.K, R) \
+                                     p.K * R).reshape(p.K, R, 2) \
                 if self.rng_kind == "philox" else \
                 jnp.zeros((p.K, R, p.n_max), jnp.uint32)
             st = DSIMState(
@@ -849,12 +862,38 @@ class DistDSIMEngine:
                 flips=sds(flips, self._repl),
             )
         consts = jax.tree.map(lambda x: sds(x, self._shard), self._consts)
-        if self.precision != "f32":
-            rows = jax.ShapeDtypeStruct((iters, S), jnp.int32,
-                                        sharding=self._repl)
-            lut = jax.ShapeDtypeStruct((1, 2 * self.f_max + 1), jnp.uint32,
-                                       sharding=self._repl)
-            return run.lower(st, rows, consts, lut)
-        betas = jax.ShapeDtypeStruct((iters, S), jnp.float32,
+        sched_dt = jnp.float32 if self.precision == "f32" else jnp.int32
+        sched = jax.ShapeDtypeStruct((iters, S), sched_dt,
                                      sharding=self._repl)
-        return run.lower(st, betas, consts)
+        lut_opt = () if self.precision == "f32" else (
+            jax.ShapeDtypeStruct((1, 2 * self.f_max + 1), jnp.uint32,
+                                 sharding=self._repl),)
+        if not degrade:
+            return self._run_chunk(iters, S, sync), \
+                (st, sched, consts) + lut_opt
+        health = tuple(
+            jax.ShapeDtypeStruct(np.shape(h), np.asarray(h).dtype,
+                                 sharding=self._repl)
+            for h in health_init(p.K))
+        codes_opt = (jax.ShapeDtypeStruct((8,), jnp.uint32,
+                                          sharding=self._repl),) \
+            if has_codes else ()
+        run = self._run_chunk_deg(iters, S, freeze, has_codes)
+        return run, (st, sched, consts, health) + codes_opt + lut_opt
+
+    def lower_chunk(self, iters: int = 4, S: int = 4, sync: SyncSpec = 4):
+        """Lower (not run) one sampling chunk — used by the launch dry-run."""
+        run, args = self._chunk_args(iters, S, sync)
+        return run.lower(*args)
+
+    def trace_chunk(self, iters: int = 4, S: int = 4, sync: SyncSpec = 4,
+                    degrade: bool = False, freeze: bool = False,
+                    has_codes: bool = False):
+        """Trace (not lower) one sampling chunk and return the jitted
+        runner's Traced object, whose ``.jaxpr`` the static contract
+        auditor walks.  Unlike :meth:`lower_chunk` this works over an
+        ``AbstractMesh`` — collective dtype/count contracts are auditable
+        on a single-device host, no multi-device subprocess needed."""
+        run, args = self._chunk_args(iters, S, sync, degrade=degrade,
+                                     freeze=freeze, has_codes=has_codes)
+        return run.trace(*args)

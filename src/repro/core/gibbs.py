@@ -134,11 +134,15 @@ class GibbsEngine:
 
     def sweep(self, state: GibbsState, beta) -> GibbsState:
         m, rng = state.m, state.rng
-        E, flips = state.E, state.flips
+        E = state.E
+        # flip odometer arithmetic is uint32-modular (contract rule IR-E);
+        # the int32 state field is just the pytree/snapshot dtype view
+        fl_u = jax.lax.bitcast_convert_type(state.flips, jnp.uint32)
         for c in range(len(self._nodes)):
             m, rng, dE, f = self._phase(c, m, rng, beta)
             E = E + dE
-            flips = flips + f.astype(jnp.int32)
+            fl_u = fl_u + f.astype(jnp.uint32)
+        flips = jax.lax.bitcast_convert_type(fl_u, jnp.int32)
         return GibbsState(m=m, rng=rng, E=E, sweep=state.sweep + 1, flips=flips)
 
     def _sweep_maybe_batched(self, batched: bool, per_replica_beta: bool):

@@ -31,13 +31,14 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .annealing import ArraySchedule, beta_row_indices, beta_table
-from .degrade import DegradePolicy, MeshHealthMonitor, wire_checksum
+from .degrade import (DegradePolicy, MeshHealthMonitor, health_init,
+                      wire_checksum)
 from .lattice import LatticeProblem
 from .packing import (LANE_WIDTH, pack_lanes, pack_pm1, unpack_lanes,
                       unpack_pm1, pad_to_multiple)
 from .pbit import (FixedPoint, LUT_SELECT_MAX_WIDTH, bitplane_planes,
-                   field_bound, lfsr_init, quantize_couplings,
-                   threshold_lut_cached)
+                   field_bound, flips_publish, lfsr_init,
+                   quantize_couplings, threshold_lut_cached)
 from repro.compat import shard_map
 from repro.engines.base import (RecordedCursor, check_lanes,
                                 run_recorded_driver, spawn_seeds)
@@ -633,13 +634,13 @@ class LatticeDSIM:
             xlo, xhi, ylo, yhi, zlo, zhi = halos
             halos = (xlo[:, 0], xhi[:, 0], ylo[:, :, 0, :], yhi[:, :, 0, :],
                      zlo[:, :, :, 0], zhi[:, :, :, 0])
-            local = jnp.zeros((R,), jnp.int32)
+            local = jnp.zeros((R,), jnp.uint32)
 
             def it(carry, b):
                 m, s, halos, fl = carry
                 m, s, halos, f = self._iteration_block(m, s, halos, b,
                                                        masks, h, w6, lut)
-                return (m, s, halos, fl + f), None
+                return (m, s, halos, fl + f.astype(jnp.uint32)), None
             (m, s, halos, local), _ = jax.lax.scan(
                 it, (m, s, halos, local), sched)
             flips = jax.lax.psum(local, axes_all) if axes_all else local
@@ -670,7 +671,7 @@ class LatticeDSIM:
             return LatticeState(
                 m=m, s=s, halos=halos,
                 sweep=state.sweep + sched.shape[0] * sched.shape[1],
-                flips=state.flips + fl)
+                flips=flips_publish(state.flips, fl))
 
         self._chunk_cache[key] = run
         return run
@@ -694,7 +695,7 @@ class LatticeDSIM:
             xlo, xhi, ylo, yhi, zlo, zhi = halos
             halos = (xlo[:, 0], xhi[:, 0], ylo[:, :, 0, :], yhi[:, :, 0, :],
                      zlo[:, :, :, 0], zhi[:, :, :, 0])
-            local = jnp.zeros((R,), jnp.int32)
+            local = jnp.zeros((R,), jnp.uint32)
 
             def it(carry, b):
                 mw, s, halos, fl = carry
@@ -702,7 +703,7 @@ class LatticeDSIM:
                     mw, s, b, masks_w, signs, nz, base, halos, lut,
                     impl=self.impl)
                 halos = self._exchange_block_w(mw)
-                return (mw, s, halos, fl + f), None
+                return (mw, s, halos, fl + f.astype(jnp.uint32)), None
             (mw, s, halos, local), _ = jax.lax.scan(
                 it, (mw, s, halos, local), sched)
             flips = jax.lax.psum(local, axes_all) if axes_all else local
@@ -729,7 +730,7 @@ class LatticeDSIM:
             return BitplaneLatticeState(
                 m=mw, s=s, halos=halos,
                 sweep=state.sweep + sched.shape[0] * sched.shape[1],
-                flips=state.flips + fl)
+                flips=flips_publish(state.flips, fl))
 
         self._chunk_cache[key] = run
         return run
@@ -755,7 +756,7 @@ class LatticeDSIM:
             xlo, xhi, ylo, yhi, zlo, zhi = halos
             halos = (xlo[:, 0], xhi[:, 0], ylo[:, :, 0, :], yhi[:, :, 0, :],
                      zlo[:, :, :, 0], zhi[:, :, :, 0])
-            local = jnp.zeros((R,), jnp.int32)
+            local = jnp.zeros((R,), jnp.uint32)
 
             def it(carry, b):
                 m, s, halos, fl, health = carry
@@ -763,7 +764,7 @@ class LatticeDSIM:
                                             lut)
                 halos, health = self._exchange_block_checked(
                     m, halos, health, codes, freeze)
-                return (m, s, halos, fl + f, health), None
+                return (m, s, halos, fl + f.astype(jnp.uint32), health), None
             (m, s, halos, local, health), _ = jax.lax.scan(
                 it, (m, s, halos, local, health), sched)
             flips = jax.lax.psum(local, axes_all) if axes_all else local
@@ -794,7 +795,7 @@ class LatticeDSIM:
             st = LatticeState(
                 m=m, s=s, halos=halos,
                 sweep=state.sweep + sched.shape[0] * sched.shape[1],
-                flips=state.flips + fl)
+                flips=flips_publish(state.flips, fl))
             return st, health
 
         self._chunk_cache[key] = run
@@ -819,7 +820,7 @@ class LatticeDSIM:
             xlo, xhi, ylo, yhi, zlo, zhi = halos
             halos = (xlo[:, 0], xhi[:, 0], ylo[:, :, 0, :], yhi[:, :, 0, :],
                      zlo[:, :, :, 0], zhi[:, :, :, 0])
-            local = jnp.zeros((R,), jnp.int32)
+            local = jnp.zeros((R,), jnp.uint32)
 
             def it(carry, b):
                 mw, s, halos, fl, health = carry
@@ -828,7 +829,7 @@ class LatticeDSIM:
                     impl=self.impl)
                 halos, health = self._exchange_block_checked(
                     mw, halos, health, codes, freeze)
-                return (mw, s, halos, fl + f, health), None
+                return (mw, s, halos, fl + f.astype(jnp.uint32), health), None
             (mw, s, halos, local, health), _ = jax.lax.scan(
                 it, (mw, s, halos, local, health), sched)
             flips = jax.lax.psum(local, axes_all) if axes_all else local
@@ -860,7 +861,7 @@ class LatticeDSIM:
             st = BitplaneLatticeState(
                 m=mw, s=s, halos=halos,
                 sweep=state.sweep + sched.shape[0] * sched.shape[1],
-                flips=state.flips + fl)
+                flips=flips_publish(state.flips, fl))
             return st, health
 
         self._chunk_cache[key] = run
@@ -1115,15 +1116,27 @@ class LatticeDSIM:
 
     # -- dry-run hook -----------------------------------------------------------------------
 
-    def lower_chunk(self, iters: int = 2, S: int = 4, lut_rows: int = 10):
+    def _chunk_args(self, iters: int, S: int, lut_rows: int,
+                    degrade: bool = False, freeze: bool = False,
+                    has_codes: bool = False):
+        """(runner, abstract args) for one sampling chunk — shared by the
+        lowering dry-run and the static contract auditor's tracer.  With
+        ``degrade`` the checked-exchange runner (per-face health carry,
+        optional fault-code operand) is selected instead of the plain one."""
         def sds(x, spec):
             return jax.ShapeDtypeStruct(x.shape, x.dtype,
                                         sharding=self._shard(spec))
         p = self.p
         X, Y, Z = p.dims
         R = self.replicas
+        health = tuple(
+            jax.ShapeDtypeStruct(np.shape(h), np.asarray(h).dtype,
+                                 sharding=self._shard(P()))
+            for h in health_init(6)) if degrade else None
+        codes_opt = (jax.ShapeDtypeStruct((8,), jnp.uint32,
+                                          sharding=self._shard(P())),) \
+            if has_codes else ()
         if self.precision == "bitplane":
-            run = self._run_chunk_bp(iters, S)
             st = BitplaneLatticeState(
                 m=jax.ShapeDtypeStruct((self.words, X, Y, Z), jnp.uint32,
                                        sharding=self._shard(self.spec_m)),
@@ -1146,8 +1159,12 @@ class LatticeDSIM:
             base = sds(self.base_w, self.spec_flat)
             lut = jax.ShapeDtypeStruct((lut_rows, 2 * self.f_max + 1),
                                        jnp.uint32, sharding=self._shard(P()))
-            return run.lower(st, rows, masks_w, signs, nz, base, lut)
-        run = self._run_chunk(iters, S)
+            if degrade:
+                run = self._run_chunk_bp_deg(iters, S, freeze, has_codes)
+                return run, (st, rows, masks_w, signs, nz, base, lut,
+                             health) + codes_opt
+            return self._run_chunk_bp(iters, S), \
+                (st, rows, masks_w, signs, nz, base, lut)
         st = LatticeState(
             m=jax.ShapeDtypeStruct((R, X, Y, Z), jnp.int8,
                                    sharding=self._shard(self.spec_m)),
@@ -1162,15 +1179,39 @@ class LatticeDSIM:
         )
         masks = sds(p.masks, self.spec_masks)
         if self.precision == "int8":
-            rows = jax.ShapeDtypeStruct((iters, S), jnp.int32,
-                                        sharding=self._shard(P()))
-            h_q = sds(self.h_q, self.spec_flat)
-            w6_q = tuple(sds(w, self.spec_flat) for w in self.w6_q)
-            lut = jax.ShapeDtypeStruct((lut_rows, 2 * self.f_max + 1),
-                                       jnp.uint32, sharding=self._shard(P()))
-            return run.lower(st, rows, masks, h_q, w6_q, lut)
-        betas = jax.ShapeDtypeStruct((iters, S), jnp.float32,
-                                     sharding=self._shard(P()))
-        h = sds(p.h, self.spec_flat)
-        w6 = tuple(sds(w, self.spec_flat) for w in p.w6)
-        return run.lower(st, betas, masks, h, w6)
+            sched = jax.ShapeDtypeStruct((iters, S), jnp.int32,
+                                         sharding=self._shard(P()))
+            hh = sds(self.h_q, self.spec_flat)
+            ww = tuple(sds(w, self.spec_flat) for w in self.w6_q)
+            lut_opt = (jax.ShapeDtypeStruct((lut_rows, 2 * self.f_max + 1),
+                                            jnp.uint32,
+                                            sharding=self._shard(P())),)
+        else:
+            sched = jax.ShapeDtypeStruct((iters, S), jnp.float32,
+                                         sharding=self._shard(P()))
+            hh = sds(p.h, self.spec_flat)
+            ww = tuple(sds(w, self.spec_flat) for w in p.w6)
+            lut_opt = ()
+        if degrade:
+            run = self._run_chunk_deg(iters, S, False, freeze, has_codes)
+            return run, (st, sched, masks, hh, ww, health) \
+                + codes_opt + lut_opt
+        return self._run_chunk(iters, S), \
+            (st, sched, masks, hh, ww) + lut_opt
+
+    def lower_chunk(self, iters: int = 2, S: int = 4, lut_rows: int = 10):
+        """Lower (not run) one sampling chunk — used by the launch dry-run."""
+        run, args = self._chunk_args(iters, S, lut_rows)
+        return run.lower(*args)
+
+    def trace_chunk(self, iters: int = 2, S: int = 4, lut_rows: int = 10,
+                    degrade: bool = False, freeze: bool = False,
+                    has_codes: bool = False):
+        """Trace (not lower) one sampling chunk and return the jitted
+        runner's Traced object, whose ``.jaxpr`` the static contract
+        auditor walks.  Unlike :meth:`lower_chunk` this works over an
+        ``AbstractMesh`` — halo dtype/count contracts are auditable on a
+        single-device host, no multi-device subprocess needed."""
+        run, args = self._chunk_args(iters, S, lut_rows, degrade=degrade,
+                                     freeze=freeze, has_codes=has_codes)
+        return run.trace(*args)

@@ -23,7 +23,22 @@ __all__ = ["FixedPoint", "quantize", "pbit_update", "lfsr_init", "lfsr_next",
            "lfsr_uniform", "S41", "S43", "S46",
            "LFSR_UNIFORM_BITS", "quantize_couplings", "field_bound",
            "threshold_lut", "threshold_lut_cached", "lut_accept",
-           "bitplane_planes"]
+           "bitplane_planes", "flips_publish"]
+
+
+def flips_publish(flips_i32: jnp.ndarray, delta_u32: jnp.ndarray):
+    """Fold a uint32-modular flip delta into the int32 odometer view.
+
+    Flip odometers are carried across chunk boundaries as int32 (pytree/
+    snapshot dtype contract) but their arithmetic must be mod-2^32 in the
+    unsigned domain: accumulate in uint32, add into the bitcast view, and
+    bitcast back.  In-range totals are bit-identical to a plain int32 add;
+    past 2^31 the unsigned view keeps the exact modular count the recording
+    driver folds host-side.  The static contract auditor (rule IR-E)
+    requires every published counter to end in this u32 -> i32 bitcast.
+    """
+    u = jax.lax.bitcast_convert_type(flips_i32, jnp.uint32)
+    return jax.lax.bitcast_convert_type(u + delta_u32, jnp.int32)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -239,6 +239,13 @@ class _Handle:
     def lower_chunk(self, iters: int = 2, S: int = 4):
         return self.eng.lower_chunk(iters=iters, S=S)
 
+    def trace_chunk(self, iters: int = 2, S: int = 4, **kw):
+        """Traced (not lowered) chunk for the static contract auditor:
+        returns the jitted runner's Traced object.  Mesh engines accept
+        ``sync=``/``degrade=``/``freeze=``/``has_codes=`` passthroughs and
+        trace over ``AbstractMesh`` without any device backing."""
+        return self.eng.trace_chunk(iters=iters, S=S, **kw)
+
     def __repr__(self):
         return (f"<engine {self.name!r} n={self.n_sites} "
                 f"R={self.replicas}>")
@@ -267,21 +274,46 @@ class _GibbsHandle(_BatchedStateHandle):
     def global_spins(self, state) -> jnp.ndarray:
         return jnp.atleast_2d(state.m)
 
-    def lower_chunk(self, iters: int = 2, S: int = 4):
+    def _chunk_fn_args(self, iters: int, S: int):
         st = self.init_state(seed=0)
         batched = self.eng.is_batched(st)
         betas = jnp.zeros((iters * S,), jnp.float32)
-        return self.eng._run_chunk(iters * S, batched).lower(st, betas)
+        return self.eng._run_chunk(iters * S, batched), (st, betas)
+
+    def lower_chunk(self, iters: int = 2, S: int = 4):
+        run, args = self._chunk_fn_args(iters, S)
+        return run.lower(*args)
+
+    def trace_chunk(self, iters: int = 2, S: int = 4, **kw):
+        run, args = self._chunk_fn_args(iters, S)
+        return run.trace(*args)
 
 
 class _DSIMHandle(_BatchedStateHandle):
     name = "dsim"
 
-    def lower_chunk(self, iters: int = 2, S: int = 4):
+    def _chunk_fn_args(self, iters: int, S: int, sync: SyncSpec = None):
         st = self.init_state(seed=0)
         batched = self.eng.is_batched(st)
+        sync = S if sync is None else sync
+        if self.eng.precision == "int8":
+            from repro.core.annealing import beta_table
+            table = beta_table(np.ones((iters * S,), np.float32))
+            lut = self.eng._lut_for(table)
+            rows = jnp.zeros((iters, S), jnp.int32)
+            return self.eng._run_chunk(iters, S, sync, batched), \
+                (st, rows, lut)
         betas = jnp.zeros((iters, S), jnp.float32)
-        return self.eng._run_chunk(iters, S, S, batched).lower(st, betas)
+        return self.eng._run_chunk(iters, S, sync, batched), (st, betas)
+
+    def lower_chunk(self, iters: int = 2, S: int = 4):
+        run, args = self._chunk_fn_args(iters, S, S)
+        return run.lower(*args)
+
+    def trace_chunk(self, iters: int = 2, S: int = 4, sync: SyncSpec = None,
+                    **kw):
+        run, args = self._chunk_fn_args(iters, S, sync)
+        return run.trace(*args)
 
 
 class _DistHandle(_Handle):

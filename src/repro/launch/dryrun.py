@@ -1,9 +1,9 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
-mesh) cell on placeholder devices, prove memory fits, and extract the
-roofline terms (FLOPs / bytes / collective schedule).
+"""Multi-pod dry-run: lower + compile the paper's 1M-p-bit sampling chunk
+on placeholder devices, prove memory fits, and extract the roofline terms
+(FLOPs / bytes / collective schedule).
 
 MUST be run as its own process (the XLA_FLAGS line above has to execute
 before any jax import — which is why it is the first statement of this
@@ -11,210 +11,23 @@ module and why nothing here is imported by conftest or the benchmarks).
 
 Usage:
   python -m repro.launch.dryrun --all
-  python -m repro.launch.dryrun --arch deepseek-67b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --arch ising-1m --multi-pod
 """
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-
 from repro.configs import get_config, list_configs
-from repro.configs.base import SHAPES, ShapeCell
-from repro.models.lm import build_model
-from repro.train.optimizer import AdamW
-from repro.train.train_step import TrainState, make_train_step
-from repro.serve.serve_step import (make_prefill_step, make_decode_step,
-                                    cache_len_for)
-from repro.sharding.rules import (params_shardings, batch_shardings,
-                                  cache_shardings, train_state_shardings,
-                                  batch_axes)
+from repro.configs.base import ShapeCell
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import roofline, HW
+from repro.launch.roofline import roofline
 
 REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                           "reports", "dryrun")
-
-
-# ---------------------------------------------------------------------------
-# input specs
-# ---------------------------------------------------------------------------
-
-
-def _sds(shape, dtype, mesh, spec):
-    return jax.ShapeDtypeStruct(shape, dtype,
-                                sharding=NamedSharding(mesh, spec))
-
-
-def input_specs(cfg, cell: ShapeCell, mesh) -> Dict[str, Any]:
-    """ShapeDtypeStruct stand-ins for every model input of this cell."""
-    B, S = cell.global_batch, cell.seq_len
-    bax = batch_axes(mesh)
-    bspec = P(bax if B % int(np.prod([mesh.shape[a] for a in bax])) == 0
-              else None)
-    tok = lambda s: _sds((B, s), jnp.int32, mesh, bspec)
-    if cell.kind == "train":
-        if cfg.encdec:
-            half = S // 2
-            return {"frames": _sds((B, half, cfg.d_model), jnp.bfloat16,
-                                   mesh, bspec),
-                    "tokens": tok(half), "targets": tok(half),
-                    "mask": tok(half)}
-        if cfg.input_kind == "embeds3":
-            return {"embeds": _sds((B, S, cfg.d_model), jnp.bfloat16, mesh,
-                                   bspec),
-                    "positions3": _sds((3, B, S), jnp.int32, mesh,
-                                       P(None, bspec[0] if bspec else None)),
-                    "targets": tok(S), "mask": tok(S)}
-        return {"tokens": tok(S), "targets": tok(S), "mask": tok(S)}
-    if cell.kind == "prefill":
-        if cfg.encdec:
-            half = S // 2
-            return {"frames": _sds((B, half, cfg.d_model), jnp.bfloat16,
-                                   mesh, bspec),
-                    "tokens": tok(half)}
-        if cfg.input_kind == "embeds3":
-            return {"embeds": _sds((B, S, cfg.d_model), jnp.bfloat16, mesh,
-                                   bspec),
-                    "positions3": _sds((3, B, S), jnp.int32, mesh,
-                                       P(None, bspec[0] if bspec else None))}
-        return {"tokens": tok(S)}
-    # decode: one new token against a cache of seq_len
-    return {"tokens": tok(1)}
-
-
-def _count_params(params, cfg):
-    """(total, active, non_embed_active) parameter counts."""
-    tot = act = 0
-    flat = jax.tree_util.tree_flatten_with_path(params)[0]
-    for path, leaf in flat:
-        ps = jax.tree_util.keystr(path)
-        n = int(np.prod(leaf.shape))
-        tot += n
-        if "embed" in ps:
-            continue
-        if "moe" in ps and any(k in ps for k in ("'wi'", "'wg'", "'wo'")):
-            act += n * cfg.moe_top_k / max(cfg.moe_experts, 1)
-        else:
-            act += n
-    return tot, act
-
-
-def _shard_bytes(tree_of_sds):
-    """Per-device bytes of a sharded SDS tree (leaf bytes / shard count)."""
-    total = 0.0
-    for leaf in jax.tree.leaves(tree_of_sds):
-        n = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
-        sh = leaf.sharding
-        nshards = sh.num_devices // len(sh.device_set) if False else None
-        # number of distinct shards = product of mesh axes used in the spec
-        used = [a for axes in sh.spec if axes is not None
-                for a in ((axes,) if isinstance(axes, str) else axes)]
-        k = int(np.prod([sh.mesh.shape[a] for a in used])) if used else 1
-        total += n / k
-    return total
-
-
-# ---------------------------------------------------------------------------
-# cell lowering
-# ---------------------------------------------------------------------------
-
-
-def lower_lm_cell(cfg, cell: ShapeCell, mesh):
-    model = build_model(cfg)
-    key = jax.random.PRNGKey(0)
-    params_sds = jax.eval_shape(model.init, key)
-    pshard = params_shardings(params_sds, mesh, cfg.fsdp)
-    params_sds = jax.tree.map(
-        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
-        params_sds, pshard)
-    batch = input_specs(cfg, cell, mesh)
-    extras = {"param_bytes_per_dev": _shard_bytes(params_sds)}
-
-    if cell.kind == "train":
-        opt = AdamW(int8_state=cfg.opt_8bit)
-        opt_sds = jax.eval_shape(opt.init, params_sds)
-        state_sds = TrainState(params=params_sds, opt=opt_sds)
-        sshard = train_state_shardings(state_sds, mesh, cfg.fsdp,
-                                       cfg.opt_8bit)
-        state_sds = jax.tree.map(
-            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
-            state_sds, sshard)
-        extras["state_bytes_per_dev"] = _shard_bytes(state_sds)
-        # microbatch so per-device live activations stay bounded:
-        # ~4k tokens per device per microbatch (B splits must divide);
-        # chosen so the layer-scan residuals (n_layers x ubatch x d_model
-        # bf16) of the deepest arch fit HBM — see EXPERIMENTS.md §Perf H4
-        dshards = int(np.prod([mesh.shape[a] for a in batch_axes(mesh)]))
-        tokens_per_dev = cell.global_batch * cell.seq_len // dshards
-        ga = max(1, tokens_per_dev // 4096)
-        while cell.global_batch % (ga * dshards) != 0 and ga > 1:
-            ga //= 2
-        extras["grad_accum"] = ga
-        if ga > 1:
-            # pre-split microbatches: (ga, B/ga, ...) with batch dim 1
-            def presplit(l):
-                spec = l.sharding.spec
-                shape = (ga, l.shape[0] // ga) + l.shape[1:]
-                if "positions3" in str(spec):
-                    pass
-                return jax.ShapeDtypeStruct(
-                    shape, l.dtype,
-                    sharding=NamedSharding(mesh, P(None, *spec)))
-            batch = {k: (presplit(v) if k != "positions3" else
-                         jax.ShapeDtypeStruct(
-                             (ga, 3, v.shape[1] // ga) + v.shape[2:], v.dtype,
-                             sharding=NamedSharding(mesh, P(None, *v.sharding.spec))))
-                     for k, v in batch.items()}
-        step = make_train_step(model, opt, grad_accum=ga)
-        lowered = jax.jit(step, donate_argnums=0).lower(state_sds, batch)
-        return lowered, extras
-
-    # serving cells
-    B = cell.global_batch
-    s_cache = cache_len_for(cfg, cell.seq_len)
-    cache_sds = jax.eval_shape(
-        lambda: model.init_cache(B, s_cache, dtype=jnp.bfloat16))
-    cshard = cache_shardings(cache_sds, mesh)
-    cache_sds = jax.tree.map(
-        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
-        cache_sds, cshard)
-    extras["cache_bytes_per_dev"] = _shard_bytes(cache_sds)
-
-    if cell.kind == "prefill":
-        prefill = make_prefill_step(model, cfg)
-        lowered = jax.jit(prefill, donate_argnums=2).lower(
-            params_sds, batch, cache_sds)
-        return lowered, extras
-
-    # decode: enc-dec needs the encoder output as a standing input
-    decode = make_decode_step(model, cfg)
-    bax = batch_axes(mesh)
-    bspec = P(bax if B % int(np.prod([mesh.shape[a] for a in bax])) == 0
-              else None)
-    kwargs = {}
-    if cfg.encdec:
-        enc = _sds((B, cell.seq_len // 2, cfg.d_model), jnp.bfloat16, mesh,
-                   bspec)
-        lowered = jax.jit(decode, donate_argnums=2).lower(
-            params_sds, batch["tokens"], cache_sds, enc)
-    elif cfg.input_kind == "embeds3":
-        p3 = _sds((3, B, 1), jnp.int32, mesh,
-                  P(None, bspec[0] if bspec else None))
-        lowered = jax.jit(decode, donate_argnums=2).lower(
-            params_sds, batch["tokens"], cache_sds, None, p3)
-    else:
-        lowered = jax.jit(decode, donate_argnums=2).lower(
-            params_sds, batch["tokens"], cache_sds)
-    return lowered, extras
 
 
 def lower_ising_cell(mesh, multi_pod: bool, L: int = 100,
@@ -235,45 +48,16 @@ def lower_ising_cell(mesh, multi_pod: bool, L: int = 100,
     return lowered, extras
 
 
-def model_flops_estimate(cfg, cell: ShapeCell) -> Optional[float]:
-    if cfg.family == "ising":
-        return None
-    model = build_model(cfg)
-    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    tot, act = _count_params(params_sds, cfg)
-    if cell.kind == "train":
-        tokens = cell.global_batch * (cell.seq_len // 2 if cfg.encdec
-                                      else cell.seq_len)
-        return 6.0 * act * tokens
-    if cell.kind == "prefill":
-        tokens = cell.global_batch * (cell.seq_len // 2 if cfg.encdec
-                                      else cell.seq_len)
-        return 2.0 * act * tokens
-    return 2.0 * act * cell.global_batch     # decode: one token per seq
-
-
-# ---------------------------------------------------------------------------
-# runner
-# ---------------------------------------------------------------------------
-
-
-def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             report_dir: str = REPORT_DIR) -> dict:
+def run_cell(arch: str, multi_pod: bool, report_dir: str = REPORT_DIR) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = int(np.prod(list(mesh.shape.values())))
     t0 = time.time()
     cfg = get_config(arch)
-    if cfg.family == "ising":
-        cell = ShapeCell("sample_chunk", 0, 0, "sample")
-        lowered, extras = lower_ising_cell(mesh, multi_pod)
-        mf = None
-    else:
-        cell = SHAPES[shape_name]
-        # ambient mesh scope so in-model shard_hint() constraints resolve
-        from repro.compat import set_mesh
-        with set_mesh(mesh):
-            lowered, extras = lower_lm_cell(cfg, cell, mesh)
-        mf = model_flops_estimate(cfg, cell)
+    if cfg.family != "ising":
+        raise ValueError(f"{arch!r} is not an ising config; the dry-run "
+                         "covers the p-bit production workload")
+    cell = ShapeCell("sample_chunk", 0, 0, "sample")
+    lowered, extras = lower_ising_cell(mesh, multi_pod)
     t_lower = time.time() - t0
     compiled = lowered.compile()
     t_compile = time.time() - t0 - t_lower
@@ -283,16 +67,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     for f in ("argument_size_in_bytes", "output_size_in_bytes",
               "temp_size_in_bytes", "alias_size_in_bytes"):
         memd[f] = getattr(mem, f, None)
-    # global model flops -> per-chip for the roofline terms
-    rep = roofline(compiled, chips,
-                   model_flops=(mf / chips if mf else None))
+    rep = roofline(compiled, chips, model_flops=None)
     rec = {
         "arch": arch, "shape": cell.name,
         "mesh": "multi_pod_2x16x16" if multi_pod else "single_pod_16x16",
         "chips": chips, "ok": True,
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
         "memory_analysis": memd, "extras": extras,
-        "roofline": rep.as_dict(), "model_flops_global": mf,
+        "roofline": rep.as_dict(), "model_flops_global": None,
     }
     os.makedirs(report_dir, exist_ok=True)
     fn = f"{arch}__{cell.name}__{rec['mesh']}.json"
@@ -304,54 +86,34 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 def all_cells():
     for arch, cfg in list_configs().items():
         if cfg.family == "ising":
-            yield arch, "sample_chunk"
-            continue
-        for cell in cfg.shapes():
-            yield arch, cell.name
+            yield arch
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
-    ap.add_argument("--shape")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true")
-    ap.add_argument("--subproc", action="store_true",
-                    help="one fresh process per cell (bounds compile-cache "
-                         "memory across the 68-cell matrix)")
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--report-dir", default=REPORT_DIR)
     args = ap.parse_args()
 
-    cells = list(all_cells()) if args.all else [(args.arch, args.shape)]
+    cells = list(all_cells()) if args.all else [args.arch]
     meshes = [False, True] if (args.all or args.both_meshes) \
         else [args.multi_pod]
     failures = 0
-    for arch, shape in cells:
+    for arch in cells:
         for mp in meshes:
             mesh_tag = "multi_pod_2x16x16" if mp else "single_pod_16x16"
-            tag = f"{arch:22s} {shape:14s} {'2x16x16' if mp else '16x16  '}"
+            tag = f"{arch:22s} sample_chunk   {'2x16x16' if mp else '16x16  '}"
             if args.skip_existing and os.path.exists(os.path.join(
-                    args.report_dir, f"{arch}__{shape}__{mesh_tag}.json")):
+                    args.report_dir,
+                    f"{arch}__sample_chunk__{mesh_tag}.json")):
                 print(f"SKIP {tag}")
                 continue
-            if args.subproc:
-                import subprocess, sys
-                cmd = [sys.executable, "-m", "repro.launch.dryrun",
-                       "--arch", arch, "--shape", shape,
-                       "--report-dir", args.report_dir]
-                if mp:
-                    cmd.append("--multi-pod")
-                r = subprocess.run(cmd, capture_output=True, text=True)
-                out = (r.stdout or "").strip().splitlines()
-                print(out[-1] if out else f"FAIL {tag} (no output)")
-                if r.returncode != 0:
-                    failures += 1
-                    print((r.stderr or "")[-2000:])
-                continue
             try:
-                rec = run_cell(arch, shape, mp, args.report_dir)
+                rec = run_cell(arch, mp, args.report_dir)
                 r = rec["roofline"]
                 print(f"OK   {tag} compile={rec['compile_s']:7.1f}s "
                       f"flops={r['flops']:.3e} wire={r['wire_bytes']:.3e} "

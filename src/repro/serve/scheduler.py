@@ -40,6 +40,7 @@ tenant's chains.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, List, Optional, Sequence, Tuple
 
 from repro.engines.base import MAX_LANE_WORDS, lanes_of
@@ -137,11 +138,13 @@ class ReplicaPackingScheduler:
         self.max_replicas_per_call = int(max_replicas_per_call)
         self.pack = bool(pack)
         self.pad_pow2 = bool(pad_pow2)
-        # counters (monotone; read via stats())
-        self.batches_formed = 0
-        self.jobs_batched = 0
-        self.jobs_packed = 0          # jobs that shared a batch with others
-        self.padding_replicas = 0     # throwaway pad chains executed
+        # counters (monotone; read via stats()) — the server's pump and
+        # stats threads hit these concurrently, so they get their own lock
+        self._lock = threading.Lock()
+        self.batches_formed = 0       # guarded_by: _lock
+        self.jobs_batched = 0         # guarded_by: _lock
+        self.jobs_packed = 0          # guarded_by: _lock
+        self.padding_replicas = 0     # guarded_by: _lock
         # optional obs.MetricsRegistry: executed pack widths and the
         # padding waste (throwaway replicas) per formed batch
         self._h_width = self._m_padding = None
@@ -222,21 +225,23 @@ class ReplicaPackingScheduler:
         b.relayout(self.pad_pow2 and lead.spec.engine in PACKABLE_ENGINES,
                    cap=self.max_replicas_per_call,
                    lanes=lanes_of(lead.spec.precision))
-        self.batches_formed += 1
-        self.jobs_batched += len(group)
-        if len(group) > 1:
-            self.jobs_packed += len(group)
         pad = b.r_exec - total
-        self.padding_replicas += pad
+        with self._lock:
+            self.batches_formed += 1
+            self.jobs_batched += len(group)
+            if len(group) > 1:
+                self.jobs_packed += len(group)
+            self.padding_replicas += pad
         if self._h_width is not None:
             self._h_width.observe(b.r_exec)
             self._m_padding.inc(pad)
         return b
 
     def stats(self) -> dict:
-        return {"max_replicas_per_call": self.max_replicas_per_call,
-                "pack": self.pack, "pad_pow2": self.pad_pow2,
-                "batches_formed": self.batches_formed,
-                "jobs_batched": self.jobs_batched,
-                "jobs_packed": self.jobs_packed,
-                "padding_replicas": self.padding_replicas}
+        with self._lock:
+            return {"max_replicas_per_call": self.max_replicas_per_call,
+                    "pack": self.pack, "pad_pow2": self.pad_pow2,
+                    "batches_formed": self.batches_formed,
+                    "jobs_batched": self.jobs_batched,
+                    "jobs_packed": self.jobs_packed,
+                    "padding_replicas": self.padding_replicas}

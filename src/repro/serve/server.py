@@ -226,16 +226,16 @@ class SampleServer:
             else float(chunk_timeout_s)
 
         self._lock = threading.RLock()
-        self._cv = threading.Condition(self._lock)
+        self._cv = threading.Condition(self._lock)  # lock_alias: _lock
         self._pump_lock = threading.Lock()
-        self._problems: Dict[str, _Problem] = {}
-        self._jobs: Dict[str, Job] = {}
-        self._queue: List[Job] = []
-        self._batches: List[Batch] = []
-        self._current: Optional[Batch] = None
-        self._next_seq = 0
-        self._group_seq = 0
-        self._bisect_left = self.max_bisect_calls
+        self._problems: Dict[str, _Problem] = {}    # guarded_by: _lock
+        self._jobs: Dict[str, Job] = {}             # guarded_by: _lock
+        self._queue: List[Job] = []                 # guarded_by: _lock
+        self._batches: List[Batch] = []             # guarded_by: _lock
+        self._current: Optional[Batch] = None       # guarded_by: _lock
+        self._next_seq = 0                          # guarded_by: _lock
+        self._group_seq = 0                         # guarded_by: _lock
+        self._bisect_left = self.max_bisect_calls   # guarded_by: _lock
         self._thread: Optional[threading.Thread] = None
         self._stop = False
         # register-time bit-plane prewarm threads (join to block on warmth)
@@ -419,7 +419,7 @@ class SampleServer:
 
     # -- queries ---------------------------------------------------------------
 
-    def _job(self, job_id: str) -> Job:
+    def _job(self, job_id: str) -> Job:  # lock_held: _lock
         try:
             return self._jobs[job_id]
         except KeyError:
@@ -572,14 +572,14 @@ class SampleServer:
         return (job.spec.deadline_s is not None
                 and now - job.submitted_at > job.spec.deadline_s)
 
-    def _expire_queued_deadlines(self, now: float):
+    def _expire_queued_deadlines(self, now: float):  # lock_held: _lock
         """Under the lock: fail queued jobs whose wall budget ran out
         while waiting (running jobs are checked between chunks)."""
         for j in [j for j in self._queue if self._expired(j, now)]:
             self._queue.remove(j)
             self._fail_deadline(j)
 
-    def _fail_deadline(self, job: Job):
+    def _fail_deadline(self, job: Job):  # lock_held: _lock
         """Under the lock: fail one job with a DeadlineExceeded error."""
         job.error = (f"DeadlineExceeded: {job.spec.deadline_s}s wall "
                      f"budget exhausted at {job.sweeps_done}/"
@@ -603,7 +603,7 @@ class SampleServer:
         vals = [v for v in vals if v is not None]
         return min(vals) if vals else None
 
-    def _choose_batch(self) -> Optional[Batch]:
+    def _choose_batch(self) -> Optional[Batch]:  # lock_held: _lock
         """Under the lock: highest-(priority, FIFO) among started batches
         and the would-be batch led by the best *eligible* queued job
         (jobs inside a retry-backoff window are invisible this step)."""
@@ -676,7 +676,11 @@ class SampleServer:
 
     def _start_batch(self, batch: Batch):
         lead = batch.jobs[0].spec
-        prob = self._problems[lead.problem]
+        # registry read under the lock — register_problem can run
+        # concurrently with the pump (the rest of batch start-up touches
+        # only the batch, which no other thread owns yet)
+        with self._lock:
+            prob = self._problems[lead.problem]
         key, builder = self._engine_key_builder(prob, lead, batch.r_exec)
         batch.pool_key = key
         handle, hit = self.pool.get(key, builder)
@@ -817,7 +821,7 @@ class SampleServer:
         batch.resume_ck = None
         return restored
 
-    def _harvest_degrade(self, batch: Batch):
+    def _harvest_degrade(self, batch: Batch):  # lock_held: _lock
         """Under the lock, at batch retirement: copy the mesh health
         monitor's report into every degraded tenant's ``degrade`` result
         field and roll its totals into the server counter families."""
@@ -1120,7 +1124,7 @@ class SampleServer:
                 self._current = None
             self._drop_spooled(batch)
 
-    def _finalize(self, job: Job, status: JobStatus):
+    def _finalize(self, job: Job, status: JobStatus):  # lock_held: _lock
         job.status = status
         job.finished_at = time.perf_counter()
         if job.resume_ck_digest is not None and self.spool is not None:
@@ -1286,7 +1290,7 @@ class SampleServer:
                 raise t.error
         return t
 
-    def _refresh_gauges(self) -> None:
+    def _refresh_gauges(self) -> None:  # lock_held: _lock
         """Under the lock: push instantaneous state into the gauges so a
         snapshot/exposition read is current."""
         self._g_queue.set(len(self._queue))

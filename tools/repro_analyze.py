@@ -1,0 +1,57 @@
+"""Contract auditor CLI — the repo's static-analysis gate.
+
+  python tools/repro_analyze.py                 # everything (ir+lint+deadcode)
+  python tools/repro_analyze.py ir              # jaxpr contract audit only
+  python tools/repro_analyze.py lint            # AST rules over src/ only
+  python tools/repro_analyze.py deadcode        # import-graph report only
+  python tools/repro_analyze.py bench-schema F  # BENCH_*.json schema gate
+  python tools/repro_analyze.py all --json out.json
+
+Exit code 0 iff every finding is waived in tools/analyze_waivers.txt
+(see DESIGN.md "Static analysis" for the rule catalogue and waiver
+semantics).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro_analyze",
+        description="IR contract audit + repo lint + dead-code gate")
+    ap.add_argument("section", nargs="?", default="all",
+                    choices=["all", "ir", "lint", "deadcode",
+                             "bench-schema"],
+                    help="which layer to run (default: all)")
+    ap.add_argument("bench_file", nargs="?", default=None,
+                    help="payload path for bench-schema")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="also write the findings as JSON")
+    ap.add_argument("--waivers", default=None,
+                    help="waiver file (default tools/analyze_waivers.txt)")
+    args = ap.parse_args(argv)
+
+    if args.section == "bench-schema":
+        # the pre-existing BENCH_*.json gate, absorbed as a subcommand
+        import check_bench_schema
+        return check_bench_schema.main(
+            ["check_bench_schema"]
+            + ([args.bench_file] if args.bench_file else []))
+
+    from repro.analyze.runner import run_all
+    sections = None if args.section == "all" else [args.section]
+    text, code = run_all(sections=sections, waiver_file=args.waivers,
+                         json_path=args.json_path)
+    print(text)
+    return code
+
+
+if __name__ == "__main__":
+    sys.exit(main())
